@@ -1,0 +1,63 @@
+"""Shared benchmark helpers: timing + TPU roofline projection.
+
+This container has no TPU: wall-clock numbers are CPU-measured (relative
+comparisons only); every benchmark also derives the TPU v5e roofline
+projection from the bytes/flops it moves, which is the number EXPERIMENTS.md
+reports against the paper's NIC-bound measurements.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+
+def time_it(fn, *args, warmup=2, iters=5):
+    """Median wall seconds for jit'd fn(*args)."""
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.tree.map(lambda a: a.block_until_ready()
+                     if hasattr(a, "block_until_ready") else a, out)
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.tree.map(lambda a: a.block_until_ready()
+                     if hasattr(a, "block_until_ready") else a, out)
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def time_loop(fn, state, *args, warmup=2, iters=6):
+    """Median wall seconds for state-carrying fn(state, *args) -> (state, ...)
+    chains (donation-safe: the carry threads through)."""
+    def next_state(out):
+        # NamedTuple (e.g. CollectorState) IS the state; plain tuple means
+        # (state, ...extras)
+        if isinstance(out, tuple) and not hasattr(out, "_fields"):
+            return out[0]
+        return out
+
+    for _ in range(warmup):
+        out = fn(state, *args)
+        state = next_state(out)
+        jax.tree.map(lambda a: a.block_until_ready()
+                     if hasattr(a, "block_until_ready") else a, out)
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(state, *args)
+        state = next_state(out)
+        jax.tree.map(lambda a: a.block_until_ready()
+                     if hasattr(a, "block_until_ready") else a, out)
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def csv(name: str, us: float, derived: str):
+    print(f"{name},{us:.2f},{derived}")

@@ -1,0 +1,49 @@
+"""Paper Fig 6/7: data-plane resource footprint, DTA vs DFA.
+
+On Tofino the costs are SRAM + stateful ALUs (DFA fills 9 of 12 stages with
+2^17 x 32-bit registers). The TPU analogue is HBM state per flow and VMEM
+tile footprint per kernel invocation. We report both absolute and
+relative-to-DTA (DTA keeps only an 8 B value per key — no Table-I
+registers, no history ring).
+"""
+from __future__ import annotations
+
+from benchmarks.common import csv
+from repro.configs import get_dfa_config
+from repro.core import protocol as P
+from repro.kernels.flow_moments.kernel import EVENT_BLOCK, REG_PAD
+
+
+def run():
+    cfg = get_dfa_config()          # full Tofino-scale config
+    F = cfg.flows_per_shard
+    # per-flow state (bytes)
+    dfa_regs = 7 * 4 + 4 + 4        # Table-I stats + last_ts + last_report
+    dfa_keys = 5 * 4 + 1            # stored five-tuple + active bit
+    dfa_ring = cfg.history * P.PAYLOAD_BYTES
+    dta_like = 8                    # DTA key-write: one 8 B slot
+    csv("fig6_per_flow_state_dfa_reporter", 0.0,
+        f"bytes={dfa_regs + dfa_keys};paper=9x32b_registers")
+    csv("fig6_per_flow_state_dfa_collector", 0.0,
+        f"bytes={dfa_ring};ring_entries={cfg.history}x{P.PAYLOAD_BYTES}B")
+    csv("fig6_per_flow_state_dta", 0.0, f"bytes={dta_like}")
+    csv("fig6_shard_totals", 0.0,
+        f"reporter_MB={(dfa_regs + dfa_keys) * F / 2**20:.1f};"
+        f"collector_MB={dfa_ring * F / 2**20:.1f};"
+        f"dta_MB={dta_like * F / 2**20:.1f};"
+        f"ratio_vs_dta={(dfa_regs + dfa_keys + dfa_ring) / dta_like:.1f}")
+    # kernel VMEM tiles (the "stage SRAM" analogue)
+    fm_tile = (cfg.flow_tile * REG_PAD * 4 + EVENT_BLOCK * (4 + 2 * 8 * 4))
+    rs_tile = cfg.flow_tile * cfg.history * P.PAYLOAD_BYTES
+    df_tile = cfg.flow_tile * (cfg.history * P.PAYLOAD_BYTES
+                               + cfg.derived_dim * 4)
+    csv("fig6_vmem_tile_flow_moments", 0.0, f"bytes={fm_tile}")
+    csv("fig6_vmem_tile_ring_scatter", 0.0, f"bytes={rs_tile}")
+    csv("fig6_vmem_tile_derived_features", 0.0, f"bytes={df_tile}")
+    csv("fig6_flows_per_pipeline", 0.0,
+        f"ours_per_shard={F};paper_per_pipeline={1 << 17};"
+        f"ours_512_shards={F * 512}")
+
+
+if __name__ == "__main__":
+    run()

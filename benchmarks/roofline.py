@@ -1,0 +1,44 @@
+"""§Roofline table: aggregates the dry-run artifacts into the per-cell
+three-term roofline report (reads experiments/dryrun/*.json)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import csv
+
+DRYRUN_DIR = os.environ.get("DRYRUN_DIR", "experiments/dryrun")
+
+
+def load_cells():
+    cells = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        with open(path) as f:
+            cells.append(json.load(f))
+    return cells
+
+
+def run():
+    cells = load_cells()
+    if not cells:
+        csv("roofline", 0.0, "no dry-run artifacts; run repro.launch.dryrun")
+        return
+    for c in cells:
+        tag = f"{c['arch']}|{c['shape']}|{'pod2' if c['multi_pod'] else 'pod1'}"
+        if c.get("skipped"):
+            csv(f"roofline_{tag}", 0.0, "SKIP=quadratic_500k")
+            continue
+        r = c["roofline"]
+        m = c["memory"]
+        csv(f"roofline_{tag}", r["step_time_lower_bound_s"] * 1e6,
+            f"compute_s={r['compute_s']:.4f};memory_s={r['memory_s']:.4f};"
+            f"collective_s={r['collective_s']:.4f};dom={r['dominant']};"
+            f"useful_ratio={r['useful_flops_ratio']:.3f};"
+            f"roofline_frac={r['roofline_fraction']:.4f};"
+            f"hbm_GiB={m['hbm_used_bytes']/2**30:.2f};"
+            f"fits={m['fits_hbm']}")
+
+
+if __name__ == "__main__":
+    run()

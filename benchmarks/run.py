@@ -1,0 +1,28 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV lines. CPU wall numbers are relative
+only; every benchmark derives the TPU v5e roofline projection used by
+EXPERIMENTS.md (this container has no TPU).
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (dfa_throughput, fig6_resources,
+                            fig8_message_rate, fig9_gdr_vs_staged,
+                            roofline, table1_logstar)
+    print("name,us_per_call,derived")
+    for mod in (fig6_resources, table1_logstar, fig8_message_rate,
+                fig9_gdr_vs_staged, dfa_throughput, roofline):
+        try:
+            mod.run()
+        except Exception as e:  # noqa: BLE001 — report and continue
+            print(f"{mod.__name__},nan,ERROR={type(e).__name__}:{e}")
+            traceback.print_exc()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,120 @@
+"""Train a flow classifier on DFA-enriched features (the paper's 'training
+new models on smaller intervals' future-work direction, §VI).
+
+    PYTHONPATH=src python examples/train_flow_classifier.py
+
+Generates two synthetic traffic classes, runs them through the full DFA
+pipeline, and trains a small MLP on the enriched feature vectors with the
+framework's own optimizer. Reports accuracy on held-out periods.
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_dfa_config
+from repro.configs.base import TrainConfig
+from repro.core.pipeline import DFASystem
+from repro.core.reporter import hash_slot
+from repro.optim import adamw
+from repro.optim.schedule import lr_at
+
+
+def collect_features(system, periods=6, n_flows=32, seed=0):
+    rng = np.random.default_rng(seed)
+    state = system.init_state()
+    cfg = system.cfg
+    step = jax.jit(system.dfa_step, donate_argnums=(0,))
+    X, y = [], []
+    keys = rng.integers(1, 2**31, (n_flows, 5)).astype(np.uint32)
+    lab = rng.integers(0, 2, n_flows)
+    slot2lab = {int(np.asarray(hash_slot(jnp.asarray(keys[i]),
+                                         cfg.flows_per_shard))): lab[i]
+                for i in range(n_flows)}
+    for period in range(periods):
+        evs = []
+        for i in range(n_flows):
+            cnt = 24 if lab[i] else 6
+            ts = np.sort(rng.integers(0, 20_000, cnt)) + period * 100_000
+            size = (rng.integers(1000, 1514, cnt) if lab[i]
+                    else rng.integers(40, 200, cnt))
+            evs.append((ts, size, np.tile(keys[i], (cnt, 1))))
+        ts = np.concatenate([e[0] for e in evs]).astype(np.uint32)
+        order = np.argsort(ts, kind="stable")
+        ev = {"ts": jnp.asarray(ts[order]),
+              "size": jnp.asarray(np.concatenate(
+                  [e[1] for e in evs]).astype(np.uint32)[order]),
+              "five_tuple": jnp.asarray(np.concatenate(
+                  [e[2] for e in evs]).astype(np.uint32)[order]),
+              "valid": jnp.ones(len(ts), bool)}
+        state, enriched, flow_ids, emask, _ = step(
+            state, ev, jnp.uint32((period + 1) * 100_000))
+        em = np.asarray(emask)
+        en = np.asarray(enriched)[em]
+        fid = np.asarray(flow_ids)[em]
+        for j in range(len(fid)):
+            sl = int(fid[j]) % cfg.flows_per_shard
+            if sl in slot2lab:
+                X.append(en[j])
+                y.append(slot2lab[sl])
+    return np.asarray(X, np.float32), np.asarray(y, np.int32)
+
+
+def main():
+    mesh = jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    cfg = get_dfa_config(reduced=True)
+    system = DFASystem(cfg, mesh)
+    with mesh:
+        X, y = collect_features(system)
+    X = np.log1p(np.abs(X))
+    X = (X - X.mean(0)) / (X.std(0) + 1e-6)
+    n = len(X)
+    tr = slice(0, int(n * 0.7))
+    te = slice(int(n * 0.7), n)
+    print(f"collected {n} enriched feature vectors "
+          f"({cfg.derived_dim}-dim) through the DFA pipeline")
+
+    tcfg = TrainConfig(learning_rate=3e-3, warmup_steps=5, total_steps=200,
+                      weight_decay=0.01)
+    key = jax.random.key(0)
+    k1, k2 = jax.random.split(key)
+    params = {"w1": 0.1 * jax.random.normal(k1, (cfg.derived_dim, 64)),
+              "b1": jnp.zeros(64),
+              "w2": 0.1 * jax.random.normal(k2, (64, 2)),
+              "b2": jnp.zeros(2)}
+    opt = adamw.init(params, tcfg)
+
+    def loss_fn(p, xb, yb):
+        h = jax.nn.relu(xb @ p["w1"] + p["b1"])
+        lg = h @ p["w2"] + p["b2"]
+        return -jnp.mean(jax.nn.log_softmax(lg)[jnp.arange(len(yb)), yb])
+
+    @jax.jit
+    def train_step(p, o, xb, yb):
+        l, g = jax.value_and_grad(loss_fn)(p, xb, yb)
+        p, o, _ = adamw.apply(p, g, o, tcfg, lr_at(o.step, tcfg))
+        return p, o, l
+
+    Xtr, ytr = jnp.asarray(X[tr]), jnp.asarray(y[tr])
+    for step in range(200):
+        params, opt, l = train_step(params, opt, Xtr, ytr)
+        if step % 50 == 0:
+            print(f"step {step:3d} loss {float(l):.4f}")
+
+    def acc(p, xb, yb):
+        h = jax.nn.relu(xb @ p["w1"] + p["b1"])
+        pred = jnp.argmax(h @ p["w2"] + p["b2"], -1)
+        return float((pred == yb).mean())
+
+    a = acc(params, jnp.asarray(X[te]), jnp.asarray(y[te]))
+    print(f"held-out accuracy: {a:.3f} (mice vs elephants from Table-I "
+          f"moment features)")
+    assert a > 0.85
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,36 @@
+"""End-to-end LM training driver: a few hundred steps of a reduced
+architecture with the full production substrate — fault-tolerant loop,
+async checkpointing, step-keyed data, straggler watchdog.
+
+    PYTHONPATH=src python examples/train_lm_e2e.py [--arch granite-3-2b]
+                                                   [--steps 200]
+
+(On a real TPU pod the same driver runs the full configs: swap
+make_local_mesh for make_production_mesh and drop --reduced.)
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+import argparse
+
+from repro.launch import train as TR
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite-3-2b")
+    ap.add_argument("--steps", type=int, default=200)
+    args = ap.parse_args()
+    losses = TR.main(["--arch", args.arch, "--reduced",
+                      "--steps", str(args.steps),
+                      "--batch", "8", "--seq", "128", "--lr", "3e-3",
+                      "--ckpt-dir", "/tmp/repro_example_ckpt",
+                      "--ckpt-every", "50", "--log-every", "20"])
+    drop = losses[0] - sum(losses[-10:]) / 10
+    print(f"loss dropped {drop:.3f} over {args.steps} steps "
+          f"(checkpoints in /tmp/repro_example_ckpt)")
+
+
+if __name__ == "__main__":
+    main()

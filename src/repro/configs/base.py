@@ -1,0 +1,195 @@
+"""Configuration dataclasses for the repro framework.
+
+Every assigned architecture is expressed as a ``ModelConfig``; sub-family
+options (MoE, MLA, SSM, hybrid schedule, encoder/decoder, modality stubs)
+are nested optional dataclasses so a single registry can instantiate all ten
+architectures plus reduced smoke variants.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    """Mixture-of-experts block configuration (GShard-style top-k routing)."""
+
+    num_experts: int
+    top_k: int
+    d_ff_expert: int                  # per-expert FFN hidden width
+    num_shared_experts: int = 0       # always-on experts (deepseek-v3 style)
+    d_ff_shared: int = 0              # hidden width of the shared expert(s)
+    capacity_factor: float = 1.25     # per-expert buffer slack for dispatch
+    router_dtype: str = "float32"
+    # Layers [0, first_moe_layer) use a dense FFN of width ``d_ff_dense``.
+    first_moe_layer: int = 0
+    d_ff_dense: int = 0
+    # deepseek-v3 routing details
+    routed_scaling_factor: float = 1.0
+    score_func: str = "softmax"       # "softmax" | "sigmoid" (deepseek-v3)
+    moe_every: int = 1                # MoE FFN every k-th layer (llama4: 1)
+
+
+@dataclass(frozen=True)
+class MLAConfig:
+    """Multi-head Latent Attention (deepseek-v3)."""
+
+    q_lora_rank: int = 1536
+    kv_lora_rank: int = 512
+    qk_nope_head_dim: int = 128
+    qk_rope_head_dim: int = 64
+    v_head_dim: int = 128
+
+
+@dataclass(frozen=True)
+class SSMConfig:
+    """Mamba2/SSD block configuration (zamba2) or RWKV6 time-mix options."""
+
+    state_dim: int = 64               # N — SSM state size per head
+    head_dim: int = 64                # P — channels per head
+    expand: int = 2                   # d_inner = expand * d_model
+    conv_width: int = 4               # causal conv1d kernel size
+    chunk_size: int = 128             # SSD chunked-scan block length
+    n_groups: int = 1                 # B/C groups (mamba2)
+
+
+@dataclass(frozen=True)
+class HybridConfig:
+    """Hybrid block schedule (zamba2: Mamba2 trunk + shared attention)."""
+
+    attn_every: int = 6               # full attention block every k layers
+    shared_attn: bool = True          # attention blocks share one weight set
+    num_shared_blocks: int = 2        # zamba2 has 2 alternating shared blocks
+
+
+@dataclass(frozen=True)
+class EncDecConfig:
+    """Encoder-decoder split (whisper). The conv frontend is a STUB: the
+    data pipeline / input_specs provide precomputed frame embeddings."""
+
+    num_encoder_layers: int = 4
+    num_frames: int = 1500            # whisper 30 s @ 50 Hz after conv stride 2
+
+
+@dataclass(frozen=True)
+class VisionStubConfig:
+    """VLM frontend stub (llava-next). input_specs provide precomputed patch
+    embeddings already projected to d_model; anyres tiling is upstream."""
+
+    num_patches: int = 2880           # anyres 5 tiles x 576 patches
+    patch_embed_dim: int = 0          # 0 => already projected to d_model
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """A single architecture. Families:
+
+    dense   — decoder-only transformer (GQA/MQA/MHA)
+    moe     — decoder-only with MoE FFN (optionally MLA attention)
+    hybrid  — Mamba2 trunk with interleaved (shared) attention blocks
+    ssm     — attention-free (rwkv6)
+    encdec  — encoder-decoder (whisper)
+    vlm     — decoder-only with vision-prefix stub (llava-next)
+    """
+
+    name: str
+    family: str
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0                 # 0 => d_model // num_heads
+    qkv_bias: bool = False
+    qk_norm: bool = False
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = False
+    act: str = "silu"                 # FFN activation (gated)
+    moe: Optional[MoEConfig] = None
+    mla: Optional[MLAConfig] = None
+    ssm: Optional[SSMConfig] = None
+    hybrid: Optional[HybridConfig] = None
+    encdec: Optional[EncDecConfig] = None
+    vision: Optional[VisionStubConfig] = None
+    mtp_depth: int = 0                # multi-token-prediction heads (deepseek)
+    # numerics / memory policy
+    dtype: str = "bfloat16"           # activation/param compute dtype
+    param_dtype: str = "bfloat16"
+    opt_state_dtype: str = "float32"  # bf16 for XXL models to fit HBM
+    remat: str = "full"               # "none" | "full" — scan remat policy
+    loss_chunk: int = 2048            # sequence chunk for CE loss (memory)
+    attn_chunk: int = 1024            # KV chunk for online-softmax attention
+    # provenance
+    source: str = ""
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim if self.head_dim else self.d_model // self.num_heads
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+
+@dataclass(frozen=True)
+class DFAConfig:
+    """The paper's own system configuration (Table I / Figs 2, 4).
+
+    Defaults mirror the Tofino deployment: 2^17 flows per pipeline shard,
+    10-entry history ring, 64 B RoCEv2 payload (45 B Marina vector + pad),
+    20 ms monitoring period target.
+    """
+
+    flows_per_shard: int = 1 << 17        # 131,072 — classification table size
+    history: int = 10                      # Fig 4 ring depth
+    payload_words: int = 16                # 64 B / 4 B words (RoCEv2 pow-2 pad)
+    feature_words: int = 8                 # 8 x 4 B Table-I statistics
+    monitoring_period_us: int = 20_000     # 20 ms target interval
+    logstar_bits: int = 7                  # mantissa bits kept by the log* LUT
+    counter_bits: int = 8                  # per-flow history counter (paper: 8b)
+    seq_check: bool = True                 # per-reporter sequence ids (sec VI-B)
+    event_block: int = 1024                # packet events per extraction block
+    report_capacity: int = 4096            # max reports routed per step/shard
+    derived_dim: int = 96                  # Marina-style derived feature count
+    flow_tile: int = 512                   # kernel flow-block tile
+    def total_flows(self, shards: int) -> int:
+        return self.flows_per_shard * shards
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    """Training-driver configuration."""
+
+    learning_rate: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 1000
+    weight_decay: float = 0.1
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    grad_clip: float = 1.0
+    grad_accum: int = 1
+    seed: int = 0
+    # fault tolerance
+    checkpoint_dir: str = "/tmp/repro_ckpt"
+    checkpoint_every: int = 50
+    keep_checkpoints: int = 3
+    async_checkpoint: bool = True
+    # distributed optimization
+    grad_compression: str = "none"    # "none" | "int8_ef"
+    donate_state: bool = True
+
+
+@dataclass(frozen=True)
+class MeshConfig:
+    """Logical mesh description; the production meshes are fixed."""
+
+    shape: Tuple[int, ...] = (16, 16)
+    axes: Tuple[str, ...] = ("data", "model")
+
+    @property
+    def multi_pod(self) -> bool:
+        return "pod" in self.axes

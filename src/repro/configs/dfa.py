@@ -1,0 +1,22 @@
+"""The paper's own DFA system configuration (defaults = Tofino deployment).
+
+PAPER      — faithful Tofino-scale config: 2^17 flows/shard, 10-entry ring,
+             64 B payload, 20 ms monitoring period.
+REDUCED    — CPU-testable miniature with the same structure.
+"""
+from repro.configs.base import DFAConfig
+
+PAPER = DFAConfig()
+
+REDUCED = DFAConfig(
+    flows_per_shard=256,
+    history=10,
+    payload_words=16,
+    feature_words=8,
+    monitoring_period_us=20_000,
+    logstar_bits=7,
+    event_block=128,
+    report_capacity=128,
+    derived_dim=96,
+    flow_tile=64,
+)

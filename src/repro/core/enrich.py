@@ -1,0 +1,94 @@
+"""Feature enrichment — the collector's CUDA-kernel stage, on TPU (§III-C).
+
+Marina derives ~100 statistical features from the moment sums before
+inference; DFA moves that onto accelerator compute ("build derived features
+on CUDA cores"). From the seven Table-I registers per history entry we
+derive, per entry: means, variances, std-devs, coefficients of variation and
+skewness for IAT and PS, volume and rate terms; plus cross-history deltas
+and window aggregates — ``derived_dim`` (default 96) float32 features per
+flow. The hot loop is the derived_features Pallas kernel; this module is
+the jnp reference and the feature definitions (shared by both).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import DFAConfig
+from repro.core import protocol as PROTO
+
+EPS = 1e-6
+PER_ENTRY = 18            # features derived per history entry
+
+
+def entry_features(stats_u32: jax.Array) -> jax.Array:
+    """(…, 7) u32 Table-I registers -> (…, PER_ENTRY) f32 derived features.
+
+    Moment identities: mean = S1/n, var = S2/n - mean², skew via S3
+    (all on the log*-approximated sums, like Marina's CPU stage).
+    """
+    s = stats_u32.astype(jnp.float32)
+    n = jnp.maximum(s[..., 0], 1.0)
+    iat1, iat2, iat3 = s[..., 1], s[..., 2], s[..., 3]
+    ps1, ps2, ps3 = s[..., 4], s[..., 5], s[..., 6]
+
+    def moments(s1, s2, s3):
+        mean = s1 / n
+        var = jnp.maximum(s2 / n - mean ** 2, 0.0)
+        std = jnp.sqrt(var)
+        cov = std / jnp.maximum(mean, EPS)
+        m3 = s3 / n - 3 * mean * var - mean ** 3
+        skew = m3 / jnp.maximum(std ** 3, EPS)
+        return mean, var, std, cov, skew
+
+    i_mean, i_var, i_std, i_cov, i_skew = moments(iat1, iat2, iat3)
+    p_mean, p_var, p_std, p_cov, p_skew = moments(ps1, ps2, ps3)
+    duration = jnp.maximum(iat1, 1.0)                    # µs total
+    volume = ps1                                         # bytes
+    rate_bps = volume * 8.0 / (duration / 1e6 + EPS)
+    pps = n / (duration / 1e6 + EPS)
+    return jnp.stack([
+        n, i_mean, i_var, i_std, i_cov, i_skew,
+        p_mean, p_var, p_std, p_cov, p_skew,
+        volume, rate_bps, pps, duration,
+        jnp.log1p(volume), jnp.log1p(rate_bps), jnp.log1p(n),
+    ], axis=-1)
+
+
+def derive_ref(memory_entries: jax.Array, entry_valid: jax.Array,
+               cfg: DFAConfig) -> jax.Array:
+    """(F, H, 16) u32 + (F, H) -> (F, derived_dim) f32 — jnp oracle.
+
+    Layout: newest entry's PER_ENTRY | window mean/std over history of
+    [n, iat_mean, ps_mean, rate] | deltas newest-vs-window | zero pad.
+    """
+    F, H, W = memory_entries.shape
+    stats = memory_entries[..., PROTO.STATS_SLICE].astype(jnp.uint32)
+    hist_idx = (memory_entries[..., PROTO.META_WORD] & 0xFF).astype(
+        jnp.int32)
+    feats = entry_features(stats)                        # (F, H, PER_ENTRY)
+    vmask = entry_valid.astype(jnp.float32)[..., None]
+    feats = feats * vmask
+    nvalid = jnp.maximum(entry_valid.sum(-1, keepdims=True), 1
+                         ).astype(jnp.float32)
+    # newest = entry with the largest packet count x recency proxy:
+    # ring order isn't timestamped; use hist slot of the latest write =
+    # argmax over valid entries of packet count (monotone within a flow)
+    count = jnp.where(entry_valid, stats[..., 0], 0)
+    newest = jnp.argmax(count, axis=-1)                  # (F,)
+    newest_f = jnp.take_along_axis(
+        feats, newest[:, None, None].repeat(PER_ENTRY, -1), axis=1)[:, 0]
+    mean_w = feats.sum(1) / nvalid
+    var_w = jnp.maximum((feats ** 2).sum(1) / nvalid - mean_w ** 2, 0.0)
+    std_w = jnp.sqrt(var_w)
+    delta = newest_f - mean_w
+    maxhist = jnp.max(jnp.where(entry_valid, hist_idx.astype(jnp.float32),
+                                0.0), axis=-1, keepdims=True)
+    out = jnp.concatenate([newest_f, mean_w, std_w, delta, nvalid,
+                           maxhist], axis=-1)
+    D = out.shape[-1]
+    if D < cfg.derived_dim:
+        out = jnp.pad(out, ((0, 0), (0, cfg.derived_dim - D)))
+    return out[:, :cfg.derived_dim]

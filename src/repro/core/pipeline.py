@@ -1,0 +1,186 @@
+"""End-to-end distributed DFA pipeline (Fig 1) as one SPMD step.
+
+Every device is simultaneously one Reporter shard and one Collector shard
+(+ its translator): the flow space is range-sharded over the *entire* mesh
+(512 shards × 2^17 flows = 67M flows at production scale — the paper's
+4-pipeline Tofino supports 524,288). One ``dfa_step``:
+
+  local packet events ──ingest──> per-flow Table-I registers
+  due flows ──clone/truncate──> DTA reports (fixed capacity)
+  reports ──all_to_all over ("pod","data","model")──> owner shards
+           (the ICI takes RoCEv2's place; addresses computed by the
+            owner-side translator exactly as §III-B)
+  payloads ──ring placement──> (F, 10, 16-word) collector memory (Fig 4)
+  received flows ──enrichment──> derived feature vectors -> inference
+
+The step is jit-compatible, state is donated (in-place ring updates — the
+GDR analogue), and every stage has a fixed SPMD shape.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import DFAConfig
+from repro.core import collector as COLL
+from repro.core import enrich as ENR
+from repro.core import protocol as PROTO
+from repro.core import reporter as REP
+from repro.core import translator as TRANS
+
+Tree = Any
+
+
+class DFAState(NamedTuple):
+    reporter: REP.ReporterState
+    translator: TRANS.TranslatorState
+    collector: COLL.CollectorState
+
+
+class DFASystem:
+    """Facade: builds sharded state + the jit-able distributed step."""
+
+    def __init__(self, cfg: DFAConfig, mesh: Mesh):
+        self.cfg = cfg
+        self.mesh = mesh
+        self.axes = tuple(mesh.axis_names)
+        self.n_shards = int(math.prod(mesh.devices.shape))
+
+    # -- state ------------------------------------------------------------
+    def init_state(self) -> DFAState:
+        """Global state arrays (leading dim = n_shards * per-shard size)."""
+        n = self.n_shards
+
+        def rep_tile(make):
+            st = make(self.cfg)
+            return jax.tree.map(
+                lambda a: jnp.tile(a[None], (n,) + (1,) * a.ndim).reshape(
+                    (n * a.shape[0],) + a.shape[1:]) if a.ndim >= 1 else
+                jnp.tile(a[None], (n,)), st)
+
+        return DFAState(rep_tile(REP.init_state),
+                        rep_tile(TRANS.init_state),
+                        rep_tile(COLL.init_state))
+
+    def state_specs(self) -> DFAState:
+        """PartitionSpecs: every leading dim sharded over the whole mesh."""
+        ax = self.axes
+
+        def spec(a):
+            return P(ax, *([None] * (a.ndim - 1))) if a.ndim >= 1 else P()
+
+        # build from abstract eval to avoid allocating:
+        st = jax.eval_shape(self.init_state)
+        return jax.tree.map(spec, st)
+
+    def state_shardings(self) -> DFAState:
+        return jax.tree.map(lambda s: NamedSharding(self.mesh, s),
+                            self.state_specs())
+
+    # -- the step ---------------------------------------------------------
+    def dfa_step(self, state: DFAState, events: Dict[str, jax.Array],
+                 now: jax.Array):
+        """events (global): ts/size (n_shards*E,), five_tuple (…,5),
+        valid (…,). Returns (state', enriched, flow_ids, emask, metrics)."""
+        cfg = self.cfg
+        n = self.n_shards
+        cap_out = max(1, cfg.report_capacity // n)
+        ax = self.axes
+
+        def local(rep_st, tr_st, coll_st, ev_ts, ev_sz, ev_tu, ev_va, now_):
+            shard = jnp.zeros((), jnp.int32)
+            for a in ax:
+                shard = shard * jax.lax.axis_size(a) + jax.lax.axis_index(a)
+            flow_base = shard * cfg.flows_per_shard
+            # 1. reporter ingest
+            rep_st = REP.ingest(rep_st, {"ts": ev_ts, "size": ev_sz,
+                                         "five_tuple": ev_tu,
+                                         "valid": ev_va}, cfg)
+            # 2. due flows -> DTA reports
+            slots, mask = REP.due_flows(rep_st, now_, cfg,
+                                        cfg.report_capacity)
+            rep_st, reports = REP.make_reports(
+                rep_st, slots, mask, now_, 0, flow_base, cfg)
+            # reporter id = shard (mod 256, the 8-bit id space)
+            rid = (shard % COLL.N_REPORTERS).astype(jnp.uint32)
+            reports = reports.at[:, 1].set(
+                jnp.where(mask, (rid << 24) | (reports[:, 1] & 0x00FFFFFF),
+                          0))
+            # 3. route to owner shards (fixed-capacity buckets + all_to_all)
+            buckets, bmask = TRANS.route_reports(
+                reports, mask, n, cfg.flows_per_shard, cap_out)
+            routed = jax.lax.all_to_all(buckets, ax, 0, 0, tiled=True)
+            rmask = jax.lax.all_to_all(
+                bmask.astype(jnp.uint32), ax, 0, 0,
+                tiled=True).astype(bool)
+            dropped = jnp.sum(mask) - jnp.sum(bmask)
+            routed = routed.reshape(n * cap_out, PROTO.REPORT_WORDS)
+            rmask = rmask.reshape(n * cap_out)
+            # 4. owner-side translator: history addresses + RoCEv2 payloads
+            tr_st, payloads, coords = TRANS.translate(
+                tr_st, routed, rmask, flow_base, cfg)
+            # 5. collector ring placement + integrity checks
+            coll_st = COLL.ingest(coll_st, payloads, rmask, flow_base, cfg)
+            # 6. enrichment of received flows
+            lf = jnp.clip(coords["local_flow"], 0, cfg.flows_per_shard - 1)
+            entries, ev_valid = COLL.gather_flow_history(coll_st, lf)
+            enriched = ENR.derive_ref(entries, ev_valid, cfg)
+            enriched = jnp.where(rmask[:, None], enriched, 0.0)
+            flow_ids = jnp.where(rmask, routed[:, 0],
+                                 jnp.uint32(0xFFFFFFFF))
+            metrics = {
+                "reports_sent": jax.lax.psum(jnp.sum(mask), ax),
+                "reports_recv": jax.lax.psum(jnp.sum(rmask), ax),
+                "bucket_drops": jax.lax.psum(jnp.sum(dropped), ax),
+                "collisions": jax.lax.psum(jnp.sum(rep_st.collisions), ax),
+                "bad_checksum": jax.lax.psum(jnp.sum(coll_st.bad_checksum),
+                                             ax),
+                "seq_anomalies": jax.lax.psum(
+                    jnp.sum(coll_st.seq_anomalies), ax),
+            }
+            return (rep_st, tr_st, coll_st, enriched, flow_ids, rmask,
+                    metrics)
+
+        specs = self.state_specs()
+        ev_specs = (P(ax), P(ax), P(ax, None), P(ax))
+        out_state_specs = (specs.reporter, specs.translator, specs.collector)
+        fn = jax.shard_map(
+            local, mesh=self.mesh,
+            in_specs=(specs.reporter, specs.translator, specs.collector)
+            + ev_specs + (P(),),
+            out_specs=out_state_specs
+            + (P(ax, None), P(ax), P(ax),
+               jax.tree.map(lambda _: P(), {
+                   "reports_sent": 0, "reports_recv": 0, "bucket_drops": 0,
+                   "collisions": 0, "bad_checksum": 0, "seq_anomalies": 0})),
+            check_vma=False)
+        rep_st, tr_st, coll_st, enriched, flow_ids, rmask, metrics = fn(
+            state.reporter, state.translator, state.collector,
+            events["ts"], events["size"], events["five_tuple"],
+            events["valid"], now)
+        return (DFAState(rep_st, tr_st, coll_st), enriched, flow_ids,
+                rmask, metrics)
+
+    # -- convenience ------------------------------------------------------
+    def jit_step(self, donate: bool = True):
+        return jax.jit(self.dfa_step,
+                       donate_argnums=(0,) if donate else ())
+
+    def event_specs(self, events_per_shard: int):
+        """ShapeDtypeStructs + shardings for the global event batch."""
+        n = self.n_shards * events_per_shard
+        sds = {
+            "ts": jax.ShapeDtypeStruct((n,), jnp.uint32),
+            "size": jax.ShapeDtypeStruct((n,), jnp.uint32),
+            "five_tuple": jax.ShapeDtypeStruct((n, 5), jnp.uint32),
+            "valid": jax.ShapeDtypeStruct((n,), jnp.bool_),
+        }
+        ax = self.axes
+        specs = {"ts": P(ax), "size": P(ax), "five_tuple": P(ax, None),
+                 "valid": P(ax)}
+        return sds, specs

@@ -1,0 +1,121 @@
+"""Bit-faithful DFA wire formats (paper Figs 2 and 4).
+
+Everything is expressed as little-endian u32 words:
+
+DTA report (reporter -> translator), the Key-Write derivative:
+  word 0      flow_id
+  word 1      (reporter_id << 24) | (seq << 16) | flags      [sec VI-B seq ids]
+  words 2-8   the SEVEN Table-I data fields:
+              pkt_count, sum_iat, sum_iat2, sum_iat3, sum_ps, sum_ps2, sum_ps3
+  words 9-13  five-tuple: src_ip, dst_ip, (sport<<16|dport), proto, pad
+  -> 14 words = 56 B on the wire (45 B payload + base header, word aligned)
+
+RoCEv2 WRITE payload (translator -> collector), padded to a power of two:
+  word 0      flow_id
+  words 1-7   seven data fields
+  words 8-12  five-tuple
+  word 13     (reporter_id << 24) | (seq << 16) | hist_idx
+  word 14     checksum (xor-fold of words 0-13)
+  word 15     pad (zero)
+  -> 16 words = 64 B exactly (the paper's RoCEv2 pow-2 payload)
+
+Collector memory entry (Fig 4) uses the same 16-word layout, so a report is
+placed into GPU/HBM memory VERBATIM — the zero-copy property DFA gets from
+RDMA is preserved as a layout guarantee here.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+REPORT_WORDS = 14        # DTA report
+PAYLOAD_WORDS = 16       # RoCEv2 / collector entry (64 B)
+N_STATS = 7              # Table-I exported fields
+STATS_SLICE = slice(1, 8)        # in the RoCEv2 payload
+TUPLE_SLICE = slice(8, 13)
+META_WORD = 13
+CSUM_WORD = 14
+
+FIVE_TUPLE_BYTES = 17    # 4+4+2+2+1 (paper)
+MARINA_VECTOR_BYTES = 45  # 7*4 + 17 (paper: "full feature vector requires 45B")
+PAYLOAD_BYTES = PAYLOAD_WORDS * 4
+
+
+def xor_checksum(words: jax.Array) -> jax.Array:
+    """xor-fold over the leading words; words: (..., W) u32 -> (...,) u32."""
+    return jax.lax.reduce(words.astype(jnp.uint32), jnp.uint32(0),
+                          jax.lax.bitwise_xor, (words.ndim - 1,))
+
+
+def pack_dta_report(flow_id, reporter_id, seq, stats, five_tuple
+                    ) -> jax.Array:
+    """-> (..., REPORT_WORDS) u32.
+
+    stats: (..., 7) u32; five_tuple: (..., 5) u32 (ip, ip, ports, proto, 0).
+    """
+    meta = ((reporter_id.astype(jnp.uint32) << 24)
+            | ((seq.astype(jnp.uint32) & 0xFF) << 16))
+    return jnp.concatenate([
+        flow_id[..., None].astype(jnp.uint32),
+        meta[..., None],
+        stats.astype(jnp.uint32),
+        five_tuple.astype(jnp.uint32),
+    ], axis=-1)
+
+
+def unpack_dta_report(r: jax.Array) -> Dict[str, jax.Array]:
+    return {
+        "flow_id": r[..., 0],
+        "reporter_id": r[..., 1] >> 24,
+        "seq": (r[..., 1] >> 16) & 0xFF,
+        "stats": r[..., 2:9],
+        "five_tuple": r[..., 9:14],
+    }
+
+
+def pack_rocev2_payload(rep: Dict[str, jax.Array], hist_idx: jax.Array
+                        ) -> jax.Array:
+    """Translator: DTA report fields + history index -> 64 B payload."""
+    meta = ((rep["reporter_id"].astype(jnp.uint32) << 24)
+            | ((rep["seq"].astype(jnp.uint32) & 0xFF) << 16)
+            | (hist_idx.astype(jnp.uint32) & 0xFF))
+    body = jnp.concatenate([
+        rep["flow_id"][..., None].astype(jnp.uint32),
+        rep["stats"].astype(jnp.uint32),
+        rep["five_tuple"].astype(jnp.uint32),
+        meta[..., None],
+    ], axis=-1)                                            # 14 words
+    csum = xor_checksum(body)
+    pad = jnp.zeros_like(csum)
+    return jnp.concatenate([body, csum[..., None], pad[..., None]], axis=-1)
+
+
+def unpack_payload(p: jax.Array) -> Dict[str, jax.Array]:
+    return {
+        "flow_id": p[..., 0],
+        "stats": p[..., STATS_SLICE],
+        "five_tuple": p[..., TUPLE_SLICE],
+        "reporter_id": p[..., META_WORD] >> 24,
+        "seq": (p[..., META_WORD] >> 16) & 0xFF,
+        "hist_idx": p[..., META_WORD] & 0xFF,
+        "checksum": p[..., CSUM_WORD],
+    }
+
+
+def payload_valid(p: jax.Array) -> jax.Array:
+    """Collector-side integrity check (Fig 4 checksum)."""
+    return xor_checksum(p[..., :CSUM_WORD]) == p[..., CSUM_WORD]
+
+
+def pack_five_tuple(src_ip, dst_ip, sport, dport, proto) -> jax.Array:
+    """-> (..., 5) u32 — 17 B of identity, word-aligned like the collector."""
+    return jnp.stack([
+        src_ip.astype(jnp.uint32),
+        dst_ip.astype(jnp.uint32),
+        ((sport.astype(jnp.uint32) & 0xFFFF) << 16)
+        | (dport.astype(jnp.uint32) & 0xFFFF),
+        proto.astype(jnp.uint32) & 0xFF,
+        jnp.zeros_like(src_ip, jnp.uint32),
+    ], axis=-1)

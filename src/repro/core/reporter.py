@@ -1,0 +1,208 @@
+"""DFA Reporter — line-rate per-flow feature extraction (paper §III-A/IV-A).
+
+State mirrors the Tofino register layout (Fig 7): per flow-slot, eight 32-bit
+stateful registers (Table I) plus the report-interval tracking register. The
+Marina classification table (five-tuple -> flow id) is adapted to a
+device-resident hash-slot table with stored-key collision detection: the
+paper's control-plane digest path (<1k flow-mods/s, its acknowledged
+bottleneck) is replaced by in-path admission — see DESIGN.md §11(3).
+
+Packet events arrive as time-sorted arrays; IAT resolution uses the stored
+last-timestamp register, with in-block predecessors resolved by a stable
+sort per slot (the vectorized equivalent of sequential packet processing).
+Moment accumulation — the hot spot — is delegated to the flow_moments
+kernel (Pallas on TPU, jnp oracle elsewhere).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import DFAConfig
+from repro.core import logstar as LS
+from repro.core import protocol as PROTO
+
+Tree = Any
+
+# register columns (Table I order)
+COL_COUNT, COL_IAT, COL_IAT2, COL_IAT3, COL_PS, COL_PS2, COL_PS3 = range(7)
+N_REG = 7
+
+
+class ReporterState(NamedTuple):
+    regs: jax.Array        # (F, 7) u32 — Table-I stat registers
+    last_ts: jax.Array     # (F,) u32 — last packet timestamp (us)
+    last_report: jax.Array  # (F,) u32 — report-interval tracking register
+    keys: jax.Array        # (F, 5) u32 — stored five-tuple (admission)
+    active: jax.Array      # (F,) bool — slot occupied
+    seq: jax.Array         # () u32 — per-reporter sequence counter (VI-B)
+    collisions: jax.Array  # () u32 — hash-collision telemetry
+
+
+def init_state(cfg: DFAConfig) -> ReporterState:
+    F = cfg.flows_per_shard
+    return ReporterState(
+        regs=jnp.zeros((F, N_REG), jnp.uint32),
+        last_ts=jnp.zeros((F,), jnp.uint32),
+        last_report=jnp.zeros((F,), jnp.uint32),
+        keys=jnp.zeros((F, 5), jnp.uint32),
+        active=jnp.zeros((F,), bool),
+        seq=jnp.zeros((), jnp.uint32),
+        collisions=jnp.zeros((), jnp.uint32),
+    )
+
+
+def hash_slot(five_tuple: jax.Array, n_slots: int) -> jax.Array:
+    """FNV-1a style hash of the 5 identity words -> slot index."""
+    h = jnp.full(five_tuple.shape[:-1], 0x811C9DC5, jnp.uint32)
+    for i in range(5):
+        h = (h ^ five_tuple[..., i].astype(jnp.uint32)) * jnp.uint32(
+            0x01000193)
+    return (h % jnp.uint32(n_slots)).astype(jnp.int32)
+
+
+def event_deltas(iat: jax.Array, ps: jax.Array, first: jax.Array,
+                 valid: jax.Array, bits: int) -> jax.Array:
+    """Per-event Table-I register deltas (E, 7) u32 via the log* pipeline.
+
+    IAT terms are zero for a flow's first packet (no predecessor)."""
+    iat = jnp.where(first, jnp.uint32(0), iat.astype(jnp.uint32))
+    ps = ps.astype(jnp.uint32)
+    z = jnp.uint32(0)
+    d = jnp.stack([
+        jnp.ones_like(ps),                       # packet count
+        iat,                                     # sum IAT (exact, like P4)
+        LS.approx_pow(iat, 2, bits),             # sum IAT^2 (log* approx)
+        LS.approx_pow(iat, 3, bits),             # sum IAT^3
+        ps,                                      # sum PS
+        LS.approx_pow(ps, 2, bits),              # sum PS^2
+        LS.approx_pow(ps, 3, bits),              # sum PS^3
+    ], axis=-1)
+    return jnp.where(valid[..., None], d, z)
+
+
+def resolve_iat(slots: jax.Array, ts: jax.Array, valid: jax.Array,
+                last_ts: jax.Array, active: jax.Array
+                ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Per-event (iat, first_flag, new_last_ts).
+
+    Events are time-sorted; a stable sort by slot makes each event's
+    predecessor either the previous in-block event of the same slot or the
+    register value.
+    """
+    E = slots.shape[0]
+    F = last_ts.shape[0]
+    safe_slots = jnp.where(valid, slots, F)      # invalid -> sentinel bucket
+    order = jnp.argsort(safe_slots, stable=True)
+    s_slot = safe_slots[order]
+    s_ts = ts[order]
+    prev_same = jnp.concatenate(
+        [jnp.array([False]), s_slot[1:] == s_slot[:-1]])
+    reg_last = jnp.where(s_slot < F, last_ts[jnp.clip(s_slot, 0, F - 1)], 0)
+    reg_active = jnp.where(s_slot < F,
+                           active[jnp.clip(s_slot, 0, F - 1)], False)
+    prev_ts = jnp.where(prev_same,
+                        jnp.concatenate([jnp.zeros((1,), s_ts.dtype),
+                                         s_ts[:-1]]), reg_last)
+    first = jnp.where(prev_same, False, ~reg_active)
+    iat_sorted = (s_ts - prev_ts).astype(jnp.uint32)
+    inv = jnp.argsort(order)                      # unsort
+    iat = iat_sorted[inv]
+    first_flags = first[inv]
+    # new last_ts per slot = max event ts per slot (events time-sorted)
+    new_last = last_ts.at[jnp.where(valid, slots, F)].max(
+        ts.astype(jnp.uint32), mode="drop")
+    return iat, first_flags, new_last
+
+
+def admit(state: ReporterState, slots: jax.Array, five_tuple: jax.Array,
+          valid: jax.Array) -> Tuple[ReporterState, jax.Array]:
+    """Hash-slot admission with stored-key collision detection.
+
+    A valid event either (a) matches the stored key (tracked flow),
+    (b) lands in an empty slot (new flow — install key), or (c) collides —
+    counted in telemetry and the event attributed to the resident flow
+    (paper: no explicit mechanism for such flows either, §IV-A).
+    """
+    F = state.keys.shape[0]
+    cl = jnp.clip(slots, 0, F - 1)
+    stored = state.keys[cl]                       # (E, 5)
+    empty = ~state.active[cl]
+    match = jnp.all(stored == five_tuple, axis=-1) & ~empty
+    collide = valid & ~match & ~empty
+    install = valid & empty
+    # first-come key install; out-of-range sentinel rows are dropped
+    tgt = jnp.where(install, slots, F)
+    keys = state.keys.at[tgt].set(five_tuple, mode="drop")
+    active = state.active.at[tgt].set(True, mode="drop")
+    collisions = state.collisions + jnp.sum(collide).astype(jnp.uint32)
+    return state._replace(keys=keys, active=active,
+                          collisions=collisions), valid
+
+
+def accumulate_ref(regs: jax.Array, slots: jax.Array, deltas: jax.Array,
+                   valid: jax.Array) -> jax.Array:
+    """Oracle scatter-accumulate (u32 wraparound)."""
+    idx = jnp.where(valid, slots, regs.shape[0])
+    return regs.at[idx].add(deltas, mode="drop")
+
+
+def ingest(state: ReporterState, events: Dict[str, jax.Array],
+           cfg: DFAConfig, accumulate_fn=accumulate_ref) -> ReporterState:
+    """Process one block of packet events.
+
+    events: ts (E,) u32 µs | size (E,) u32 | five_tuple (E,5) u32 |
+            valid (E,) bool
+    """
+    slots = hash_slot(events["five_tuple"], cfg.flows_per_shard)
+    pre_active = state.active            # BEFORE this block's admissions:
+    state, valid = admit(state, slots, events["five_tuple"],
+                         events["valid"])
+    # a flow admitted in this block must see itself as new (first packet)
+    iat, first, new_last = resolve_iat(slots, events["ts"], valid,
+                                       state.last_ts, pre_active)
+    deltas = event_deltas(iat, events["size"], first, valid,
+                          cfg.logstar_bits)
+    regs = accumulate_fn(state.regs, slots, deltas, valid)
+    return state._replace(regs=regs, last_ts=new_last)
+
+
+def due_flows(state: ReporterState, now: jax.Array, cfg: DFAConfig,
+              capacity: int) -> Tuple[jax.Array, jax.Array]:
+    """Flows whose monitoring period elapsed (paper: per-flow configurable
+    interval; we use the global default with a per-flow offset hook).
+
+    Returns (slots (capacity,) i32, mask (capacity,) bool) — fixed-size for
+    SPMD; selection is by largest elapsed time (most-overdue-first).
+    """
+    elapsed = (now - state.last_report).astype(jnp.uint32)
+    due = state.active & (elapsed >= jnp.uint32(cfg.monitoring_period_us))
+    score = jnp.where(due, elapsed, jnp.uint32(0))
+    top, idx = jax.lax.top_k(score, capacity)
+    return idx.astype(jnp.int32), top > 0
+
+
+def make_reports(state: ReporterState, slots: jax.Array, mask: jax.Array,
+                 now: jax.Array, reporter_id: int, shard_flow_base,
+                 cfg: DFAConfig) -> Tuple[ReporterState, jax.Array]:
+    """Clone-and-truncate analogue: emit DTA reports for the given slots.
+
+    Returns (state', reports (capacity, REPORT_WORDS) u32); masked-out rows
+    are zero. Sequence numbers increment per report (sec VI-B).
+    """
+    R = slots.shape[0]
+    stats = state.regs[slots]                     # (R, 7)
+    tuples = state.keys[slots]
+    flow_ids = (shard_flow_base + slots).astype(jnp.uint32)
+    seqs = state.seq + jnp.cumsum(mask.astype(jnp.uint32)) - 1
+    reports = PROTO.pack_dta_report(
+        flow_ids, jnp.full((R,), reporter_id, jnp.uint32),
+        seqs, stats, tuples)
+    reports = jnp.where(mask[:, None], reports, jnp.uint32(0))
+    F = state.last_report.shape[0]
+    last_report = state.last_report.at[jnp.where(mask, slots, F)].max(
+        jnp.broadcast_to(now.astype(jnp.uint32), (R,)), mode="drop")
+    new_seq = state.seq + jnp.sum(mask).astype(jnp.uint32)
+    return state._replace(last_report=last_report, seq=new_seq), reports

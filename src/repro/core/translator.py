@@ -1,0 +1,121 @@
+"""DFA Translator — report routing + RDMA address computation (§III-B/IV-B).
+
+The Translator terminates the DTA transport and computes the collector
+memory address for every report: ``address = f(flow_id, history_index)``
+with an 8-bit per-flow counter cycling through the 10 history entries.
+On TPU, "choosing the RDMA address" becomes choosing the owning collector
+shard (range-sharded flow space) + the (local flow, history) coordinates;
+cross-shard delivery is a fixed-capacity all_to_all over the mesh — the ICI
+plays the role of the RoCEv2 fabric.
+
+Beyond-paper: optional report batching (``batch`` > 1 packs several reports
+per message — the paper's own future-work §VII), which amortizes per-message
+header overhead exactly as the paper projects.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import DFAConfig
+from repro.core import protocol as PROTO
+
+Tree = Any
+
+
+class TranslatorState(NamedTuple):
+    hist_counter: jax.Array   # (F_total_local_view,) u8-semantics counter
+    # the translator tracks counters for the flows whose reports it carries;
+    # we shard it identically to the collector (one entry per local flow)
+
+
+def init_state(cfg: DFAConfig) -> TranslatorState:
+    return TranslatorState(
+        hist_counter=jnp.zeros((cfg.flows_per_shard,), jnp.uint32))
+
+
+def compute_addresses(state: TranslatorState, local_flow: jax.Array,
+                      mask: jax.Array, cfg: DFAConfig
+                      ) -> Tuple[TranslatorState, jax.Array]:
+    """History index per report + counter update (mod ``history``; the
+    hardware register is 8-bit — we keep the & 0xFF semantics).
+
+    Multiple reports for the same flow in one batch get consecutive indices
+    (cumulative per-flow rank), matching sequential switch processing.
+    """
+    F = state.hist_counter.shape[0]
+    R = local_flow.shape[0]
+    safe = jnp.where(mask, local_flow, F)
+    # per-flow occurrence rank within this batch
+    order = jnp.argsort(safe, stable=True)
+    s = safe[order]
+    seg_start = jnp.concatenate([jnp.array([True]), s[1:] != s[:-1]])
+    idx_in_run = jnp.arange(R) - jnp.maximum.accumulate(
+        jnp.where(seg_start, jnp.arange(R), 0))
+    rank = jnp.zeros((R,), jnp.int32).at[order].set(idx_in_run)
+    base = state.hist_counter[jnp.clip(local_flow, 0, F - 1)]
+    hist = ((base + rank.astype(jnp.uint32)) & 0xFF) % jnp.uint32(
+        cfg.history)
+    # counter += count of reports per flow
+    counts = jnp.zeros((F + 1,), jnp.uint32).at[safe].add(
+        mask.astype(jnp.uint32), mode="drop")
+    new_counter = (state.hist_counter + counts[:F]) & jnp.uint32(0xFF)
+    # paper semantics: reset to 0 when max history index is reached
+    new_counter = new_counter % jnp.uint32(cfg.history)
+    return TranslatorState(new_counter), hist
+
+
+def translate(state: TranslatorState, reports: jax.Array, mask: jax.Array,
+              shard_flow_base, cfg: DFAConfig
+              ) -> Tuple[TranslatorState, jax.Array, Dict[str, jax.Array]]:
+    """DTA reports (R, 14) -> RoCEv2 payloads (R, 16) + placement coords."""
+    rep = PROTO.unpack_dta_report(reports)
+    local_flow = (rep["flow_id"].astype(jnp.int32)
+                  - jnp.asarray(shard_flow_base, jnp.int32))
+    state, hist = compute_addresses(state, local_flow, mask, cfg)
+    payload = PROTO.pack_rocev2_payload(rep, hist)
+    payload = jnp.where(mask[:, None], payload, jnp.uint32(0))
+    return state, payload, {"local_flow": local_flow, "hist": hist,
+                            "mask": mask}
+
+
+def route_reports(reports: jax.Array, mask: jax.Array, n_shards: int,
+                  flows_per_shard: int, capacity_out: int
+                  ) -> Tuple[jax.Array, jax.Array]:
+    """Bucket reports by owning collector shard for a fixed-capacity
+    all_to_all. reports: (R, W) u32 -> (n_shards, capacity_out, W).
+
+    Overflowing a destination bucket drops the report (counted by caller
+    via the returned mask sums) — the lossy-telemetry trade DTA makes too.
+    """
+    R, W = reports.shape
+    flow_id = reports[:, 0].astype(jnp.int32)
+    dest = jnp.clip(flow_id // flows_per_shard, 0, n_shards - 1)
+    dest = jnp.where(mask, dest, n_shards)
+    order = jnp.argsort(dest, stable=True)
+    d_sorted = dest[order]
+    start = jnp.searchsorted(d_sorted, jnp.arange(n_shards), side="left")
+    rank = jnp.arange(R) - start[jnp.clip(d_sorted, 0, n_shards - 1)]
+    ok = (d_sorted < n_shards) & (rank < capacity_out)
+    slot = jnp.where(ok, d_sorted * capacity_out + rank,
+                     n_shards * capacity_out)
+    out = jnp.zeros((n_shards * capacity_out + 1, W), jnp.uint32)
+    out = out.at[slot].set(reports[order], mode="drop")
+    out_mask = jnp.zeros((n_shards * capacity_out + 1,), bool
+                         ).at[slot].set(ok, mode="drop")
+    return (out[:-1].reshape(n_shards, capacity_out, W),
+            out_mask[:-1].reshape(n_shards, capacity_out))
+
+
+def batch_payloads(payloads: jax.Array, mask: jax.Array, batch: int
+                   ) -> Tuple[jax.Array, jax.Array]:
+    """Beyond-paper: pack ``batch`` 64 B payloads into one message
+    (paper §VII: 'batching could double or triple the overall throughput').
+    Returns (messages (R//batch, batch*W), message mask)."""
+    R, W = payloads.shape
+    n = R // batch
+    msgs = payloads[:n * batch].reshape(n, batch * W)
+    mmask = mask[:n * batch].reshape(n, batch).any(axis=-1)
+    return msgs, mmask

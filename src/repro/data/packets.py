@@ -1,0 +1,60 @@
+"""Synthetic traffic-trace generator for the DFA pipeline.
+
+Flow model follows the measurement literature the paper targets: heavy-tailed
+flow sizes (Pareto), lognormal packet inter-arrivals, bimodal packet sizes
+(ACK-ish small vs MTU-ish large), a TCP/UDP mix, and flow churn. Stateless
+per step (seed, step) like the token pipeline.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import numpy as np
+
+
+def gen_flows(n_flows: int, seed: int = 0) -> Dict[str, np.ndarray]:
+    rng = np.random.default_rng(seed)
+    five = np.zeros((n_flows, 5), np.uint32)
+    five[:, 0] = rng.integers(0x0A000000, 0x0AFFFFFF, n_flows)  # 10.0.0.0/8
+    five[:, 1] = rng.integers(0xC0A80000, 0xC0A8FFFF, n_flows)
+    sport = rng.integers(1024, 65535, n_flows).astype(np.uint32)
+    dport = rng.choice([80, 443, 8080, 53, 1935, 3478], n_flows).astype(
+        np.uint32)
+    five[:, 2] = (sport << 16) | dport
+    five[:, 3] = rng.choice([6, 17], n_flows, p=[0.8, 0.2])     # tcp/udp
+    # heavy-tailed mean rate per flow (pkts/s)
+    rate = np.clip((rng.pareto(1.3, n_flows) + 1) * 50, 10, 5e4)
+    return {"five_tuple": five, "rate": rate,
+            "class": (rng.random(n_flows) * 8).astype(np.int32)}
+
+
+def gen_events(flows: Dict[str, np.ndarray], t0_us: int, window_us: int,
+               n_events: int, seed: int = 0) -> Dict[str, np.ndarray]:
+    """Sample ``n_events`` packets in [t0, t0+window) across the flow set,
+    arrival intensity proportional to per-flow rate."""
+    rng = np.random.default_rng(seed)
+    p = flows["rate"] / flows["rate"].sum()
+    fidx = rng.choice(len(p), size=n_events, p=p)
+    ts = np.sort(t0_us + rng.integers(0, window_us, n_events)).astype(
+        np.uint32)
+    small = rng.random(n_events) < 0.45
+    size = np.where(small, rng.integers(40, 120, n_events),
+                    rng.integers(900, 1514, n_events)).astype(np.uint32)
+    return {"ts": ts, "size": size,
+            "five_tuple": flows["five_tuple"][fidx],
+            "valid": np.ones(n_events, bool),
+            "flow_idx": fidx}
+
+
+def events_for_shards(flows, step: int, n_shards: int, events_per_shard: int,
+                      window_us: int = 20_000, seed: int = 0):
+    """Global event batch: each reporter shard sees its own traffic slice."""
+    out = []
+    for s in range(n_shards):
+        out.append(gen_events(flows, t0_us=step * window_us,
+                              window_us=window_us,
+                              n_events=events_per_shard,
+                              seed=seed * 100003 + step * 131 + s))
+    cat = {k: np.concatenate([o[k] for o in out]) for k in
+           ("ts", "size", "five_tuple", "valid")}
+    return cat

@@ -1,0 +1,57 @@
+"""Deterministic synthetic LM data pipeline.
+
+Stateless and step-keyed: batch(step) is a pure function of (seed, step,
+shape), so crash-restart resumes EXACTLY (no data-loader state to
+checkpoint) and any host can materialize any shard — the property that
+makes the pipeline elastic across mesh changes.
+
+A Zipf-ish unigram mixture with per-document structure (repeated n-grams)
+gives losses that actually decrease during the example runs, unlike uniform
+noise.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+def _zipf_logits(vocab: int) -> jax.Array:
+    r = jnp.arange(1, vocab + 1, dtype=jnp.float32)
+    return -jnp.log(r)                       # p(r) ∝ 1/r
+
+
+def batch_at(step: int, cfg: ModelConfig, batch: int, seq: int,
+             seed: int = 0) -> Dict[str, jax.Array]:
+    """-> {tokens, targets, mask} (+ modality stubs added by caller)."""
+    key = jax.random.fold_in(jax.random.key(seed), step)
+    k1, k2, k3 = jax.random.split(key, 3)
+    logits = _zipf_logits(cfg.vocab_size)
+    base = jax.random.categorical(k1, logits, shape=(batch, seq + 1))
+    # inject learnable structure: each sequence repeats an 8-gram motif
+    motif = jax.random.categorical(k2, logits, shape=(batch, 8))
+    pos = jnp.arange(seq + 1)
+    use_motif = (pos // 8) % 4 == 0          # 25% of positions
+    motif_tok = motif[:, pos % 8]
+    toks = jnp.where(use_motif[None, :], motif_tok, base).astype(jnp.int32)
+    return {"tokens": toks[:, :-1],
+            "targets": toks[:, 1:],
+            "mask": jnp.ones((batch, seq), jnp.float32)}
+
+
+def add_modality_stub(batch: Dict[str, jax.Array], cfg: ModelConfig,
+                      step: int, seed: int = 0) -> Dict[str, jax.Array]:
+    B = batch["tokens"].shape[0]
+    key = jax.random.fold_in(jax.random.key(seed + 7), step)
+    if cfg.family == "vlm":
+        batch["patches"] = 0.02 * jax.random.normal(
+            key, (B, cfg.vision.num_patches, cfg.d_model)
+        ).astype(jnp.dtype(cfg.dtype))
+    if cfg.family == "encdec":
+        batch["frames"] = 0.02 * jax.random.normal(
+            key, (B, cfg.encdec.num_frames, cfg.d_model)
+        ).astype(jnp.dtype(cfg.dtype))
+    return batch

@@ -1,0 +1,115 @@
+"""Fault-tolerance runtime pieces: step watchdog, heartbeats, retry loop.
+
+* StepMonitor — EMA step-time tracker; flags stragglers (step > k× EMA) and
+  raises after ``max_consecutive_slow`` (a hung collective on real fleets).
+* Heartbeat — per-process liveness file (multi-host: the coordinator scans
+  peers' mtimes; single-process here but the protocol is complete).
+* run_with_restart — wraps a step function with checkpoint-restore retry:
+  on exception, restore latest checkpoint and replay (the step index comes
+  from the checkpoint, and the data pipeline is step-keyed, so replay is
+  exact).
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Optional
+
+
+@dataclass
+class StepMonitor:
+    ema_decay: float = 0.9
+    slow_factor: float = 3.0
+    max_consecutive_slow: int = 5
+    ema: Optional[float] = None
+    consecutive_slow: int = 0
+    slow_steps: int = 0
+    _t0: float = 0.0
+
+    def start(self):
+        self._t0 = time.monotonic()
+
+    def stop(self) -> Dict[str, float]:
+        dt = time.monotonic() - self._t0
+        slow = self.ema is not None and dt > self.slow_factor * self.ema
+        if slow:
+            self.consecutive_slow += 1
+            self.slow_steps += 1
+        else:
+            self.consecutive_slow = 0
+        self.ema = dt if self.ema is None else (
+            self.ema_decay * self.ema + (1 - self.ema_decay) * dt)
+        if self.consecutive_slow >= self.max_consecutive_slow:
+            raise RuntimeError(
+                f"straggler watchdog: {self.consecutive_slow} consecutive "
+                f"slow steps (last {dt:.3f}s vs EMA {self.ema:.3f}s)")
+        return {"step_time": dt, "ema": self.ema, "slow": float(slow)}
+
+
+@dataclass
+class Heartbeat:
+    directory: str
+    process_index: int = 0
+    stale_after_s: float = 60.0
+
+    def beat(self, step: int):
+        os.makedirs(self.directory, exist_ok=True)
+        path = os.path.join(self.directory, f"hb_{self.process_index}.json")
+        tmp = path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump({"step": step, "t": time.time()}, f)
+        os.replace(tmp, path)
+
+    def dead_peers(self) -> Dict[int, float]:
+        """-> {process_index: seconds_since_last_beat} for stale peers."""
+        now = time.time()
+        out = {}
+        if not os.path.isdir(self.directory):
+            return out
+        for name in os.listdir(self.directory):
+            if not name.startswith("hb_") or not name.endswith(".json"):
+                continue
+            try:
+                with open(os.path.join(self.directory, name)) as f:
+                    d = json.load(f)
+                age = now - d["t"]
+                if age > self.stale_after_s:
+                    out[int(name[3:-5])] = age
+            except (json.JSONDecodeError, OSError, ValueError):
+                continue
+        return out
+
+
+def run_with_restart(step_fn: Callable[[Any, int], Any], state: Any,
+                     start_step: int, num_steps: int,
+                     save_fn: Callable[[Any, int], None],
+                     restore_fn: Callable[[], Any],
+                     checkpoint_every: int = 50,
+                     max_restarts: int = 3,
+                     monitor: Optional[StepMonitor] = None,
+                     on_metrics: Optional[Callable] = None):
+    """Crash-tolerant training loop driver."""
+    restarts = 0
+    step = start_step
+    while step < num_steps:
+        try:
+            if monitor:
+                monitor.start()
+            state, metrics = step_fn(state, step)
+            if monitor:
+                metrics = {**metrics, **monitor.stop()}
+            if on_metrics:
+                on_metrics(step, metrics)
+            step += 1
+            if step % checkpoint_every == 0:
+                save_fn(state, step)
+        except (RuntimeError, ValueError, FloatingPointError) as e:
+            restarts += 1
+            if restarts > max_restarts:
+                raise
+            state, step = restore_fn()
+            if monitor:
+                monitor.consecutive_slow = 0
+    return state, step

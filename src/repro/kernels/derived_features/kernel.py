@@ -1,0 +1,74 @@
+"""derived_features — the collector's enrichment stage (Pallas TPU).
+
+The paper runs Marina's ~100 derived-feature computation "on CUDA cores";
+here one VPU-bound Pallas kernel decodes the Table-I moment registers of a
+(flow_tile, history, 16-word) collector tile into the derived feature block
+(flow_tile, derived_dim). All selection (newest entry) is done with
+iota/one-hot — no gathers. The math is identical to
+repro.core.enrich (the jnp oracle).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.enrich import PER_ENTRY, entry_features
+from repro.core.protocol import META_WORD, STATS_SLICE
+
+WORDS = 16
+
+
+def _kernel(entries_ref, valid_ref, out_ref, *, derived_dim: int):
+    entries = entries_ref[...]                       # (T, H, 16) u32
+    valid = valid_ref[...] > 0                       # (T, H)
+    T, H, _ = entries.shape
+    stats = entries[:, :, STATS_SLICE].astype(jnp.uint32)
+    hist_idx = (entries[:, :, META_WORD] & 0xFF).astype(jnp.float32)
+    feats = entry_features(stats)                    # (T, H, PER_ENTRY)
+    vmask = valid.astype(jnp.float32)[..., None]
+    feats = feats * vmask
+    nvalid = jnp.maximum(valid.sum(-1, keepdims=True), 1).astype(
+        jnp.float32)                                 # (T, 1)
+    count = jnp.where(valid, stats[..., 0], 0)       # (T, H)
+    newest = jnp.argmax(count, axis=-1)              # (T,)
+    sel = (jax.lax.broadcasted_iota(jnp.int32, (T, H), 1)
+           == newest[:, None]).astype(jnp.float32)   # (T, H) one-hot
+    newest_f = jnp.sum(feats * sel[..., None], axis=1)       # (T, PER_ENTRY)
+    mean_w = feats.sum(1) / nvalid
+    var_w = jnp.maximum((feats * feats).sum(1) / nvalid - mean_w * mean_w,
+                        0.0)
+    std_w = jnp.sqrt(var_w)
+    delta = newest_f - mean_w
+    maxhist = jnp.max(jnp.where(valid, hist_idx, 0.0), axis=-1,
+                      keepdims=True)
+    out = jnp.concatenate([newest_f, mean_w, std_w, delta, nvalid,
+                           maxhist], axis=-1)
+    D = out.shape[-1]
+    if D < derived_dim:
+        out = jnp.pad(out, ((0, 0), (0, derived_dim - D)))
+    out_ref[...] = out[:, :derived_dim]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("derived_dim", "flow_tile", "interpret"))
+def derived_features_pallas(entries: jax.Array, valid: jax.Array,
+                            derived_dim: int = 96, flow_tile: int = 256,
+                            interpret: bool = True) -> jax.Array:
+    """entries: (F, H, 16) u32; valid: (F, H) bool -> (F, derived_dim) f32."""
+    F, H, W = entries.shape
+    assert F % flow_tile == 0 and W == WORDS
+
+    return pl.pallas_call(
+        functools.partial(_kernel, derived_dim=derived_dim),
+        grid=(F // flow_tile,),
+        in_specs=[
+            pl.BlockSpec((flow_tile, H, WORDS), lambda f: (f, 0, 0)),
+            pl.BlockSpec((flow_tile, H), lambda f: (f, 0)),
+        ],
+        out_specs=pl.BlockSpec((flow_tile, derived_dim), lambda f: (f, 0)),
+        out_shape=jax.ShapeDtypeStruct((F, derived_dim), jnp.float32),
+        interpret=interpret,
+    )(entries, valid.astype(jnp.int32))

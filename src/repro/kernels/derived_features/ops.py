@@ -1,0 +1,24 @@
+"""Dispatching wrapper for derived_features."""
+from __future__ import annotations
+
+import jax
+
+from repro.configs.base import DFAConfig
+from repro.kernels.derived_features.kernel import derived_features_pallas
+from repro.kernels.derived_features.ref import derived_features_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def derived_features(entries, valid, cfg: DFAConfig, force: str = "auto"):
+    if force == "ref" or (force == "auto" and not _on_tpu()):
+        return derived_features_ref(entries, valid, cfg)
+    interpret = (force == "interpret") or not _on_tpu()
+    ft = min(cfg.flow_tile, entries.shape[0])
+    while entries.shape[0] % ft:
+        ft -= 1
+    return derived_features_pallas(entries, valid,
+                                   derived_dim=cfg.derived_dim,
+                                   flow_tile=ft, interpret=interpret)

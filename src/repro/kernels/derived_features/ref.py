@@ -1,0 +1,2 @@
+"""Oracle for derived_features: repro.core.enrich.derive_ref."""
+from repro.core.enrich import derive_ref as derived_features_ref  # noqa: F401

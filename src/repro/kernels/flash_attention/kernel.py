@@ -1,0 +1,99 @@
+"""flash_attention — fused causal attention forward (Pallas TPU).
+
+The §Roofline tables show every train/prefill cell is memory-dominant under
+vanilla XLA because (q·kᵀ) score blocks round-trip HBM. This kernel keeps
+the online-softmax state (m, l, acc) in VMEM scratch across the KV grid
+dimension, so scores never leave VMEM — the standard flash tiling, with
+GQA handled by the K/V BlockSpec index map (bh -> bh // group) instead of
+materializing repeated heads.
+
+Grid: (B*H, nq, nk), nk innermost (the output block is revisited across nk
+and written on the last step). Block shapes are MXU-aligned by the ops.py
+wrapper (q_block x head_dim multiples of 128 when the shape allows).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            scale: float, causal: bool, bq: int, bk: int, nk: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0]                                   # (bq, D)
+    k = k_ref[0]                                   # (bk, D)
+    v = v_ref[0]                                   # (bk, Dv)
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    if causal:
+        q_pos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        k_pos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        s = jnp.where(q_pos >= k_pos, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    p = jnp.exp(s - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_scr[...] * corr + jnp.sum(p, axis=-1)
+    acc_scr[...] = (acc_scr[...] * corr[:, None]
+                    + jnp.dot(p.astype(v.dtype), v,
+                              preferred_element_type=jnp.float32))
+    m_scr[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finish():
+        o_ref[0] = (acc_scr[...]
+                    / jnp.maximum(l_scr[...], 1e-30)[:, None]
+                    ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("group", "causal", "scale",
+                                             "bq", "bk", "interpret"))
+def flash_attention_pallas(q, k, v, *, group: int = 1, causal: bool = True,
+                           scale: float | None = None, bq: int = 128,
+                           bk: int = 128, interpret: bool = True):
+    """q: (BHq, Sq, D); k/v: (BHkv, Sk, D|Dv) with BHq == BHkv * group.
+
+    GQA: query head i reads kv head i // group via the BlockSpec index map
+    (no repeated-KV materialization). Returns (BHq, Sq, Dv).
+    """
+    BH, Sq, D = q.shape
+    Sk, Dv = k.shape[1], v.shape[2]
+    scale = D ** -0.5 if scale is None else scale
+    assert Sq % bq == 0 and Sk % bk == 0, (Sq, bq, Sk, bk)
+    nq, nk = Sq // bq, Sk // bk
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, scale=scale, causal=causal, bq=bq,
+                          bk=bk, nk=nk),
+        grid=(BH, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, bq, D), lambda bh, qi, ki: (bh, qi, 0)),
+            pl.BlockSpec((1, bk, D),
+                         lambda bh, qi, ki, g=group: (bh // g, ki, 0)),
+            pl.BlockSpec((1, bk, Dv),
+                         lambda bh, qi, ki, g=group: (bh // g, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, Dv), lambda bh, qi, ki: (bh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, Sq, Dv), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq, Dv), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out

@@ -1,0 +1,24 @@
+"""Oracle for the flash_attention kernel: plain masked softmax attention
+over the flattened (BH, S, D) layout."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v, *, group: int = 1, causal: bool = True,
+                        scale=None):
+    BH, Sq, D = q.shape
+    Sk, Dv = k.shape[1], v.shape[2]
+    scale = D ** -0.5 if scale is None else scale
+    kv_idx = jnp.arange(BH) // group
+    kk = k[kv_idx]                                # (BH, Sk, D)
+    vv = v[kv_idx]
+    s = jnp.einsum("bqd,bkd->bqk", q, kk,
+                   preferred_element_type=jnp.float32) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((Sq, Sk), bool))
+        s = jnp.where(mask[None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bke->bqe", p.astype(v.dtype), vv
+                      ).astype(q.dtype)

@@ -1,0 +1,87 @@
+"""flow_moments — per-flow Table-I register accumulation (Pallas TPU).
+
+The Tofino stateful-ALU scatter (one random 32-bit register update per
+packet) has no TPU equivalent; the TPU-native reformulation turns the
+scatter into a ONE-HOT MATMUL on the MXU:
+
+    regs[f] += sum_e onehot[f, e] * deltas[e]        (mod 2^32)
+
+Exactness trick: u32 deltas are split into u16 halves and accumulated as
+f32 matmuls — with EVENT_BLOCK <= 256 each partial sum is < 2^24, so the
+f32 mantissa holds it exactly; the halves are recombined in u32 where the
+natural wraparound restores P4's mod-2^32 register semantics.
+
+Grid: (flow_tiles, event_blocks). The register tile lives in VMEM across
+the inner event dimension (revisited output block, initialized at block 0).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+EVENT_BLOCK = 256       # <= 256 keeps u16-half partial sums exact in f32
+N_REG = 7
+REG_PAD = 8             # lane-friendly padded register count
+
+
+def _kernel(slots_ref, dlo_ref, dhi_ref, regs_in_ref, regs_out_ref, *,
+            flow_tile: int):
+    ft = pl.program_id(0)
+    eb = pl.program_id(1)
+
+    @pl.when(eb == 0)
+    def _init():
+        regs_out_ref[...] = regs_in_ref[...]
+
+    slots = slots_ref[...]                                # (E,) i32 global
+    base = ft * flow_tile
+    local = slots - base                                  # (E,)
+    flows = jax.lax.broadcasted_iota(jnp.int32, (flow_tile, EVENT_BLOCK), 0)
+    onehot = (flows == local[None, :]).astype(jnp.float32)  # (F_t, E)
+    acc_lo = jnp.dot(onehot, dlo_ref[...].astype(jnp.float32),
+                     preferred_element_type=jnp.float32)   # (F_t, 8)
+    acc_hi = jnp.dot(onehot, dhi_ref[...].astype(jnp.float32),
+                     preferred_element_type=jnp.float32)
+    add = (acc_lo.astype(jnp.uint32)
+           + (acc_hi.astype(jnp.uint32) << 16))
+    regs_out_ref[...] = regs_out_ref[...] + add
+
+
+@functools.partial(jax.jit, static_argnames=("flow_tile", "interpret"))
+def flow_moments_pallas(regs: jax.Array, slots: jax.Array,
+                        deltas: jax.Array, valid: jax.Array,
+                        flow_tile: int = 512,
+                        interpret: bool = True) -> jax.Array:
+    """regs: (F, 7) u32; slots: (E,) i32; deltas: (E, 7) u32; valid: (E,).
+
+    Returns updated regs. F % flow_tile == 0; E padded to EVENT_BLOCK.
+    """
+    F, _ = regs.shape
+    E = slots.shape[0]
+    assert F % flow_tile == 0, (F, flow_tile)
+    Ep = ((E + EVENT_BLOCK - 1) // EVENT_BLOCK) * EVENT_BLOCK
+    slots = jnp.where(valid, slots, -1)                   # -1 never matches
+    slots = jnp.pad(slots, (0, Ep - E), constant_values=-1)
+    deltas = jnp.pad(deltas, ((0, Ep - E), (0, REG_PAD - N_REG)))
+    dlo = (deltas & jnp.uint32(0xFFFF)).astype(jnp.int32)
+    dhi = (deltas >> 16).astype(jnp.int32)
+    regs_p = jnp.pad(regs, ((0, 0), (0, REG_PAD - N_REG)))
+
+    grid = (F // flow_tile, Ep // EVENT_BLOCK)
+    out = pl.pallas_call(
+        functools.partial(_kernel, flow_tile=flow_tile),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((EVENT_BLOCK,), lambda f, e: (e,)),
+            pl.BlockSpec((EVENT_BLOCK, REG_PAD), lambda f, e: (e, 0)),
+            pl.BlockSpec((EVENT_BLOCK, REG_PAD), lambda f, e: (e, 0)),
+            pl.BlockSpec((flow_tile, REG_PAD), lambda f, e: (f, 0)),
+        ],
+        out_specs=pl.BlockSpec((flow_tile, REG_PAD), lambda f, e: (f, 0)),
+        out_shape=jax.ShapeDtypeStruct((F, REG_PAD), jnp.uint32),
+        interpret=interpret,
+    )(slots, dlo, dhi, regs_p)
+    return out[:, :N_REG]

@@ -1,0 +1,26 @@
+"""Dispatching wrapper: Pallas on TPU, interpret-mode Pallas or the jnp
+oracle elsewhere. This is the ``accumulate_fn`` plugged into
+repro.core.reporter.ingest."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.flow_moments.kernel import flow_moments_pallas
+from repro.kernels.flow_moments.ref import flow_moments_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def flow_moments(regs, slots, deltas, valid, flow_tile: int = 512,
+                 force: str = "auto"):
+    """force: "auto" | "pallas" | "interpret" | "ref"."""
+    if force == "ref" or (force == "auto" and not _on_tpu()):
+        return flow_moments_ref(regs, slots, deltas, valid)
+    interpret = (force == "interpret") or not _on_tpu()
+    ft = min(flow_tile, regs.shape[0])
+    while regs.shape[0] % ft:
+        ft -= 1
+    return flow_moments_pallas(regs, slots, deltas, valid, flow_tile=ft,
+                               interpret=interpret)

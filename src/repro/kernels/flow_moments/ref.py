@@ -1,0 +1,12 @@
+"""Pure-jnp oracle for flow_moments: scatter-add with u32 wraparound."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def flow_moments_ref(regs: jax.Array, slots: jax.Array, deltas: jax.Array,
+                     valid: jax.Array) -> jax.Array:
+    F = regs.shape[0]
+    idx = jnp.where(valid, slots, F)
+    return regs.at[idx].add(deltas.astype(jnp.uint32), mode="drop")

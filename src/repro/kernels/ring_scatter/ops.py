@@ -1,0 +1,35 @@
+"""Dispatching wrapper for ring_scatter (collector scatter_fn slot-in)."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.ring_scatter.kernel import ring_scatter_pallas
+from repro.kernels.ring_scatter.ref import ring_scatter_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def ring_scatter(memory, payloads, flow, hist, mask, flow_tile: int = 512,
+                 force: str = "auto"):
+    if force == "ref" or (force == "auto" and not _on_tpu()):
+        return ring_scatter_ref(memory, payloads, flow, hist, mask)
+    interpret = (force == "interpret") or not _on_tpu()
+    ft = min(flow_tile, memory.shape[0])
+    while memory.shape[0] % ft:
+        ft -= 1
+    return ring_scatter_pallas(memory, payloads, flow, hist, mask,
+                               flow_tile=ft, history=memory.shape[1],
+                               interpret=interpret)
+
+
+def ring_scatter_collector(memory, entry_valid, payloads, flow, hist, mask,
+                           force: str = "interpret"):
+    """Adapter matching repro.core.collector.scatter_fn signature."""
+    mem = ring_scatter(memory, payloads, flow, hist, mask, force=force)
+    import jax.numpy as jnp
+    F, H, _ = memory.shape
+    ev = entry_valid.reshape(F * H).at[
+        jnp.where(mask, flow * H + hist, F * H)].set(True, mode="drop")
+    return mem, ev.reshape(F, H)

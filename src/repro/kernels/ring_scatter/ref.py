@@ -1,0 +1,15 @@
+"""Pure-jnp oracle for ring_scatter (last-write-wins placement)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ring_scatter_ref(memory: jax.Array, payloads: jax.Array,
+                     flow: jax.Array, hist: jax.Array, mask: jax.Array
+                     ) -> jax.Array:
+    F, H, W = memory.shape
+    flat = memory.reshape(F * H, W)
+    idx = jnp.where(mask, flow * H + hist, F * H)
+    flat = flat.at[idx].set(payloads, mode="drop")
+    return flat.reshape(F, H, W)

@@ -1,0 +1,303 @@
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+# ^ MUST precede every other import: jax pins the device count at first init.
+
+"""Multi-pod dry-run: prove the distribution config is coherent.
+
+For every (architecture x input shape x mesh) cell this AOT-lowers the
+train/prefill/decode step with ShapeDtypeStruct stand-ins (no allocation),
+compiles it, and records:
+  * memory_analysis()  — per-device bytes (argument/output/temp) vs 16 GB HBM
+  * cost_analysis()    — per-device HLO FLOPs and bytes accessed
+  * collective bytes   — parsed from the compiled HLO (all-gather /
+    all-reduce / reduce-scatter / all-to-all / collective-permute)
+  * the three roofline terms + dominant bottleneck (§Roofline)
+
+Usage:
+  python -m repro.launch.dryrun --arch granite-3-2b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--out DIR]
+"""
+import argparse
+import json
+import math
+import re
+import time
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import (SHAPES, get_config, get_shape, list_archs,
+                           shape_applicable)
+from repro.configs.base import TrainConfig
+from repro.launch.mesh import make_production_mesh
+from repro.launch import steps as ST
+from repro.launch.hlo_analysis import analyze_hlo, f32_artifact_bytes
+from repro.models import param as PM
+from repro.models.registry import (Model, decode_axes, get_model,
+                                   input_specs, train_batch_axes)
+
+# ---- hardware constants (TPU v5e-class target) -----------------------------
+PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per chip per link (aggregate assumed 1)
+HBM_BYTES = 16 * 1024 ** 3   # 16 GiB per chip
+
+_DT_BYTES = {"f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1,
+             "f8e5m2": 1, "s64": 8, "u64": 8, "s32": 4, "u32": 4,
+             "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1, "c64": 8,
+             "token": 0}
+
+_COLL_RE = re.compile(
+    r"=\s*(\(?[^=()]*(?:\([^)]*\))?[^=]*?)\s+"
+    r"(all-gather-start|all-reduce-start|collective-permute-start|"
+    r"all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"\(")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(tok: Tuple[str, str]) -> int:
+    dt, dims = tok
+    if dt not in _DT_BYTES:
+        return 0
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DT_BYTES[dt]
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, Any]:
+    """Sum result-shape bytes of every collective op in the HLO."""
+    per_kind: Dict[str, int] = {}
+    counts: Dict[str, int] = {}
+    for m in _COLL_RE.finditer(hlo_text):
+        result, kind = m.group(1), m.group(2)
+        kind = kind.replace("-start", "")
+        shapes = _SHAPE_RE.findall(result)
+        if not shapes:
+            continue
+        sizes = [_shape_bytes(s) for s in shapes]
+        if "-start" in m.group(2) and len(sizes) > 1:
+            b = max(sizes)          # (operand, output) tuple: count once
+        else:
+            b = sum(sizes)
+        per_kind[kind] = per_kind.get(kind, 0) + b
+        counts[kind] = counts.get(kind, 0) + 1
+    return {"bytes_per_kind": per_kind, "counts": counts,
+            "total": sum(per_kind.values())}
+
+
+def count_active_params(model: Model) -> Tuple[int, int]:
+    """(total, active) parameter counts (MoE: top_k/num_experts of experts)."""
+    cfg = model.cfg
+    descs = model.param_descs()
+    total = active = 0
+    for path, d in PM._leaf_paths(descs):
+        n = int(np.prod(d.shape))
+        total += n
+        if (cfg.moe is not None and "moe" in path
+                and d.shape and d.shape[-0] == cfg.moe.num_experts
+                and len(d.shape) >= 3):
+            active += n * cfg.moe.top_k // cfg.moe.num_experts
+        else:
+            active += n
+    return total, active
+
+
+def model_flops(cfg, shape, n_active: int) -> float:
+    """'Useful' model FLOPs for the step (the 6ND / 2ND convention)."""
+    if shape.kind == "train":
+        return 6.0 * n_active * shape.tokens
+    if shape.kind == "prefill":
+        return 2.0 * n_active * shape.tokens
+    return 2.0 * n_active * shape.global_batch          # decode: 1 tok/seq
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               donate: bool = True):
+    """Build + AOT-lower one cell. Returns (lowered, meta)."""
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    if not shape_applicable(cfg.family, shape):
+        return None, {"skipped": True, "reason":
+                      "quadratic-attention arch at 500k decode "
+                      "(DESIGN.md §5)"}
+    model = get_model(cfg, mesh)
+    tcfg = TrainConfig()
+    B, S = shape.global_batch, shape.seq_len
+    batch_sds, batch_specs = input_specs(cfg, shape, mesh)
+    bshard = jax.tree.map(lambda s: NamedSharding(mesh, s), batch_specs)
+
+    with mesh:
+        if shape.kind == "train":
+            state_sds = ST.abstract_train_state(model, tcfg)
+            state_sh = ST.train_state_shardings(model, tcfg)
+            step = ST.make_train_step(model, tcfg)
+            rep = NamedSharding(mesh, P())
+            out_sh = (state_sh, {"loss": rep, "gnorm": rep, "lr": rep})
+            jf = jax.jit(step, in_shardings=(state_sh, bshard),
+                         out_shardings=out_sh,
+                         donate_argnums=(0,) if donate else ())
+            lowered = jf.lower(state_sds, batch_sds)
+        elif shape.kind == "prefill":
+            psh = model.param_shardings()
+            psds = model.abstract_params()
+            cache_sh = ST.cache_shardings(model, B, S)
+            baxes = train_batch_axes(mesh, B)
+            rep = NamedSharding(mesh, P(baxes or None, None))
+            step = ST.make_prefill_step(model)
+            jf = jax.jit(step, in_shardings=(psh, bshard),
+                         out_shardings=(rep, cache_sh))
+            lowered = jf.lower(psds, batch_sds)
+        else:  # decode
+            psh = ST.serve_param_shardings(model, B)
+            psds = model.abstract_params()
+            cache_sh = ST.cache_shardings(model, B, S)
+            cache_sds = PM.abstract(model.cache_descs(B, S))
+            baxes, _ = decode_axes(mesh, B, S)
+            rep = NamedSharding(mesh, P(baxes or None, None))
+            step = ST.make_decode_step(model, S)
+            jf = jax.jit(step,
+                         in_shardings=(psh, bshard["token"], bshard["pos"],
+                                       cache_sh),
+                         out_shardings=(rep, cache_sh),
+                         donate_argnums=(3,) if donate else ())
+            lowered = jf.lower(psds, batch_sds["token"], batch_sds["pos"],
+                               cache_sds)
+    n_total, n_active = count_active_params(model)
+    meta = {"skipped": False, "arch": arch, "shape": shape_name,
+            "multi_pod": multi_pod, "devices": int(math.prod(
+                mesh.devices.shape)),
+            "params_total": n_total, "params_active": n_active}
+    return lowered, meta
+
+
+def analyze(lowered, meta, shape) -> Dict[str, Any]:
+    t0 = time.time()
+    compiled = lowered.compile()
+    compile_s = time.time() - t0
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis() or {}
+    hlo = compiled.as_text()
+    ana = analyze_hlo(hlo)          # trip-count-weighted (see hlo_analysis)
+    coll = {"bytes_per_kind": ana["collective_bytes"],
+            "counts": ana["collective_counts"],
+            "total": ana["collective_total"]}
+    flops_dev = float(ana["flops"])
+    bytes_dev = float(ana["bytes"])
+    coll_dev = float(coll["total"])
+    artifact = f32_artifact_bytes(hlo)
+    n_dev = meta["devices"]
+    compute_s = flops_dev / PEAK_FLOPS
+    memory_s = bytes_dev / HBM_BW
+    collective_s = coll_dev / ICI_BW
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": collective_s}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(get_config(meta["arch"]), shape, meta["params_active"])
+    hbm_used = int(mem.argument_size_in_bytes + mem.temp_size_in_bytes
+                   + mem.output_size_in_bytes - mem.alias_size_in_bytes)
+    result = {
+        **meta,
+        "compile_seconds": round(compile_s, 1),
+        "memory": {
+            "argument_bytes": int(mem.argument_size_in_bytes),
+            "output_bytes": int(mem.output_size_in_bytes),
+            "temp_bytes": int(mem.temp_size_in_bytes),
+            "alias_bytes": int(mem.alias_size_in_bytes),
+            "hbm_used_bytes": hbm_used,
+            "hbm_budget_bytes": HBM_BYTES,
+            "fits_hbm": bool(hbm_used <= HBM_BYTES),
+            "cpu_f32_artifact_bytes": int(artifact),
+            "fits_hbm_tpu_adjusted": bool(
+                max(hbm_used - artifact, 0) <= HBM_BYTES),
+        },
+        "cost": {"flops_per_device": flops_dev,
+                 "bytes_per_device": bytes_dev,
+                 "xla_cost_analysis_flops": float(cost.get("flops", 0.0)),
+                 "xla_cost_analysis_bytes": float(
+                     cost.get("bytes accessed", 0.0))},
+        "collectives": coll,
+        "roofline": {
+            **terms,
+            "dominant": dominant,
+            "step_time_lower_bound_s": max(terms.values()),
+            "model_flops_total": mf,
+            "hlo_flops_total": flops_dev * n_dev,
+            "useful_flops_ratio": (mf / (flops_dev * n_dev)
+                                   if flops_dev else 0.0),
+            "roofline_fraction": (mf / n_dev / PEAK_FLOPS)
+            / max(max(terms.values()), 1e-12),
+        },
+    }
+    return result
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             out_dir: Optional[str] = None) -> Dict[str, Any]:
+    shape = get_shape(shape_name)
+    lowered, meta = lower_cell(arch, shape_name, multi_pod)
+    if lowered is None:
+        res = {**meta, "arch": arch, "shape": shape_name,
+               "multi_pod": multi_pod}
+    else:
+        res = analyze(lowered, meta, shape)
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        tag = f"{arch}__{shape_name}__{'pod2' if multi_pod else 'pod1'}"
+        with open(os.path.join(out_dir, tag + ".json"), "w") as f:
+            json.dump(res, f, indent=1)
+    return res
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    cells = []
+    archs = list_archs() if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = ([False, True] if (args.both_meshes or args.all)
+              else [args.multi_pod])
+    for a in archs:
+        for s in shapes:
+            for mp in meshes:
+                cells.append((a, s, mp))
+
+    for a, s, mp in cells:
+        t0 = time.time()
+        try:
+            res = run_cell(a, s, mp, args.out)
+            if res.get("skipped"):
+                print(f"[dryrun] {a} {s} pod{2 if mp else 1}: SKIP "
+                      f"({res['reason']})", flush=True)
+                continue
+            r = res["roofline"]
+            m = res["memory"]
+            print(f"[dryrun] {a} {s} pod{2 if mp else 1}: OK "
+                  f"compile={res['compile_seconds']}s "
+                  f"hbm={m['hbm_used_bytes']/2**30:.2f}GiB "
+                  f"fits={m['fits_hbm']} "
+                  f"compute={r['compute_s']:.4f}s "
+                  f"mem={r['memory_s']:.4f}s coll={r['collective_s']:.4f}s "
+                  f"dom={r['dominant']} "
+                  f"roofline_frac={r['roofline_fraction']:.3f}", flush=True)
+        except Exception as e:  # noqa: BLE001 — sweep must survive a cell
+            print(f"[dryrun] {a} {s} pod{2 if mp else 1}: FAIL "
+                  f"{type(e).__name__}: {str(e)[:300]}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

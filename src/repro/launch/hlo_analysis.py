@@ -1,0 +1,234 @@
+"""Trip-count-aware HLO cost analysis.
+
+XLA's ``compiled.cost_analysis()`` counts while-loop bodies ONCE — under
+scan-over-layers that under-reports FLOPs by ~L× (verified empirically in
+EXPERIMENTS.md §Dry-run methodology). This module re-derives per-device
+costs from the optimized HLO text, weighting every computation by the
+``known_trip_count`` backend config of the while ops that call it:
+
+  * dot FLOPs       — 2 · |result| · |contracting dims| per dot
+  * HBM bytes       — Σ (operand + result bytes) of compute ops (post-fusion
+                      HLO materializes buffers between ops, so this is a
+                      first-order read+write traffic estimate)
+  * collective bytes — per kind (all-gather / all-reduce / reduce-scatter /
+                      all-to-all / collective-permute), result-shape sized
+  * cpu_f32_artifact_bytes — f32 buffers that are 2× copies of bf16 buffers
+                      (XLA:CPU upcasts bf16 dots; a TPU build would not) —
+                      reported so memory numbers can be read honestly.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict, List, Optional, Set, Tuple
+
+_DT_BYTES = {"f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1,
+             "f8e5m2": 1, "s64": 8, "u64": 8, "s32": 4, "u32": 4,
+             "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1}
+
+_COMP_RE = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->.*\{\s*$")
+_OP_RE = re.compile(r"^\s+(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(.*)$")
+_TYPE_RE = re.compile(r"^(\([^)]*\)|[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?)\s+"
+                      r"([\w\-]+)\(")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_TRIP_RE = re.compile(r'known_trip_count[^0-9]*(\d+)')
+_CALLEE_RE = re.compile(r"(?:calls|body|condition|to)=%?([\w\.\-]+)")
+_OPERAND_RE = re.compile(r"%([\w\.\-]+)")
+
+_SKIP_BYTES_OPS = {"parameter", "constant", "tuple", "get-tuple-element",
+                   "bitcast", "after-all", "partition-id", "replica-id",
+                   "iota"}
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _shape_list(type_str: str) -> List[Tuple[str, Tuple[int, ...]]]:
+    out = []
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt in _DT_BYTES:
+            out.append((dt, tuple(int(x) for x in dims.split(","))
+                        if dims else ()))
+    return out
+
+
+def _nbytes(shapes) -> int:
+    tot = 0
+    for dt, dims in shapes:
+        n = 1
+        for d in dims:
+            n *= d
+        tot += n * _DT_BYTES[dt]
+    return tot
+
+
+class Computation:
+    def __init__(self, name):
+        self.name = name
+        self.flops = 0.0
+        self.bytes = 0.0
+        self.coll = defaultdict(float)
+        self.coll_counts = defaultdict(float)
+        # (callee, weight, propagate_bytes) triples
+        self.calls: List[Tuple[str, float, bool]] = []
+        self.symtab: Dict[str, List] = {}
+
+
+def parse_hlo(text: str) -> Tuple[Dict[str, Computation], Optional[str]]:
+    comps: Dict[str, Computation] = {}
+    entry = None
+    cur: Optional[Computation] = None
+    for line in text.splitlines():
+        mc = _COMP_RE.match(line)
+        if mc:
+            cur = Computation(mc.group(2))
+            comps[cur.name] = cur
+            if mc.group(1):
+                entry = cur.name
+            continue
+        if line.startswith("}"):
+            cur = None
+            continue
+        if cur is None:
+            continue
+        mo = _OP_RE.match(line)
+        if not mo:
+            continue
+        name, rest = mo.groups()
+        mt = _TYPE_RE.match(rest)
+        if not mt:
+            continue
+        type_str, opcode = mt.groups()
+        shapes = _shape_list(type_str)
+        cur.symtab[name] = shapes
+        base = opcode.replace("-start", "")
+        # --- while / fusion / call children.
+        # Fusion internals never touch HBM (they are VMEM-resident), so
+        # their bytes are NOT propagated — only the fusion op's own
+        # operands/results count. FLOPs DO propagate through fusions
+        # (XLA:CPU wraps dots in fusions). While bodies are sequential
+        # programs: both flops and bytes propagate, weighted by trip count.
+        if opcode == "while":
+            trip = 1.0
+            m = _TRIP_RE.search(rest)
+            if m:
+                trip = float(m.group(1))
+            for cm in _CALLEE_RE.finditer(rest):
+                cur.calls.append((cm.group(1), trip, True))
+            continue
+        if opcode in ("call", "conditional"):
+            for cm in _CALLEE_RE.finditer(rest):
+                cur.calls.append((cm.group(1), 1.0, True))
+        elif opcode in ("fusion", "map", "reduce", "reduce-window", "sort",
+                        "scatter", "select-and-scatter"):
+            for cm in _CALLEE_RE.finditer(rest):
+                cur.calls.append((cm.group(1), 1.0, False))
+        # --- collectives
+        if base in _COLLECTIVES:
+            sizes = [_nbytes([s]) for s in shapes]
+            b = max(sizes) if ("-start" in opcode and len(sizes) > 1) \
+                else sum(sizes)
+            cur.coll[base] += b
+            cur.coll_counts[base] += 1
+        # --- dot flops
+        if opcode == "dot":
+            lhs_m = _OPERAND_RE.search(rest[rest.index("("):])
+            lhs_shapes = cur.symtab.get(lhs_m.group(1)) if lhs_m else None
+            cdims_m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", rest)
+            if lhs_shapes and cdims_m and shapes:
+                lhs = lhs_shapes[0][1]
+                contract = 1
+                for ix in cdims_m.group(1).split(","):
+                    if ix:
+                        contract *= lhs[int(ix)]
+                res_elems = 1
+                for d in shapes[0][1]:
+                    res_elems *= d
+                cur.flops += 2.0 * res_elems * contract
+        # --- bytes (op-specific: slicing reads only the slice; in-place
+        # dynamic-update-slice moves ~2x the update, not the target)
+        if opcode not in _SKIP_BYTES_OPS and opcode != "while":
+            if opcode in ("slice", "dynamic-slice", "gather",
+                          "dynamic-update-slice", "scatter", "pad",
+                          "broadcast", "reshape", "transpose", "copy",
+                          "convert"):
+                # result-proportional traffic (roughly read+write of the
+                # produced/updated bytes)
+                b = 2 * _nbytes(shapes)
+                if opcode in ("slice", "dynamic-slice", "gather"):
+                    b = 2 * _nbytes(shapes)
+                elif opcode == "dynamic-update-slice":
+                    # update operand (last-ish) dominates; approximate with
+                    # the smallest operand x2
+                    paren = rest[rest.index("("):] if "(" in rest else ""
+                    cut = paren.split(")")[0] if paren else ""
+                    ops = [_nbytes(cur.symtab[om.group(1)])
+                           for om in _OPERAND_RE.finditer(cut)
+                           if om.group(1) in cur.symtab]
+                    b = 2 * (min(ops) if ops else _nbytes(shapes))
+                cur.bytes += b
+            else:
+                b = _nbytes(shapes)
+                # operands resolvable in the same computation
+                paren = rest[rest.index("("):] if "(" in rest else ""
+                depth_cut = paren.split(")")[0] if paren else ""
+                for om in _OPERAND_RE.finditer(depth_cut):
+                    if om.group(1) in cur.symtab:
+                        b += _nbytes(cur.symtab[om.group(1)])
+                cur.bytes += b
+    return comps, entry
+
+
+def analyze_hlo(text: str) -> Dict:
+    comps, entry = parse_hlo(text)
+    memo: Dict[str, Tuple[float, float, Dict[str, float],
+                          Dict[str, float]]] = {}
+
+    def cost(name: str, stack: Set[str]):
+        if name in memo:
+            return memo[name]
+        c = comps.get(name)
+        if c is None or name in stack:
+            return 0.0, 0.0, {}, {}
+        stack = stack | {name}
+        fl, by = c.flops, c.bytes
+        coll = dict(c.coll)
+        cnts = dict(c.coll_counts)
+        for callee, w, prop_bytes in c.calls:
+            f2, b2, co2, cn2 = cost(callee, stack)
+            fl += w * f2
+            if prop_bytes:
+                by += w * b2
+            for k, v in co2.items():
+                coll[k] = coll.get(k, 0.0) + w * v
+            for k, v in cn2.items():
+                cnts[k] = cnts.get(k, 0.0) + w * v
+        memo[name] = (fl, by, coll, cnts)
+        return memo[name]
+
+    if entry is None:
+        return {"flops": 0.0, "bytes": 0.0, "collective_bytes": {},
+                "collective_counts": {}, "collective_total": 0.0}
+    fl, by, coll, cnts = cost(entry, set())
+    return {"flops": fl, "bytes": by, "collective_bytes": coll,
+            "collective_counts": cnts,
+            "collective_total": sum(coll.values())}
+
+
+def f32_artifact_bytes(text: str) -> int:
+    """Bytes of f32 buffers that mirror a bf16 buffer of identical dims —
+    the XLA:CPU bf16-upcast artifact (absent on TPU builds)."""
+    bf16 = set()
+    f32 = {}
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt == "bf16":
+            bf16.add(dims)
+        elif dt == "f32":
+            f32.setdefault(dims, 0)
+    tot = 0
+    for dims in f32:
+        if dims in bf16 and dims:
+            n = 1
+            for d in dims.split(","):
+                n *= int(d)
+            tot += 4 * n
+    return tot

@@ -1,0 +1,36 @@
+"""Mesh construction. Functions, never module-level constants — importing
+this module must not touch jax device state (the dry-run sets the fake
+device count before any jax initialization)."""
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh
+
+
+def _mk(shape, axes, devices=None) -> Mesh:
+    return jax.make_mesh(
+        shape, axes, devices=devices,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    """16x16 = 256 chips/pod; multi-pod adds the 2-pod axis (512 chips).
+
+    With 512 fake host devices the single-pod mesh uses the first 256."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    need = 512 if multi_pod else 256
+    devs = jax.devices()
+    devices = devs[:need] if len(devs) >= need else None
+    return _mk(shape, axes, devices)
+
+
+def make_local_mesh() -> Mesh:
+    """Single-host mesh over whatever devices exist (tests/examples)."""
+    n = len(jax.devices())
+    model = 1
+    for m in (4, 2, 1):
+        if n % m == 0:
+            model = m
+            break
+    return _mk((n // model, model), ("data", "model"))

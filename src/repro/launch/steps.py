@@ -1,0 +1,118 @@
+"""Step builders shared by train.py, dryrun.py, tests and benchmarks."""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, TrainConfig
+from repro.models import param as PM
+from repro.models.registry import Model, decode_axes, input_specs
+from repro.optim import adamw
+from repro.optim.schedule import lr_at
+
+Tree = Any
+
+
+# ------------------------------------------------------------- training ----
+
+def make_train_step(model: Model, tcfg: TrainConfig):
+    """(state, batch) -> (state, metrics); state = {"params", "opt"}."""
+    cfg = model.cfg
+
+    def loss_fn(params, batch):
+        return model.loss(params, batch)
+
+    def step(state, batch):
+        params, opt = state["params"], state["opt"]
+        if tcfg.grad_accum > 1:
+            a = tcfg.grad_accum
+
+            def micro(carry, mb):
+                l, g = jax.value_and_grad(loss_fn)(params, mb)
+                return (carry[0] + l,
+                        jax.tree.map(jnp.add, carry[1], g)), ()
+
+            zero = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                params)
+            mbs = jax.tree.map(
+                lambda x: x.reshape((a, x.shape[0] // a) + x.shape[1:]),
+                batch)
+            (loss, grads), _ = jax.lax.scan(micro, (0.0, zero), mbs)
+            loss = loss / a
+            grads = jax.tree.map(lambda g: g / a, grads)
+        else:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        lr = lr_at(opt.step, tcfg)
+        params, opt, gnorm = adamw.apply(params, grads, opt, tcfg, lr)
+        return ({"params": params, "opt": opt},
+                {"loss": loss, "gnorm": gnorm, "lr": lr})
+
+    return step
+
+
+def init_train_state(model: Model, tcfg: TrainConfig, key) -> Dict:
+    params = model.init(key)
+    opt = adamw.init(params, tcfg, model.cfg.opt_state_dtype)
+    return {"params": params, "opt": opt}
+
+
+def abstract_train_state(model: Model, tcfg: TrainConfig) -> Dict:
+    params = model.abstract_params()
+    opt = adamw.abstract_state(params, tcfg, model.cfg.opt_state_dtype)
+    return {"params": params, "opt": opt}
+
+
+def train_state_shardings(model: Model, tcfg: TrainConfig) -> Dict:
+    pshard = model.param_shardings()
+    rep = NamedSharding(model.mesh, P())
+    return {"params": pshard,
+            "opt": adamw.OptState(
+                step=rep,
+                mu=jax.tree.map(lambda s: s, pshard),
+                nu=jax.tree.map(lambda s: s, pshard))}
+
+
+# -------------------------------------------------------------- serving ----
+
+def cache_shardings(model: Model, batch: int, seq: int) -> Tree:
+    """Cache shardings consistent with decode_axes(batch, seq)."""
+    baxes, saxes = decode_axes(model.mesh, batch, seq)
+    rules = PM.default_rules(model.mesh)
+    r = dict(rules.rules)
+    r["batch"] = baxes
+    r["kv_seq"] = saxes
+    rules2 = PM.LogicalRules(rules=r,
+                             mesh_axis_sizes=rules.mesh_axis_sizes)
+    return PM.shardings(model.cache_descs(batch, seq), model.mesh, rules2)
+
+
+def serve_param_shardings(model: Model, batch: int) -> Tree:
+    """Decode-time parameter layout: MoE experts sharded over the wide EP
+    axes chosen by decode_ep_axes, so no per-layer FSDP weight gathers
+    (§Perf: deepseek-v3 decode hillclimb)."""
+    from repro.models import moe as M
+    rules = PM.default_rules(model.mesh)
+    if model.cfg.moe is not None:
+        ep = M.decode_ep_axes(model.cfg, model.mesh, batch)
+        r = dict(rules.rules)
+        r["experts"] = ep
+        rules = PM.LogicalRules(rules=r,
+                                mesh_axis_sizes=rules.mesh_axis_sizes)
+    return PM.shardings(model.param_descs(), model.mesh, rules)
+
+
+def make_decode_step(model: Model, cache_seq: int):
+    def step(params, token, pos, cache):
+        return model.decode(params, token, pos, cache, cache_seq)
+    return step
+
+
+def make_prefill_step(model: Model):
+    def step(params, batch):
+        return model.prefill(params, batch)
+    return step

@@ -1,0 +1,215 @@
+"""zamba2 hybrid assembly: Mamba2 trunk with shared full-attention blocks.
+
+Layers are grouped into segments of ``attn_every`` Mamba2 blocks followed by
+one shared attention+FFN block; the ``num_shared_blocks`` (2) weight sets
+alternate across segments (zamba2's per-invocation LoRA adapters are omitted —
+noted in DESIGN.md §11). The outer scan runs over segments, the inner scan
+over the Mamba2 layers of a segment, so HLO stays depth-independent.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as A
+from repro.models import layers as L
+from repro.models import ssm as S
+from repro.models.param import ParamDesc
+
+Tree = Any
+
+
+def _plan(cfg: ModelConfig) -> Tuple[int, int]:
+    k = cfg.hybrid.attn_every
+    assert cfg.num_layers % k == 0, "hybrid: num_layers % attn_every != 0"
+    return cfg.num_layers // k, k          # (num_segments, mamba per segment)
+
+
+def hybrid_descs(cfg: ModelConfig) -> Tree:
+    nseg, per = _plan(cfg)
+    mamba = L.stack_descs(L.stack_descs(
+        {"ln": L.rms_norm_descs(cfg.d_model, cfg.param_dtype),
+         "mamba": S.mamba2_descs(cfg)}, per), nseg)
+    shared = L.stack_descs(
+        {"ln1": L.rms_norm_descs(cfg.d_model, cfg.param_dtype),
+         "attn": A.attn_descs(cfg),
+         "ln2": L.rms_norm_descs(cfg.d_model, cfg.param_dtype),
+         "ffn": L.ffn_descs(cfg)}, cfg.hybrid.num_shared_blocks)
+    return {"embed": L.embed_descs(cfg),
+            "final_norm": L.rms_norm_descs(cfg.d_model, cfg.param_dtype),
+            "trunk": mamba, "shared": shared}
+
+
+def _select_shared(params_shared, seg_idx, n_blocks):
+    sel = seg_idx % n_blocks
+    return jax.tree.map(lambda a: a[sel], params_shared)
+
+
+def _shared_attn_train(sp, x, cfg, mesh, batch_axes):
+    h = L.rms_norm(sp["ln1"], x, cfg.norm_eps)
+    h = A.attn_train(sp["attn"], h, cfg, mesh=mesh, batch_axes=batch_axes)
+    x = x + h
+    h = L.rms_norm(sp["ln2"], x, cfg.norm_eps)
+    return x + L.ffn(sp["ffn"], h, cfg.act)
+
+
+def hybrid_hidden(params, batch, cfg: ModelConfig, mesh: Mesh, batch_axes):
+    nseg, per = _plan(cfg)
+    x = L.embed(params["embed"], batch["tokens"])
+
+    def seg_body(h, xs):
+        seg_params, seg_idx = xs
+
+        def mamba_body(hh, lp):
+            hh = hh + S.mamba2_train(lp["mamba"],
+                                     L.rms_norm(lp["ln"], hh, cfg.norm_eps),
+                                     cfg)
+            return hh, ()
+
+        inner = jax.checkpoint(mamba_body) if cfg.remat == "full" \
+            else mamba_body
+        h, _ = jax.lax.scan(inner, h, seg_params)
+        sp = _select_shared(params["shared"], seg_idx,
+                            cfg.hybrid.num_shared_blocks)
+        h = _shared_attn_train(sp, h, cfg, mesh, batch_axes)
+        return L.seq_shard(h, mesh, batch_axes), ()
+
+    body = jax.checkpoint(seg_body) if cfg.remat == "full" else seg_body
+    x, _ = jax.lax.scan(body, x, (params["trunk"], jnp.arange(nseg)))
+    return L.rms_norm(params["final_norm"], x, cfg.norm_eps)
+
+
+def hybrid_loss(params, batch, cfg, mesh, batch_axes):
+    x = hybrid_hidden(params, batch, cfg, mesh, batch_axes)
+    mask = batch.get("mask")
+    if mask is None:
+        mask = jnp.ones_like(batch["targets"], jnp.float32)
+    return L.chunked_ce_loss(params["embed"], x, batch["targets"], mask,
+                             cfg.tie_embeddings, cfg.loss_chunk,
+                             mesh, batch_axes)
+
+
+# -------------------------------------------------------------- caches -----
+
+def hybrid_cache_descs(cfg: ModelConfig, batch: int, seq: int) -> Tree:
+    """LIST of per-segment caches (1:1 donation aliasing — see lm.py)."""
+    nseg, per = _plan(cfg)
+    D = cfg.resolved_head_dim
+    seg = lambda: {
+        "mamba": L.stack_descs(S.mamba2_state_descs(cfg, batch), per),
+        "attn_k": ParamDesc((batch, seq, cfg.num_kv_heads, D), cfg.dtype,
+                            ("batch", "kv_seq", None, None), init="zeros"),
+        "attn_v": ParamDesc((batch, seq, cfg.num_kv_heads, D), cfg.dtype,
+                            ("batch", "kv_seq", None, None), init="zeros"),
+    }
+    return [seg() for _ in range(nseg)]
+
+
+def hybrid_prefill(params, batch, cfg, mesh, batch_axes):
+    """Prefill: run train-style forward but collect mamba final states and
+    attention K/V per segment."""
+    nseg, per = _plan(cfg)
+    x = L.embed(params["embed"], batch["tokens"])
+
+    def seg_body(h, xs):
+        seg_params, seg_idx = xs
+
+        def mamba_body(hh, lp):
+            hn = L.rms_norm(lp["ln"], hh, cfg.norm_eps)
+            s = cfg.ssm
+            Bsz, S_, d = hn.shape
+            d_inner = s.expand * d
+            H = d_inner // s.head_dim
+            z = L.linear(lp["mamba"]["in_z"], hn)
+            xin = L.linear(lp["mamba"]["in_x"], hn)
+            Bv = L.linear(lp["mamba"]["in_b"], hn)
+            Cv = L.linear(lp["mamba"]["in_c"], hn)
+            dtv = L.linear(lp["mamba"]["in_dt"], hn)
+            conv_x_state = xin.astype(jnp.float32)[:, -(s.conv_width - 1):]
+            conv_b_state = Bv.astype(jnp.float32)[:, -(s.conv_width - 1):]
+            conv_c_state = Cv.astype(jnp.float32)[:, -(s.conv_width - 1):]
+            xin = jax.nn.silu(S._causal_conv(xin, lp["mamba"]["conv_x"]["w"],
+                                             lp["mamba"]["conv_x"]["b"]))
+            Bv = jax.nn.silu(S._causal_conv(Bv, lp["mamba"]["conv_b"]["w"],
+                                            lp["mamba"]["conv_b"]["b"]))
+            Cv = jax.nn.silu(S._causal_conv(Cv, lp["mamba"]["conv_c"]["w"],
+                                            lp["mamba"]["conv_c"]["b"]))
+            dtv = jax.nn.softplus(dtv.astype(jnp.float32) +
+                                  lp["mamba"]["dt_bias"][None, None, :])
+            Av = -jnp.exp(lp["mamba"]["A_log"])
+            xh = xin.astype(jnp.float32).reshape(Bsz, S_, H, s.head_dim)
+            Bh = Bv.astype(jnp.float32).reshape(Bsz, S_, s.n_groups,
+                                                s.state_dim)
+            Ch = Cv.astype(jnp.float32).reshape(Bsz, S_, s.n_groups,
+                                                s.state_dim)
+            y, ssm_state = S.ssd_chunked(xh, dtv, Av, Bh, Ch,
+                                         lp["mamba"]["D"], s.chunk_size)
+            y = y.reshape(Bsz, S_, d_inner).astype(hn.dtype)
+            y = L.rms_norm(lp["mamba"]["norm"], y * jax.nn.silu(z),
+                           cfg.norm_eps)
+            hh = hh + L.linear(lp["mamba"]["out"], y)
+            st = {"ssm": ssm_state, "conv_x": conv_x_state,
+                  "conv_b": conv_b_state, "conv_c": conv_c_state}
+            return hh, st
+
+        h, mstates = jax.lax.scan(mamba_body, h, seg_params)
+        sp = _select_shared(params["shared"], seg_idx,
+                            cfg.hybrid.num_shared_blocks)
+        hn = L.rms_norm(sp["ln1"], h, cfg.norm_eps)
+        a, (k, v) = A.attn_train(sp["attn"], hn, cfg, return_kv=True)
+        h = h + a
+        hn = L.rms_norm(sp["ln2"], h, cfg.norm_eps)
+        h = h + L.ffn(sp["ffn"], hn, cfg.act)
+        return h, (mstates, k, v)
+
+    x, (mstates, ks, vs) = jax.lax.scan(
+        seg_body, x, (params["trunk"], jnp.arange(nseg)))
+    x = L.rms_norm(params["final_norm"], x, cfg.norm_eps)
+    logits = L.logits_fn(params["embed"], x[:, -1:, :],
+                         cfg.tie_embeddings)[:, 0]
+    cache = [{"mamba": jax.tree.map(lambda a: a[i], mstates),
+              "attn_k": ks[i], "attn_v": vs[i]} for i in range(nseg)]
+    return logits, cache
+
+
+def hybrid_decode(params, token, pos, cache, cfg, mesh, batch_axes,
+                  seq_axes):
+    nseg, per = _plan(cfg)
+    x = L.embed(params["embed"], token)
+
+    # unrolled over segments: per-segment cache leaves alias 1:1
+    new_cache = list(cache)
+    for seg in range(nseg):
+        seg_params = jax.tree.map(lambda a: a[seg], params["trunk"])
+        seg_cache = cache[seg]
+
+        def mamba_body(hh, xs2):
+            lp, st = xs2
+            y, st2 = S.mamba2_decode(lp["mamba"],
+                                     L.rms_norm(lp["ln"], hh, cfg.norm_eps),
+                                     cfg, st)
+            return hh + y, st2
+
+        x, new_mamba = jax.lax.scan(mamba_body, x,
+                                    (seg_params, seg_cache["mamba"]))
+        sp = jax.tree.map(
+            lambda a: a[seg % cfg.hybrid.num_shared_blocks],
+            params["shared"])
+        hn = L.rms_norm(sp["ln1"], x, cfg.norm_eps)
+        a, k_c, v_c = A.attn_decode(sp["attn"], hn, cfg,
+                                    seg_cache["attn_k"],
+                                    seg_cache["attn_v"], pos,
+                                    mesh=mesh, seq_axes=seq_axes,
+                                    batch_axes=batch_axes)
+        x = x + a
+        hn = L.rms_norm(sp["ln2"], x, cfg.norm_eps)
+        x = x + L.ffn(sp["ffn"], hn, cfg.act)
+        new_cache[seg] = {"mamba": new_mamba, "attn_k": k_c,
+                          "attn_v": v_c}
+    x = L.rms_norm(params["final_norm"], x, cfg.norm_eps)
+    logits = L.logits_fn(params["embed"], x, cfg.tie_embeddings)[:, 0]
+    return logits, new_cache

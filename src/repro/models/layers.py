@@ -1,0 +1,241 @@
+"""Shared building blocks: norms, rotary embeddings, gated FFNs, embeddings.
+
+All layers are pure functions over explicit param dicts; every layer also
+exposes a ``*_descs`` builder returning the matching ParamDesc tree. Large
+projection matrices are kept 2-D with the flattened (heads*head_dim) or ff
+dimension mapped to the "model" logical axis so the production mesh always
+divides them evenly (see DESIGN.md §4).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.param import ParamDesc, tree_map_descs
+
+Tree = Any
+
+
+def seq_shard(x: jax.Array, mesh, batch_axes) -> jax.Array:
+    """Sequence-parallel constraint on the residual stream (B, S, d):
+    shard S over "model" between blocks so remat stashes / loss chunks are
+    not replicated over the TP axis (Megatron-SP; DESIGN.md §4)."""
+    if mesh is None:
+        return x
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    m = sizes.get("model", 1)
+    if m == 1 or x.ndim < 3 or x.shape[1] % m or x.shape[1] < m * 8:
+        return x
+    from jax.sharding import NamedSharding
+    from jax.sharding import PartitionSpec as P
+    spec = P(batch_axes or None, "model", *([None] * (x.ndim - 2)))
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, spec))
+
+
+def head_shard(x: jax.Array, mesh, batch_axes) -> jax.Array:
+    """Tensor-parallel constraint on per-head tensors (B, S, H, D): shard H
+    over "model" so attention activations are not replicated on the TP
+    axis (pairs with seq_shard on the residual stream)."""
+    if mesh is None:
+        return x
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    m = sizes.get("model", 1)
+    if m == 1 or x.ndim != 4 or x.shape[2] % m:
+        return x
+    from jax.sharding import NamedSharding
+    from jax.sharding import PartitionSpec as P
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(batch_axes or None, None, "model", None)))
+
+
+def stack_descs(descs: Tree, n: int) -> Tree:
+    """Prepend a layer dimension (unsharded) to every leaf — for scan."""
+    return tree_map_descs(
+        lambda p, d: ParamDesc((n,) + d.shape, d.dtype, (None,) + tuple(
+            d.axes or (None,) * len(d.shape)), d.init, d.scale, d.const),
+        descs)
+
+
+# ---------------------------------------------------------------- norms ----
+
+def rms_norm_descs(dim: int, dtype: str) -> Tree:
+    return {"scale": ParamDesc((dim,), dtype, (None,), init="ones")}
+
+
+def rms_norm(params, x, eps: float = 1e-5):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * params["scale"].astype(jnp.float32)).astype(dtype)
+
+
+def layer_norm_descs(dim: int, dtype: str) -> Tree:
+    return {"scale": ParamDesc((dim,), dtype, (None,), init="ones"),
+            "bias": ParamDesc((dim,), dtype, (None,), init="zeros")}
+
+
+def layer_norm(params, x, eps: float = 1e-5):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    x = (x - mu) * jax.lax.rsqrt(var + eps)
+    out = x * params["scale"].astype(jnp.float32) + params["bias"].astype(
+        jnp.float32)
+    return out.astype(dtype)
+
+
+# --------------------------------------------------------------- linear ----
+
+def linear_descs(d_in: int, d_out: int, dtype: str, *, bias: bool = False,
+                 in_axis: Optional[str] = None, out_axis: Optional[str] = None,
+                 init: str = "normal", scale: float = 0.02) -> Tree:
+    t = {"w": ParamDesc((d_in, d_out), dtype, (in_axis, out_axis),
+                        init=init, scale=scale)}
+    if bias:
+        t["b"] = ParamDesc((d_out,), dtype, (out_axis,), init="zeros")
+    return t
+
+
+def linear(params, x):
+    y = x @ params["w"]
+    if "b" in params:
+        y = y + params["b"]
+    return y
+
+
+# --------------------------------------------------------------- rotary ----
+
+def rotary(positions: jax.Array, head_dim: int, theta: float,
+           dtype=jnp.float32) -> Tuple[jax.Array, jax.Array]:
+    """cos/sin tables for the given positions; positions: (...,)"""
+    half = head_dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * freqs   # (..., half)
+    return jnp.cos(ang).astype(dtype), jnp.sin(ang).astype(dtype)
+
+
+def apply_rotary(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x: (..., S, H, D); cos/sin: (S, D/2) or broadcastable (..., S, D/2)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    if cos.ndim == 2:                       # (S, half) -> (S, 1, half)
+        cos, sin = cos[:, None, :], sin[:, None, :]
+    else:                                   # (..., S, half)
+        cos, sin = cos[..., None, :], sin[..., None, :]
+    return jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1).astype(x.dtype)
+
+
+# ------------------------------------------------------------------ FFN ----
+
+def ffn_descs(cfg: ModelConfig, d_ff: Optional[int] = None) -> Tree:
+    d_ff = d_ff or cfg.d_ff
+    dt = cfg.param_dtype
+    if cfg.act == "gelu":                   # whisper: non-gated MLP w/ bias
+        return {"up": linear_descs(cfg.d_model, d_ff, dt, bias=True,
+                                   in_axis="embed", out_axis="model"),
+                "down": linear_descs(d_ff, cfg.d_model, dt, bias=True,
+                                     in_axis="model", out_axis="embed")}
+    return {"gate": linear_descs(cfg.d_model, d_ff, dt,
+                                 in_axis="embed", out_axis="model"),
+            "up": linear_descs(cfg.d_model, d_ff, dt,
+                               in_axis="embed", out_axis="model"),
+            "down": linear_descs(d_ff, cfg.d_model, dt,
+                                 in_axis="model", out_axis="embed")}
+
+
+def ffn(params, x, act: str = "silu"):
+    if "gate" in params:
+        h = jax.nn.silu(linear(params["gate"], x)) * linear(params["up"], x)
+    else:
+        h = jax.nn.gelu(linear(params["up"], x))
+    return linear(params["down"], h)
+
+
+# ------------------------------------------------------------ embedding ----
+
+def embed_descs(cfg: ModelConfig) -> Tree:
+    t = {"tok": ParamDesc((cfg.vocab_size, cfg.d_model), cfg.param_dtype,
+                          ("vocab", "embed"), init="embed")}
+    if not cfg.tie_embeddings:
+        t["unembed"] = ParamDesc((cfg.d_model, cfg.vocab_size),
+                                 cfg.param_dtype, ("embed", "vocab"),
+                                 init="normal")
+    return t
+
+
+def embed(params, tokens):
+    return params["tok"][tokens]            # GSPMD handles the sharded gather
+
+
+def logits_fn(embed_params, x, tie: bool):
+    w = embed_params["tok"].T if tie else embed_params["unembed"]
+    return x @ w
+
+
+# --------------------------------------------------- chunked cross entropy ----
+
+def chunked_ce_loss(embed_params, x, targets, mask, tie: bool,
+                    chunk: int, mesh=None, batch_axes=()) -> jax.Array:
+    """Cross-entropy over the vocab without materializing full (B,S,V).
+
+    x: (B, S, d) final hidden; targets: (B, S) int32; mask: (B, S) {0,1}.
+    Scans over sequence chunks; each chunk's logits stay sharded over
+    "model" on the SEQUENCE dim (seq_shard), so the fp32 logits transient
+    is (B_loc, chunk/TP, V) per device.
+    """
+    B, S, D = x.shape
+    chunk = min(chunk, S)
+    n = S // chunk
+    rem = S - n * chunk
+
+    V = (embed_params["tok"].shape[0] if tie
+         else embed_params["unembed"].shape[1])
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape)) if mesh else {}
+    m_sz = sizes.get("model", 1)
+    vocab_sharded = m_sz > 1 and V % m_sz == 0
+
+    def one(x_c, t_c, m_c):
+        if not vocab_sharded:
+            x_c = seq_shard(x_c, mesh, batch_axes)
+        lg = logits_fn(embed_params, x_c, tie).astype(jnp.float32)
+        if vocab_sharded:
+            # keep V sharded over "model": the unembed matrix is never
+            # gathered, the fp32 logits transient is (B, C, V/TP)
+            from jax.sharding import NamedSharding
+            from jax.sharding import PartitionSpec as P
+            lg = jax.lax.with_sharding_constraint(
+                lg, NamedSharding(mesh, P(batch_axes or None, None,
+                                          "model")))
+            onehot = jax.nn.one_hot(t_c, V, dtype=lg.dtype)
+            onehot = jax.lax.with_sharding_constraint(
+                onehot, NamedSharding(mesh, P(batch_axes or None, None,
+                                              "model")))
+            picked = jnp.einsum("bcv,bcv->bc", lg, onehot)
+        else:
+            picked = jnp.take_along_axis(lg, t_c[..., None],
+                                         axis=-1)[..., 0]
+        lse = jax.nn.logsumexp(lg, axis=-1)
+        return jnp.sum((lse - picked) * m_c), jnp.sum(m_c)
+
+    def body(carry, xs):
+        x_c, t_c, m_c = xs
+        l, c = one(x_c, t_c, m_c)
+        return (carry[0] + l, carry[1] + c), ()
+
+    xs = (x[:, :n * chunk].reshape(B, n, chunk, D).swapaxes(0, 1),
+          targets[:, :n * chunk].reshape(B, n, chunk).swapaxes(0, 1),
+          mask[:, :n * chunk].reshape(B, n, chunk).swapaxes(0, 1))
+    (tot, cnt), _ = jax.lax.scan(body, (jnp.zeros((), jnp.float32),
+                                        jnp.zeros((), jnp.float32)), xs)
+    if rem:
+        l, c = one(x[:, n * chunk:], targets[:, n * chunk:],
+                   mask[:, n * chunk:])
+        tot, cnt = tot + l, cnt + c
+    return tot / jnp.maximum(cnt, 1.0)

@@ -1,0 +1,281 @@
+"""Decoder-only LM assembly for the dense / vlm / moe families.
+
+Layer stacks are scanned (HLO size independent of depth); MoE models with a
+dense prefix (deepseek-v3: first 3 layers) use two scans. VLM/early-fusion
+models prepend stub patch embeddings to the token sequence. MTP (deepseek)
+adds one multi-token-prediction block on the train path.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as A
+from repro.models import layers as L
+from repro.models import moe as M
+from repro.models.param import ParamDesc
+
+Tree = Any
+
+
+# ------------------------------------------------------------- descs -------
+
+def block_descs(cfg: ModelConfig, kind: str) -> Tree:
+    """One transformer block. kind: "dense" | "moe"."""
+    t = {"ln1": L.rms_norm_descs(cfg.d_model, cfg.param_dtype),
+         "ln2": L.rms_norm_descs(cfg.d_model, cfg.param_dtype)}
+    t["attn"] = A.mla_descs(cfg) if cfg.mla else A.attn_descs(cfg)
+    if kind == "moe":
+        t["moe"] = M.moe_descs(cfg)
+    else:
+        d_ff = (cfg.moe.d_ff_dense if (cfg.moe and cfg.moe.d_ff_dense)
+                else cfg.d_ff)
+        t["ffn"] = L.ffn_descs(cfg, d_ff)
+    return t
+
+
+def _segments(cfg: ModelConfig):
+    """[(kind, n_layers)] — contiguous uniform stacks for scanning."""
+    if cfg.family == "moe":
+        nd = cfg.moe.first_moe_layer
+        seg = []
+        if nd:
+            seg.append(("dense", nd))
+        seg.append(("moe", cfg.num_layers - nd))
+        return seg
+    return [("dense", cfg.num_layers)]
+
+
+def lm_descs(cfg: ModelConfig) -> Tree:
+    t = {"embed": L.embed_descs(cfg),
+         "final_norm": L.rms_norm_descs(cfg.d_model, cfg.param_dtype)}
+    for i, (kind, n) in enumerate(_segments(cfg)):
+        t[f"stack_{i}_{kind}"] = L.stack_descs(block_descs(cfg, kind), n)
+    if cfg.mtp_depth:
+        t["mtp"] = {
+            "proj": L.linear_descs(2 * cfg.d_model, cfg.d_model,
+                                   cfg.param_dtype, in_axis="embed"),
+            "norm_h": L.rms_norm_descs(cfg.d_model, cfg.param_dtype),
+            "norm_e": L.rms_norm_descs(cfg.d_model, cfg.param_dtype),
+            "block": block_descs(cfg, "dense" if not cfg.moe else "moe"),
+        }
+    return t
+
+
+# ------------------------------------------------------------- blocks ------
+
+def block_train(params, x, cfg: ModelConfig, kind: str, mesh: Mesh,
+                batch_axes, q_offset: int = 0):
+    h = L.rms_norm(params["ln1"], x, cfg.norm_eps)
+    if cfg.mla:
+        h = A.mla_train(params["attn"], h, cfg, q_offset=q_offset,
+                        mesh=mesh, batch_axes=batch_axes)
+    else:
+        h = A.attn_train(params["attn"], h, cfg, q_offset=q_offset,
+                         mesh=mesh, batch_axes=batch_axes)
+    x = x + h
+    h = L.rms_norm(params["ln2"], x, cfg.norm_eps)
+    if kind == "moe":
+        h = M.moe_ffn(params["moe"], h, cfg, mesh, batch_axes)
+    else:
+        h = L.ffn(params["ffn"], h, cfg.act)
+    return L.seq_shard(x + h, mesh, batch_axes)
+
+
+def block_prefill(params, x, cfg, kind, mesh, batch_axes):
+    """Like train but returns the KV-cache contribution."""
+    h = L.rms_norm(params["ln1"], x, cfg.norm_eps)
+    if cfg.mla:
+        h, kv = A.mla_train(params["attn"], h, cfg, return_kv=True,
+                            mesh=mesh, batch_axes=batch_axes)
+    else:
+        h, kv = A.attn_train(params["attn"], h, cfg, return_kv=True,
+                             mesh=mesh, batch_axes=batch_axes)
+    x = x + h
+    h = L.rms_norm(params["ln2"], x, cfg.norm_eps)
+    if kind == "moe":
+        h = M.moe_ffn(params["moe"], h, cfg, mesh, batch_axes)
+    else:
+        h = L.ffn(params["ffn"], h, cfg.act)
+    return x + h, kv
+
+
+def block_decode(params, x, cfg, kind, mesh, batch_axes, seq_axes, cache,
+                 pos, ep_axes=("model",)):
+    h = L.rms_norm(params["ln1"], x, cfg.norm_eps)
+    if cfg.mla:
+        h, ckv, kr = A.mla_decode(params["attn"], h, cfg, cache["ckv"],
+                                  cache["kr"], pos, mesh=mesh,
+                                  seq_axes=seq_axes, batch_axes=batch_axes)
+        new_cache = {"ckv": ckv, "kr": kr}
+    else:
+        h, k, v = A.attn_decode(params["attn"], h, cfg, cache["k"],
+                                cache["v"], pos, mesh=mesh,
+                                seq_axes=seq_axes, batch_axes=batch_axes)
+        new_cache = {"k": k, "v": v}
+    x = x + h
+    h = L.rms_norm(params["ln2"], x, cfg.norm_eps)
+    if kind == "moe":
+        h = M.moe_ffn(params["moe"], h, cfg, mesh, batch_axes,
+                      ep_axes=ep_axes)
+    else:
+        h = L.ffn(params["ffn"], h, cfg.act)
+    return x + h, new_cache
+
+
+# ------------------------------------------------------------ assembly -----
+
+def _maybe_remat(fn, cfg):
+    return jax.checkpoint(fn) if cfg.remat == "full" else fn
+
+
+def _embed_input(params, batch, cfg: ModelConfig):
+    """Token embeddings, with VLM/early-fusion prefix if present."""
+    x = L.embed(params["embed"], batch["tokens"])
+    n_prefix = 0
+    if "patches" in batch and batch["patches"] is not None:
+        x = jnp.concatenate([batch["patches"].astype(x.dtype), x], axis=1)
+        n_prefix = batch["patches"].shape[1]
+    return x, n_prefix
+
+
+def lm_hidden(params, batch, cfg: ModelConfig, mesh: Mesh, batch_axes):
+    """Full forward to final hidden states (B, S_total, d)."""
+    x, n_prefix = _embed_input(params, batch, cfg)
+
+    for i, (kind, n) in enumerate(_segments(cfg)):
+        stack = params[f"stack_{i}_{kind}"]
+
+        def body(h, layer_params, _kind=kind):
+            h = block_train(layer_params, h, cfg, _kind, mesh, batch_axes)
+            return h, ()
+
+        x, _ = jax.lax.scan(_maybe_remat(body, cfg), x, stack)
+    x = L.rms_norm(params["final_norm"], x, cfg.norm_eps)
+    return x, n_prefix
+
+
+def lm_loss(params, batch, cfg: ModelConfig, mesh: Mesh, batch_axes):
+    x, n_prefix = lm_hidden(params, batch, cfg, mesh, batch_axes)
+    if n_prefix:
+        x = x[:, n_prefix:]
+    targets = batch["targets"]
+    mask = batch.get("mask")
+    if mask is None:
+        mask = jnp.ones_like(targets, jnp.float32)
+    loss = L.chunked_ce_loss(params["embed"], x, targets, mask,
+                             cfg.tie_embeddings, cfg.loss_chunk,
+                             mesh, batch_axes)
+    if cfg.mtp_depth and "mtp" in params:
+        loss = loss + 0.3 * _mtp_loss(params, x, batch, cfg, mesh,
+                                      batch_axes)
+    return loss
+
+
+def _mtp_loss(params, h, batch, cfg: ModelConfig, mesh, batch_axes):
+    """Single-depth multi-token prediction (deepseek-v3 §2.2): combine the
+    main-path hidden for position t with the embedding of token t+1 and
+    predict token t+2 through one extra block (shared embedding/head)."""
+    p = params["mtp"]
+    tokens, targets = batch["tokens"], batch["targets"]
+    B, S = tokens.shape
+    emb_next = L.embed(params["embed"], jnp.roll(tokens, -1, axis=1))
+    comb = jnp.concatenate([L.rms_norm(p["norm_h"], h, cfg.norm_eps),
+                            L.rms_norm(p["norm_e"], emb_next, cfg.norm_eps)],
+                           axis=-1)
+    x = L.linear(p["proj"], comb)
+    kind = "moe" if (cfg.moe and "moe" in p["block"]) else "dense"
+    x = block_train(p["block"], x, cfg, kind, mesh, batch_axes)
+    mtp_targets = jnp.roll(targets, -1, axis=1)
+    mask = batch.get("mask")
+    if mask is None:
+        mask = jnp.ones_like(targets, jnp.float32)
+    mask = mask * (jnp.arange(S)[None, :] < S - 1)
+    return L.chunked_ce_loss(params["embed"], x, mtp_targets, mask,
+                             cfg.tie_embeddings, cfg.loss_chunk,
+                             mesh, batch_axes)
+
+
+# -------------------------------------------------------------- caches -----
+
+def cache_descs(cfg: ModelConfig, batch: int, seq: int) -> Tree:
+    """The cache is a LIST of per-layer dicts: independent leaves donate/
+    alias 1:1 through jit (a stacked (L, ...) cache forces GSPMD remats or
+    scan-carry double-buffering — found the hard way, see EXPERIMENTS.md)."""
+    if cfg.mla:
+        m = cfg.mla
+        layer = lambda: {
+            "ckv": ParamDesc((batch, seq, m.kv_lora_rank), cfg.dtype,
+                             ("batch", "kv_seq", None), init="zeros"),
+            "kr": ParamDesc((batch, seq, m.qk_rope_head_dim), cfg.dtype,
+                            ("batch", "kv_seq", None), init="zeros")}
+    else:
+        D = cfg.resolved_head_dim
+        layer = lambda: {
+            "k": ParamDesc((batch, seq, cfg.num_kv_heads, D), cfg.dtype,
+                           ("batch", "kv_seq", None, None), init="zeros"),
+            "v": ParamDesc((batch, seq, cfg.num_kv_heads, D), cfg.dtype,
+                           ("batch", "kv_seq", None, None), init="zeros")}
+    return [layer() for _ in range(cfg.num_layers)]
+
+
+def lm_prefill(params, batch, cfg: ModelConfig, mesh: Mesh, batch_axes):
+    """Returns (last-token logits, cache stacked (L, B, S_total, ...))."""
+    x, n_prefix = _embed_input(params, batch, cfg)
+
+    caches = []
+    for i, (kind, n) in enumerate(_segments(cfg)):
+        stack = params[f"stack_{i}_{kind}"]
+
+        def body(h, layer_params, _kind=kind):
+            h, kv = block_prefill(layer_params, h, cfg, _kind, mesh,
+                                  batch_axes)
+            return h, kv
+
+        x, kv = jax.lax.scan(_maybe_remat(body, cfg), x, stack)
+        caches.append(kv)
+    x = L.rms_norm(params["final_norm"], x, cfg.norm_eps)
+    last = x[:, -1:, :]
+    logits = L.logits_fn(params["embed"], last, cfg.tie_embeddings)[:, 0]
+    names = ("ckv", "kr") if cfg.mla else ("k", "v")
+    cache = []
+    for stacked in caches:               # per segment: tuple of (n, B, ...)
+        n = stacked[0].shape[0]
+        for l in range(n):
+            cache.append({names[0]: stacked[0][l], names[1]: stacked[1][l]})
+    return logits, cache
+
+
+def lm_decode(params, token, pos, cache, cfg: ModelConfig, mesh: Mesh,
+              batch_axes, seq_axes):
+    """token: (B,1) i32; pos: (B,) i32; cache from cache_descs.
+
+    Returns (logits (B, V), cache')."""
+    x = L.embed(params["embed"], token)
+    off = 0
+    # Decode unrolls the layer loop over the per-layer cache list: each
+    # layer cache leaf is read once and written once, so donation aliases
+    # every buffer in place (stacked caches force GSPMD remats or scan
+    # double-buffering). Per-layer decode op count is tiny, so the
+    # unrolled HLO stays small.
+    new_cache = list(cache)
+    ep_axes = (M.decode_ep_axes(cfg, mesh, token.shape[0])
+               if cfg.moe else ("model",))
+    for i, (kind, n) in enumerate(_segments(cfg)):
+        stack = params[f"stack_{i}_{kind}"]
+        for l in range(n):
+            lp = jax.tree.map(lambda a: a[l], stack)
+            x, new_c = block_decode(lp, x, cfg, kind, mesh, batch_axes,
+                                    seq_axes, cache[off + l], pos,
+                                    ep_axes=ep_axes)
+            new_cache[off + l] = jax.tree.map(
+                lambda nc, c: nc.astype(c.dtype), new_c, cache[off + l])
+        off += n
+    x = L.rms_norm(params["final_norm"], x, cfg.norm_eps)
+    logits = L.logits_fn(params["embed"], x, cfg.tie_embeddings)[:, 0]
+    return logits, new_cache

@@ -1,0 +1,178 @@
+"""Parameter descriptors: single source of truth for shapes, dtypes, logical
+sharding axes and initializers.
+
+A model defines a pytree of ``ParamDesc``. From that one tree we derive:
+  * materialized random params        (``materialize``)
+  * abstract ShapeDtypeStructs        (``abstract``)      — for AOT dry-runs
+  * NamedSharding / PartitionSpec     (``partition_specs``)
+
+Logical axes are mapped to mesh axes by ``LogicalRules``; any mapping that
+does not divide the dimension evenly is DROPPED (replicated) because jit
+rejects unevenly sharded arguments.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+Tree = Any
+AxisName = Optional[str]
+
+
+@dataclass(frozen=True)
+class ParamDesc:
+    shape: Tuple[int, ...]
+    dtype: str = "bfloat16"
+    axes: Tuple[AxisName, ...] = ()
+    init: str = "normal"      # normal | zeros | ones | embed | const
+    scale: float = 0.02
+    const: float = 0.0
+
+    def __post_init__(self):
+        if self.axes and len(self.axes) != len(self.shape):
+            raise ValueError(f"axes {self.axes} rank != shape {self.shape}")
+
+
+def is_desc(x) -> bool:
+    return isinstance(x, ParamDesc)
+
+
+def _leaf_paths(tree: Tree, prefix=()):
+    if is_desc(tree):
+        yield prefix, tree
+    elif isinstance(tree, dict):
+        for k in sorted(tree):
+            yield from _leaf_paths(tree[k], prefix + (k,))
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            yield from _leaf_paths(v, prefix + (str(i),))
+    elif tree is None:
+        return
+    else:
+        raise TypeError(f"bad desc tree node {type(tree)}")
+
+
+def tree_map_descs(fn: Callable[[Tuple[str, ...], ParamDesc], Any],
+                   tree: Tree) -> Tree:
+    """Map over ParamDesc leaves preserving structure (dicts/lists/None)."""
+    def rec(node, prefix):
+        if is_desc(node):
+            return fn(prefix, node)
+        if isinstance(node, dict):
+            return {k: rec(v, prefix + (k,)) for k, v in node.items()}
+        if isinstance(node, (list, tuple)):
+            return type(node)(rec(v, prefix + (str(i),))
+                              for i, v in enumerate(node))
+        if node is None:
+            return None
+        raise TypeError(f"bad desc tree node {type(node)}")
+    return rec(tree, ())
+
+
+def _init_leaf(path: Tuple[str, ...], d: ParamDesc, root_key) -> jax.Array:
+    dtype = jnp.dtype(d.dtype)
+    if d.init == "zeros":
+        return jnp.zeros(d.shape, dtype)
+    if d.init == "ones":
+        return jnp.ones(d.shape, dtype)
+    if d.init == "const":
+        return jnp.full(d.shape, d.const, dtype)
+    # deterministic per-leaf key from the path
+    key = jax.random.fold_in(root_key, hash("/".join(path)) & 0x7FFFFFFF)
+    if d.init == "embed":
+        return (jax.random.normal(key, d.shape, jnp.float32) * d.scale
+                ).astype(dtype)
+    if d.init == "normal":
+        fan_in = d.shape[0] if len(d.shape) >= 2 else 1
+        scale = d.scale if d.scale else 1.0
+        w = jax.random.normal(key, d.shape, jnp.float32)
+        return (w * min(scale, 1.0 / np.sqrt(max(fan_in, 1)))).astype(dtype)
+    raise ValueError(f"unknown init {d.init}")
+
+
+def materialize(descs: Tree, key) -> Tree:
+    return tree_map_descs(lambda p, d: _init_leaf(p, d, key), descs)
+
+
+def abstract(descs: Tree) -> Tree:
+    return tree_map_descs(
+        lambda p, d: jax.ShapeDtypeStruct(d.shape, jnp.dtype(d.dtype)), descs)
+
+
+@dataclass(frozen=True)
+class LogicalRules:
+    """logical axis -> tuple of mesh axes (in order of preference)."""
+
+    rules: Dict[str, Tuple[str, ...]]
+    mesh_axis_sizes: Dict[str, int]
+
+    def spec_for(self, d: ParamDesc) -> P:
+        if not d.axes:
+            return P()
+        parts = []
+        used: set = set()
+        for dim, ax in zip(d.shape, d.axes):
+            if ax is None or ax not in self.rules:
+                parts.append(None)
+                continue
+            assigned = []
+            prod = 1
+            for mesh_ax in self.rules[ax]:
+                if mesh_ax in used or mesh_ax not in self.mesh_axis_sizes:
+                    continue
+                sz = self.mesh_axis_sizes[mesh_ax]
+                if dim % (prod * sz) == 0:
+                    assigned.append(mesh_ax)
+                    prod *= sz
+            used.update(assigned)
+            parts.append(tuple(assigned) if assigned else None)
+        # PartitionSpec with tuples for multi-axis dims
+        norm = [p[0] if (isinstance(p, tuple) and len(p) == 1) else p
+                for p in parts]
+        return P(*norm)
+
+
+def default_rules(mesh: Mesh) -> LogicalRules:
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    has_pod = "pod" in sizes
+    batch_axes = ("pod", "data") if has_pod else ("data",)
+    return LogicalRules(
+        rules={
+            "batch": batch_axes,
+            "embed": ("data", "pod"),     # FSDP dims for params (zero-3)
+            "embed_pod": ("pod", "data"),  # FSDP over pod too (XXL models)
+            "model": ("model",),           # TP dim (flattened heads*dim / ff)
+            "vocab": ("model",),
+            "experts": ("model",),
+            "kv_seq": ("model",),          # decode cache sequence sharding
+            "seq": (),                     # unsharded by default in train
+        },
+        mesh_axis_sizes=sizes,
+    )
+
+
+def partition_specs(descs: Tree, rules: LogicalRules) -> Tree:
+    return tree_map_descs(lambda p, d: rules.spec_for(d), descs)
+
+
+def shardings(descs: Tree, mesh: Mesh, rules: Optional[LogicalRules] = None
+              ) -> Tree:
+    rules = rules or default_rules(mesh)
+    return tree_map_descs(
+        lambda p, d: NamedSharding(mesh, rules.spec_for(d)), descs)
+
+
+def count_params(descs: Tree) -> int:
+    return sum(int(np.prod(d.shape)) for _, d in _leaf_paths(descs))
+
+
+def bytes_of(descs: Tree) -> int:
+    return sum(int(np.prod(d.shape)) * jnp.dtype(d.dtype).itemsize
+               for _, d in _leaf_paths(descs))

@@ -1,0 +1,199 @@
+"""Model registry: family dispatch + the public Model facade used by the
+launcher, dry-run, tests and benchmarks."""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.configs.shapes import ShapeConfig
+from repro.models import hybrid as HY
+from repro.models import lm as LM
+from repro.models import param as PM
+from repro.models import rwkv_lm as RW
+from repro.models import whisper as WH
+
+Tree = Any
+
+
+def _mesh_sizes(mesh: Mesh) -> Dict[str, int]:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def train_batch_axes(mesh: Mesh, global_batch: int) -> Tuple[str, ...]:
+    """Longest prefix of (pod, data) dividing the batch."""
+    sizes = _mesh_sizes(mesh)
+    axes = []
+    prod = 1
+    for ax in ("pod", "data"):
+        if ax in sizes and global_batch % (prod * sizes[ax]) == 0:
+            axes.append(ax)
+            prod *= sizes[ax]
+    return tuple(axes)
+
+
+def decode_axes(mesh: Mesh, batch: int, seq: int
+                ) -> Tuple[Tuple[str, ...], Tuple[str, ...]]:
+    """(batch_axes, seq_axes) for sequence-sharded decode caches."""
+    sizes = _mesh_sizes(mesh)
+    batch_axes = train_batch_axes(mesh, batch)
+    seq_axes = tuple(ax for ax in mesh.axis_names if ax not in batch_axes)
+    prod = math.prod(sizes[a] for a in seq_axes) if seq_axes else 1
+    if seq % prod:
+        # drop axes from the left until divisible (replicate over them)
+        while seq_axes and seq % math.prod(sizes[a] for a in seq_axes):
+            seq_axes = seq_axes[1:]
+    return batch_axes, seq_axes
+
+
+@dataclass
+class Model:
+    cfg: ModelConfig
+    mesh: Mesh
+
+    # ---- parameters -----------------------------------------------------
+    def param_descs(self) -> Tree:
+        fam = self.cfg.family
+        if fam in ("dense", "vlm", "moe"):
+            return LM.lm_descs(self.cfg)
+        if fam == "hybrid":
+            return HY.hybrid_descs(self.cfg)
+        if fam == "ssm":
+            return RW.rwkv_lm_descs(self.cfg)
+        if fam == "encdec":
+            return WH.whisper_descs(self.cfg)
+        raise ValueError(self.cfg.family)
+
+    def init(self, key) -> Tree:
+        return PM.materialize(self.param_descs(), key)
+
+    def abstract_params(self) -> Tree:
+        return PM.abstract(self.param_descs())
+
+    def param_shardings(self, rules: Optional[PM.LogicalRules] = None
+                        ) -> Tree:
+        return PM.shardings(self.param_descs(), self.mesh, rules)
+
+    # ---- training -------------------------------------------------------
+    def loss(self, params, batch) -> jax.Array:
+        fam = self.cfg.family
+        baxes = train_batch_axes(self.mesh, batch["tokens"].shape[0])
+        if fam in ("dense", "vlm", "moe"):
+            return LM.lm_loss(params, batch, self.cfg, self.mesh, baxes)
+        if fam == "hybrid":
+            return HY.hybrid_loss(params, batch, self.cfg, self.mesh, baxes)
+        if fam == "ssm":
+            return RW.rwkv_loss(params, batch, self.cfg, self.mesh, baxes)
+        if fam == "encdec":
+            return WH.whisper_loss(params, batch, self.cfg, self.mesh,
+                                   baxes)
+        raise ValueError(fam)
+
+    # ---- serving --------------------------------------------------------
+    def cache_descs(self, batch: int, seq: int) -> Tree:
+        fam = self.cfg.family
+        if fam in ("dense", "vlm", "moe"):
+            return LM.cache_descs(self.cfg, batch, seq)
+        if fam == "hybrid":
+            return HY.hybrid_cache_descs(self.cfg, batch, seq)
+        if fam == "ssm":
+            return RW.rwkv_cache_descs(self.cfg, batch, seq)
+        if fam == "encdec":
+            return WH.whisper_cache_descs(self.cfg, batch, seq)
+        raise ValueError(fam)
+
+    def prefill(self, params, batch) -> Tuple[jax.Array, Tree]:
+        fam = self.cfg.family
+        baxes = train_batch_axes(self.mesh, batch["tokens"].shape[0])
+        if fam in ("dense", "vlm", "moe"):
+            return LM.lm_prefill(params, batch, self.cfg, self.mesh, baxes)
+        if fam == "hybrid":
+            return HY.hybrid_prefill(params, batch, self.cfg, self.mesh,
+                                     baxes)
+        if fam == "ssm":
+            return RW.rwkv_prefill(params, batch, self.cfg, self.mesh,
+                                   baxes)
+        if fam == "encdec":
+            return WH.whisper_prefill(params, batch, self.cfg, self.mesh,
+                                      baxes)
+        raise ValueError(fam)
+
+    def decode(self, params, token, pos, cache, cache_seq: int
+               ) -> Tuple[jax.Array, Tree]:
+        fam = self.cfg.family
+        B = token.shape[0]
+        baxes, saxes = decode_axes(self.mesh, B, cache_seq)
+        if fam in ("dense", "vlm", "moe"):
+            return LM.lm_decode(params, token, pos, cache, self.cfg,
+                                self.mesh, baxes, saxes)
+        if fam == "hybrid":
+            return HY.hybrid_decode(params, token, pos, cache, self.cfg,
+                                    self.mesh, baxes, saxes)
+        if fam == "ssm":
+            return RW.rwkv_decode(params, token, pos, cache, self.cfg,
+                                  self.mesh, baxes, saxes)
+        if fam == "encdec":
+            return WH.whisper_decode(params, token, pos, cache, self.cfg,
+                                     self.mesh, baxes, saxes)
+        raise ValueError(fam)
+
+
+def get_model(cfg: ModelConfig, mesh: Mesh) -> Model:
+    return Model(cfg, mesh)
+
+
+# ------------------------------------------------------- input specs -------
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, jnp.dtype(dtype))
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh
+                ) -> Tuple[Dict[str, Any], Dict[str, P]]:
+    """ShapeDtypeStruct stand-ins + PartitionSpecs for every model input.
+
+    train/prefill: token batch (+ modality stubs); decode: single token +
+    position + cache (cache specs come from cache_descs via param machinery).
+    """
+    B, S = shape.global_batch, shape.seq_len
+    baxes = train_batch_axes(mesh, B) or None
+    d = cfg.d_model
+    if shape.kind == "train":
+        batch = {"tokens": _sds((B, S), "int32"),
+                 "targets": _sds((B, S), "int32"),
+                 "mask": _sds((B, S), "float32")}
+        specs = {"tokens": P(baxes, None), "targets": P(baxes, None),
+                 "mask": P(baxes, None)}
+        if cfg.family == "vlm":
+            np_ = cfg.vision.num_patches
+            batch["patches"] = _sds((B, np_, d), cfg.dtype)
+            specs["patches"] = P(baxes, None, None)
+        if cfg.family == "encdec":
+            f = cfg.encdec.num_frames
+            batch["frames"] = _sds((B, f, d), cfg.dtype)
+            specs["frames"] = P(baxes, None, None)
+        return batch, specs
+    if shape.kind == "prefill":
+        n_text = S - (cfg.vision.num_patches if cfg.family == "vlm" else 0)
+        batch = {"tokens": _sds((B, n_text), "int32")}
+        specs = {"tokens": P(baxes, None)}
+        if cfg.family == "vlm":
+            batch["patches"] = _sds((B, cfg.vision.num_patches, d),
+                                    cfg.dtype)
+            specs["patches"] = P(baxes, None, None)
+        if cfg.family == "encdec":
+            f = cfg.encdec.num_frames
+            batch["frames"] = _sds((B, f, d), cfg.dtype)
+            specs["frames"] = P(baxes, None, None)
+        return batch, specs
+    if shape.kind == "decode":
+        batch = {"token": _sds((B, 1), "int32"), "pos": _sds((B,), "int32")}
+        specs = {"token": P(baxes, None), "pos": P(baxes)}
+        return batch, specs
+    raise ValueError(shape.kind)

@@ -1,0 +1,235 @@
+"""RWKV6 (Finch) — attention-free time-mix with data-dependent decay.
+
+Training uses a chunked linear-attention form (factorized per-channel decay,
+fp32, clipped exponents); decode is the O(1) recurrence carrying a per-head
+(Dk, Dv) state plus the token-shift buffers. See arXiv:2404.05892.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models.param import ParamDesc
+
+Tree = Any
+LORA_R = 32          # decay / mixing LoRA rank (rwkv6-3b uses 32/64)
+MIX_R = 32
+CLIP = 60.0
+
+
+def rwkv6_descs(cfg: ModelConfig) -> Tree:
+    d = cfg.d_model
+    dt = cfg.param_dtype
+    D = cfg.resolved_head_dim
+    H = d // D
+    return {
+        "ln1": L.layer_norm_descs(d, dt),
+        "ln2": L.layer_norm_descs(d, dt),
+        "tm": {  # time mix
+            # base token-shift lerp coefficients for (w,k,v,r,g) + ddlerp
+            "maa_x": ParamDesc((d,), dt, (None,), init="zeros"),
+            "maa_wkvrg": ParamDesc((5, d), dt, (None, None), init="zeros"),
+            "maa_w1": ParamDesc((d, 5 * MIX_R), dt, ("embed", None),
+                                init="normal"),
+            "maa_w2": ParamDesc((5, MIX_R, d), dt, (None, None, "embed"),
+                                init="normal"),
+            "decay_base": ParamDesc((H, D), "float32", (None, None),
+                                    init="const", const=-4.0),
+            "decay_w1": ParamDesc((d, LORA_R), dt, ("embed", None),
+                                  init="normal"),
+            "decay_w2": ParamDesc((LORA_R, d), dt, (None, "embed"),
+                                  init="normal"),
+            "bonus": ParamDesc((H, D), "float32", (None, None),
+                               init="normal", scale=1.0),
+            "r": L.linear_descs(d, d, dt, in_axis="embed", out_axis="model"),
+            "k": L.linear_descs(d, d, dt, in_axis="embed", out_axis="model"),
+            "v": L.linear_descs(d, d, dt, in_axis="embed", out_axis="model"),
+            "g": L.linear_descs(d, d, dt, in_axis="embed", out_axis="model"),
+            "out": L.linear_descs(d, d, dt, in_axis="model",
+                                  out_axis="embed"),
+            "gn_scale": ParamDesc((d,), dt, (None,), init="ones"),
+            "gn_bias": ParamDesc((d,), dt, (None,), init="zeros"),
+        },
+        "cm": {  # channel mix
+            "maa_k": ParamDesc((d,), dt, (None,), init="zeros"),
+            "maa_r": ParamDesc((d,), dt, (None,), init="zeros"),
+            "k": L.linear_descs(d, cfg.d_ff, dt, in_axis="embed",
+                                out_axis="model"),
+            "v": L.linear_descs(cfg.d_ff, d, dt, in_axis="model",
+                                out_axis="embed"),
+            "r": L.linear_descs(d, d, dt, in_axis="embed", out_axis="model"),
+        },
+    }
+
+
+def _token_shift(x, prev):
+    """x: (B,S,d); prev: (B,d) last token of previous segment."""
+    return jnp.concatenate([prev[:, None, :], x[:, :-1, :]], axis=1)
+
+
+def _ddlerp(p, x, xs):
+    """Data-dependent lerp producing the 5 mixed inputs (w,k,v,r,g)."""
+    dx = xs - x
+    xx = x + dx * p["maa_x"][None, None, :]
+    a = jnp.tanh(xx @ p["maa_w1"])                     # (B,S,5R)
+    B_, S_, _ = a.shape
+    a = a.reshape(B_, S_, 5, MIX_R)
+    delta = jnp.einsum("bsfr,frd->bsfd", a, p["maa_w2"])
+    mix = p["maa_wkvrg"][None, None] + delta           # (B,S,5,d)
+    return x[:, :, None, :] + dx[:, :, None, :] * mix  # (B,S,5,d)
+
+
+def _group_norm(x, scale, bias, H, eps=64e-5):
+    """Per-head group norm over (B,T,H*D)."""
+    B_, T_, d = x.shape
+    xh = x.reshape(B_, T_, H, d // H).astype(jnp.float32)
+    mu = xh.mean(-1, keepdims=True)
+    var = ((xh - mu) ** 2).mean(-1, keepdims=True)
+    xh = (xh - mu) * jax.lax.rsqrt(var + eps)
+    return (xh.reshape(B_, T_, d) * scale + bias).astype(x.dtype)
+
+
+def wkv6_chunked(r, k, v, lw, u, chunk: int, state0=None):
+    """Chunked WKV. r,k,v: (B,S,H,D) f32; lw: (B,S,H,D) per-step log-decay
+    (<=0); u: (H,D) bonus. Returns (y (B,S,H,D), state (B,H,D,D))."""
+    B_, S_, H_, D_ = r.shape
+    K = min(chunk, S_)
+    while S_ % K:
+        K -= 1
+    nc = S_ // K
+
+    def resh(t):
+        return t.reshape(B_, nc, K, H_, D_).swapaxes(0, 1)
+
+    rc, kc, vc, lwc = resh(r), resh(k), resh(v), resh(lw)
+    cs = jnp.cumsum(lwc, axis=2)                       # inclusive
+    a = rc * jnp.exp(jnp.clip(cs - lwc, -CLIP, 0.0))   # r_t * exp(lw_{t-1})
+    b = kc * jnp.exp(jnp.clip(-cs, None, CLIP))        # k_s * exp(-lw_s)
+    kdec = kc * jnp.exp(jnp.clip(cs[:, :, -1:] - cs, -CLIP, 0.0))
+
+    def intra(args):
+        a_, b_, vc_, rc_, kc_ = args
+        sc = jnp.einsum("bthd,bshd->bhts", a_, b_)
+        mask = jnp.tril(jnp.ones((K, K), bool), k=-1)  # strict lower
+        sc = sc * mask[None, None]
+        y = jnp.einsum("bhts,bshd->bthd", sc, vc_)
+        # bonus (diagonal) term
+        y = y + jnp.einsum("bthd,bthd->bth", rc_ * u[None, None], kc_
+                           )[..., None] * vc_
+        return y
+
+    y_diag = jax.lax.map(intra, (a, b, vc, rc, kc))    # (nc,B,K,H,D)
+    S_chunks = jax.lax.map(
+        lambda t: jnp.einsum("bshd,bshe->bhde", t[0], t[1]), (kdec, vc))
+    chunk_decay = jnp.exp(jnp.clip(cs[:, :, -1], -CLIP, 0.0))  # (nc,B,H,D)
+
+    def scan_fn(S_prev, xs):
+        a_, Sc_, cd_ = xs
+        y_off = jnp.einsum("bthd,bhde->bthe", a_, S_prev)
+        S_new = S_prev * cd_[..., None] + Sc_
+        return S_new, y_off
+
+    S0 = (state0.astype(jnp.float32) if state0 is not None
+          else jnp.zeros((B_, H_, D_, D_), jnp.float32))
+    S_fin, y_off = jax.lax.scan(scan_fn, S0, (a, S_chunks, chunk_decay))
+    y = (y_diag + y_off).swapaxes(0, 1).reshape(B_, S_, H_, D_)
+    return y, S_fin
+
+
+def _tm_wkvrg(p, x, xs, cfg):
+    """Projections + decay for time-mix. Returns r,k,v,g,lw (B,S,H,D)."""
+    D = cfg.resolved_head_dim
+    H = cfg.d_model // D
+    B_, S_, _ = x.shape
+    mixed = _ddlerp(p, x, xs)                          # (B,S,5,d)
+    xw, xk, xv, xr, xg = [mixed[:, :, i] for i in range(5)]
+    r = L.linear(p["r"], xr).reshape(B_, S_, H, D).astype(jnp.float32)
+    k = L.linear(p["k"], xk).reshape(B_, S_, H, D).astype(jnp.float32)
+    v = L.linear(p["v"], xv).reshape(B_, S_, H, D).astype(jnp.float32)
+    g = jax.nn.silu(L.linear(p["g"], xg))
+    dec = p["decay_base"][None, None] + (
+        jnp.tanh(xw @ p["decay_w1"]) @ p["decay_w2"]).reshape(
+            B_, S_, H, D).astype(jnp.float32)
+    lw = -jnp.exp(jnp.clip(dec, -8.0, 8.0))            # log w <= 0
+    return r, k, v, g, lw
+
+
+def time_mix_train(p, x, cfg: ModelConfig, chunk: int):
+    """x: (B,S,d) normed input -> (B,S,d)."""
+    B_, S_, d = x.shape
+    D = cfg.resolved_head_dim
+    H = d // D
+    xs = _token_shift(x, jnp.zeros((B_, d), x.dtype))
+    r, k, v, g, lw = _tm_wkvrg(p, x, xs, cfg)
+    u = p["bonus"].astype(jnp.float32)
+    y, _ = wkv6_chunked(r, k, v, lw, u, chunk)
+    y = _group_norm(y.reshape(B_, S_, d).astype(x.dtype),
+                    p["gn_scale"], p["gn_bias"], H)
+    return L.linear(p["out"], y * g)
+
+
+def channel_mix_train(p, x, cfg: ModelConfig):
+    B_, S_, d = x.shape
+    xs = _token_shift(x, jnp.zeros((B_, d), x.dtype))
+    xk = x + (xs - x) * p["maa_k"][None, None]
+    xr = x + (xs - x) * p["maa_r"][None, None]
+    k = jnp.square(jax.nn.relu(L.linear(p["k"], xk)))
+    return jax.nn.sigmoid(L.linear(p["r"], xr)) * L.linear(p["v"], k)
+
+
+def rwkv6_state_descs(cfg: ModelConfig, batch: int) -> Tree:
+    d = cfg.d_model
+    D = cfg.resolved_head_dim
+    H = d // D
+    return {
+        "tm_x": ParamDesc((batch, d), "float32", ("batch", None),
+                          init="zeros"),
+        "cm_x": ParamDesc((batch, d), "float32", ("batch", None),
+                          init="zeros"),
+        "wkv": ParamDesc((batch, H, D, D), "float32",
+                         ("batch", None, None, None), init="zeros"),
+    }
+
+
+def rwkv6_block_train(params, x, cfg: ModelConfig):
+    h = x + time_mix_train(params["tm"], L.layer_norm(params["ln1"], x,
+                                                      cfg.norm_eps),
+                           cfg, cfg.ssm.chunk_size)
+    h = h + channel_mix_train(params["cm"], L.layer_norm(params["ln2"], h,
+                                                         cfg.norm_eps), cfg)
+    return h
+
+
+def rwkv6_block_decode(params, x, cfg: ModelConfig, state: Dict):
+    """x: (B,1,d); state from rwkv6_state_descs -> (y, state')."""
+    B_, _, d = x.shape
+    D = cfg.resolved_head_dim
+    H = d // D
+    xn = L.layer_norm(params["ln1"], x, cfg.norm_eps)
+    xs = state["tm_x"].astype(xn.dtype)[:, None, :]
+    p = params["tm"]
+    r, k, v, g, lw = _tm_wkvrg(p, xn, xs, cfg)
+    r, k, v, lw = r[:, 0], k[:, 0], v[:, 0], lw[:, 0]   # (B,H,D)
+    u = p["bonus"].astype(jnp.float32)
+    S = state["wkv"]                                    # (B,H,D,D)
+    kv = jnp.einsum("bhd,bhe->bhde", k, v)
+    y = jnp.einsum("bhd,bhde->bhe", r, S + u[None, :, :, None] * kv)
+    S = S * jnp.exp(lw)[..., None] + kv
+    y = _group_norm(y.reshape(B_, 1, d).astype(x.dtype),
+                    p["gn_scale"], p["gn_bias"], H)
+    h = x + L.linear(p["out"], y * g)
+    # channel mix
+    hn = L.layer_norm(params["ln2"], h, cfg.norm_eps)
+    cs = state["cm_x"].astype(hn.dtype)[:, None, :]
+    pc = params["cm"]
+    xk = hn + (cs - hn) * pc["maa_k"][None, None]
+    xr = hn + (cs - hn) * pc["maa_r"][None, None]
+    kk = jnp.square(jax.nn.relu(L.linear(pc["k"], xk)))
+    h = h + jax.nn.sigmoid(L.linear(pc["r"], xr)) * L.linear(pc["v"], kk)
+    new_state = {"tm_x": xn[:, 0].astype(jnp.float32),
+                 "cm_x": hn[:, 0].astype(jnp.float32), "wkv": S}
+    return h, new_state

@@ -1,0 +1,110 @@
+"""rwkv6-3b full-model assembly (attention-free)."""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import rwkv as R
+
+Tree = Any
+
+
+def rwkv_lm_descs(cfg: ModelConfig) -> Tree:
+    return {
+        "embed": L.embed_descs(cfg),
+        "ln0": L.layer_norm_descs(cfg.d_model, cfg.param_dtype),
+        "blocks": L.stack_descs(R.rwkv6_descs(cfg), cfg.num_layers),
+        "final_norm": L.layer_norm_descs(cfg.d_model, cfg.param_dtype),
+    }
+
+
+def rwkv_hidden(params, batch, cfg: ModelConfig, mesh=None,
+                batch_axes=()):
+    x = L.embed(params["embed"], batch["tokens"])
+    x = L.layer_norm(params["ln0"], x, cfg.norm_eps)
+
+    def body(h, lp):
+        return L.seq_shard(R.rwkv6_block_train(lp, h, cfg), mesh,
+                           batch_axes), ()
+
+    body = jax.checkpoint(body) if cfg.remat == "full" else body
+    x, _ = jax.lax.scan(body, x, params["blocks"])
+    return L.layer_norm(params["final_norm"], x, cfg.norm_eps)
+
+
+def rwkv_loss(params, batch, cfg: ModelConfig, mesh: Mesh, batch_axes):
+    x = rwkv_hidden(params, batch, cfg, mesh, batch_axes)
+    mask = batch.get("mask")
+    if mask is None:
+        mask = jnp.ones_like(batch["targets"], jnp.float32)
+    return L.chunked_ce_loss(params["embed"], x, batch["targets"], mask,
+                             cfg.tie_embeddings, cfg.loss_chunk,
+                             mesh, batch_axes)
+
+
+def rwkv_cache_descs(cfg: ModelConfig, batch: int, seq: int) -> Tree:
+    # seq is irrelevant: O(1) recurrent state (the long_500k enabler)
+    return L.stack_descs(R.rwkv6_state_descs(cfg, batch), cfg.num_layers)
+
+
+def rwkv_prefill(params, batch, cfg: ModelConfig, mesh: Mesh, batch_axes):
+    """Sequential-scan prefill producing the recurrent state.
+
+    Processes the prompt in train form per layer but carries states; for the
+    linear-attention family prefill == train forward + state collection.
+    """
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x = L.embed(params["embed"], tokens)
+    x = L.layer_norm(params["ln0"], x, cfg.norm_eps)
+
+    def body(h, lp):
+        # time mix with state capture
+        xn = L.layer_norm(lp["ln1"], h, cfg.norm_eps)
+        B_, S_, d = xn.shape
+        xs = R._token_shift(xn, jnp.zeros((B_, d), xn.dtype))
+        r, k, v, g, lw = R._tm_wkvrg(lp["tm"], xn, xs, cfg)
+        u = lp["tm"]["bonus"].astype(jnp.float32)
+        y, wkv_state = R.wkv6_chunked(r, k, v, lw, u, cfg.ssm.chunk_size)
+        H = d // cfg.resolved_head_dim
+        y = R._group_norm(y.reshape(B_, S_, d).astype(xn.dtype),
+                          lp["tm"]["gn_scale"], lp["tm"]["gn_bias"], H)
+        h = h + L.linear(lp["tm"]["out"], y * g)
+        tm_x = xn[:, -1].astype(jnp.float32)
+        # channel mix
+        hn = L.layer_norm(lp["ln2"], h, cfg.norm_eps)
+        cs = R._token_shift(hn, jnp.zeros((B_, d), hn.dtype))
+        pc = lp["cm"]
+        xk = hn + (cs - hn) * pc["maa_k"][None, None]
+        xr = hn + (cs - hn) * pc["maa_r"][None, None]
+        kk = jnp.square(jax.nn.relu(L.linear(pc["k"], xk)))
+        h = h + jax.nn.sigmoid(L.linear(pc["r"], xr)) * L.linear(pc["v"], kk)
+        cm_x = hn[:, -1].astype(jnp.float32)
+        return h, {"tm_x": tm_x, "cm_x": cm_x, "wkv": wkv_state}
+
+    x, states = jax.lax.scan(body, x, params["blocks"])
+    x = L.layer_norm(params["final_norm"], x, cfg.norm_eps)
+    logits = L.logits_fn(params["embed"], x[:, -1:, :],
+                         cfg.tie_embeddings)[:, 0]
+    return logits, states
+
+
+def rwkv_decode(params, token, pos, cache, cfg: ModelConfig, mesh: Mesh,
+                batch_axes, seq_axes):
+    x = L.embed(params["embed"], token)
+    x = L.layer_norm(params["ln0"], x, cfg.norm_eps)
+
+    def body(h, xs):
+        lp, st = xs
+        h, st2 = R.rwkv6_block_decode(lp, h, cfg, st)
+        return h, st2
+
+    x, new_states = jax.lax.scan(body, x, (params["blocks"], cache))
+    x = L.layer_norm(params["final_norm"], x, cfg.norm_eps)
+    logits = L.logits_fn(params["embed"], x, cfg.tie_embeddings)[:, 0]
+    return logits, new_states

@@ -1,0 +1,235 @@
+"""Mamba2 (SSD — state-space duality) blocks for the zamba2 hybrid.
+
+Chunked-scan training form (minimal-SSD): the sequence is split into chunks;
+within-chunk terms use a masked decay matmul, cross-chunk terms propagate an
+(H, P, N) state through a lax.scan. Decode is the O(1) recurrent update.
+State math runs in float32.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models.param import ParamDesc
+
+Tree = Any
+
+
+def mamba2_descs(cfg: ModelConfig) -> Tree:
+    s = cfg.ssm
+    dt = cfg.param_dtype
+    d = cfg.d_model
+    d_inner = s.expand * d
+    H = d_inner // s.head_dim
+    gn = s.n_groups * s.state_dim
+    return {
+        "in_z": L.linear_descs(d, d_inner, dt, in_axis="embed",
+                               out_axis="model"),
+        "in_x": L.linear_descs(d, d_inner, dt, in_axis="embed",
+                               out_axis="model"),
+        "in_b": L.linear_descs(d, gn, dt, in_axis="embed"),
+        "in_c": L.linear_descs(d, gn, dt, in_axis="embed"),
+        "in_dt": L.linear_descs(d, H, dt, in_axis="embed"),
+        "conv_x": {"w": ParamDesc((s.conv_width, d_inner), dt,
+                                  (None, "model"), init="normal", scale=0.5),
+                   "b": ParamDesc((d_inner,), dt, ("model",), init="zeros")},
+        "conv_b": {"w": ParamDesc((s.conv_width, gn), dt, (None, None),
+                                  init="normal", scale=0.5),
+                   "b": ParamDesc((gn,), dt, (None,), init="zeros")},
+        "conv_c": {"w": ParamDesc((s.conv_width, gn), dt, (None, None),
+                                  init="normal", scale=0.5),
+                   "b": ParamDesc((gn,), dt, (None,), init="zeros")},
+        "A_log": ParamDesc((H,), "float32", (None,), init="const", const=0.0),
+        "D": ParamDesc((H,), "float32", (None,), init="ones"),
+        "dt_bias": ParamDesc((H,), "float32", (None,), init="zeros"),
+        "norm": L.rms_norm_descs(d_inner, dt),
+        "out": L.linear_descs(d_inner, d, dt, in_axis="model",
+                              out_axis="embed"),
+    }
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv. x: (B,S,C); w: (W,C) -> (B,S,C)."""
+    W = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(W):                      # W is tiny (4): unrolled taps
+        out = out + xp[:, i:i + x.shape[1], :] * w[i][None, None, :]
+    return out + b[None, None, :]
+
+
+def _conv_step(x_t, conv_state, w, b):
+    """x_t: (B,C); conv_state: (B,W-1,C) last inputs -> (y (B,C), state')."""
+    full = jnp.concatenate([conv_state, x_t[:, None, :]], axis=1)  # (B,W,C)
+    y = jnp.einsum("bwc,wc->bc", full, w) + b[None, :]
+    return y, full[:, 1:, :]
+
+
+def ssd_chunked(x, dt, A, B, C, D, chunk: int,
+                state0: Optional[jax.Array] = None):
+    """SSD scan. x: (b,s,H,P) f32; dt: (b,s,H) f32 (already softplus'ed);
+    A: (H,) negative; B,C: (b,s,G,N). Returns (y (b,s,H,P), state (b,H,P,N)).
+    """
+    b, s, H, Pd = x.shape
+    G, N = B.shape[2], B.shape[3]
+    rep = H // G
+    K = min(chunk, s)
+    while s % K:
+        K -= 1
+    nc = s // K
+
+    def r(t, trail):                        # (b,s,...) -> (nc,b,K,...)
+        return t.reshape((b, nc, K) + trail).swapaxes(0, 1)
+
+    # B/C stay in GROUP form — expanding them to H heads with jnp.repeat
+    # costs (b,s,H,N) fp32 per tensor per layer (the zamba2 train_4k
+    # memory hillclimb, EXPERIMENTS.md §Perf); einsums broadcast groups.
+    xc, dtc = r(x, (H, Pd)), r(dt, (H,))
+    Bc, Cc = r(B, (G, N)), r(C, (G, N))
+    dA = dtc * A[None, None, None, :]       # (nc,b,K,H) <= 0
+    lw = jnp.cumsum(dA, axis=2)             # inclusive cumulative log-decay
+    xdt = xc * dtc[..., None]               # dt-weighted input
+
+    def heads_of(t_g):
+        """(..., G, N) group tensor -> broadcast view over heads."""
+        return jnp.repeat(t_g, rep, axis=-2) if rep > 1 and G > 1 else t_g
+
+    # intra-chunk: scores[t,s'] = C_t.B_s' * exp(lw_t - lw_s') for s'<=t
+    def intra(args):
+        Cc_, Bc_, lw_, xdt_ = args
+        # group-level score matrix (b,G,K,K) — NOT per-head
+        sc_g = jnp.einsum("bkgn,blgn->bgkl", Cc_, Bc_,
+                          preferred_element_type=jnp.float32)
+        dec = jnp.exp(jnp.clip(lw_[:, :, None, :] - lw_[:, None, :, :],
+                               -60.0, 0.0))          # (b,K,K,H)
+        mask = jnp.tril(jnp.ones((K, K), bool))
+        xh = xdt_.reshape(xdt_.shape[0], K, G, rep, Pd)
+        dech = dec.reshape(dec.shape[0], K, K, G, rep)
+        y = jnp.einsum("bgkl,bklgr,blgrp->bkgrp", sc_g,
+                       dech.transpose(0, 1, 2, 3, 4) * mask[None, :, :,
+                                                            None, None],
+                       xh)
+        return y.reshape(y.shape[0], K, H, Pd)
+
+    y_diag = jax.lax.map(intra, (Cc, Bc, lw, xdt))   # (nc,b,K,H,P)
+
+    # chunk states: S_c = sum_s exp(lw_last - lw_s) B_s xdt_s
+    decay_to_end = jnp.exp(jnp.clip(lw[:, :, -1:, :] - lw, -60.0, 0.0))
+
+    def chunk_state(a):
+        Bc_, xdt_dec = a                     # (b,K,G,N), (b,K,H,P) decayed
+        xh = xdt_dec.reshape(xdt_dec.shape[0], K, G, rep, Pd)
+        Sg = jnp.einsum("bkgn,bkgrp->bgrpn", Bc_, xh)
+        return Sg.reshape(Sg.shape[0], H, Pd, N)
+
+    S_chunks = jax.lax.map(
+        chunk_state, (Bc, xdt * decay_to_end[..., None]))  # (nc,b,H,P,N)
+    chunk_decay = jnp.exp(jnp.clip(lw[:, :, -1, :], -60.0, 0.0))  # (nc,b,H)
+
+    def scan_fn(S_prev, xs):
+        S_c_, cd_, Cc_, lw_ = xs
+        dec_h = jnp.exp(jnp.clip(lw_, -60.0, 0.0))        # (b,K,H)
+        Sg = S_prev.reshape(b, G, rep, Pd, N)
+        y_off = jnp.einsum("bkgn,bkgr,bgrpn->bkgrp", Cc_,
+                           dec_h.reshape(b, K, G, rep), Sg)
+        y_off = y_off.reshape(b, K, H, Pd)
+        S_new = S_prev * cd_[:, :, None, None] + S_c_
+        return S_new, y_off
+
+    S0 = (state0.astype(jnp.float32) if state0 is not None
+          else jnp.zeros((b, H, Pd, N), jnp.float32))
+    S_fin, y_off = jax.lax.scan(scan_fn, S0, (S_chunks, chunk_decay, Cc, lw))
+    y = y_diag + y_off                                # (nc,b,K,H,P)
+    y = y.swapaxes(0, 1).reshape(b, s, H, Pd)
+    y = y + x * D[None, None, :, None]
+    return y, S_fin
+
+
+def mamba2_train(params, x, cfg: ModelConfig):
+    """x: (B,S,d) -> (B,S,d)."""
+    s = cfg.ssm
+    Bsz, S, d = x.shape
+    d_inner = s.expand * d
+    H = d_inner // s.head_dim
+    z = L.linear(params["in_z"], x)
+    xin = L.linear(params["in_x"], x)
+    Bv = L.linear(params["in_b"], x)
+    Cv = L.linear(params["in_c"], x)
+    dt = L.linear(params["in_dt"], x)
+    xin = jax.nn.silu(_causal_conv(xin, params["conv_x"]["w"],
+                                   params["conv_x"]["b"]))
+    Bv = jax.nn.silu(_causal_conv(Bv, params["conv_b"]["w"],
+                                  params["conv_b"]["b"]))
+    Cv = jax.nn.silu(_causal_conv(Cv, params["conv_c"]["w"],
+                                  params["conv_c"]["b"]))
+    dt = jax.nn.softplus(dt.astype(jnp.float32) +
+                         params["dt_bias"][None, None, :])
+    A = -jnp.exp(params["A_log"])
+    xh = xin.astype(jnp.float32).reshape(Bsz, S, H, s.head_dim)
+    Bh = Bv.astype(jnp.float32).reshape(Bsz, S, s.n_groups, s.state_dim)
+    Ch = Cv.astype(jnp.float32).reshape(Bsz, S, s.n_groups, s.state_dim)
+    y, _ = ssd_chunked(xh, dt, A, Bh, Ch, params["D"], s.chunk_size)
+    y = y.reshape(Bsz, S, d_inner).astype(x.dtype)
+    y = L.rms_norm(params["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    return L.linear(params["out"], y)
+
+
+def mamba2_state_descs(cfg: ModelConfig, batch: int) -> Tree:
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    H = d_inner // s.head_dim
+    gn = s.n_groups * s.state_dim
+    W = s.conv_width
+    return {
+        "ssm": ParamDesc((batch, H, s.head_dim, s.state_dim), "float32",
+                         ("batch", None, None, None), init="zeros"),
+        "conv_x": ParamDesc((batch, W - 1, d_inner), "float32",
+                            ("batch", None, "model"), init="zeros"),
+        "conv_b": ParamDesc((batch, W - 1, gn), "float32",
+                            ("batch", None, None), init="zeros"),
+        "conv_c": ParamDesc((batch, W - 1, gn), "float32",
+                            ("batch", None, None), init="zeros"),
+    }
+
+
+def mamba2_decode(params, x, cfg: ModelConfig, state: Dict[str, jax.Array]):
+    """x: (B,1,d); state: dict from mamba2_state_descs -> (y, state')."""
+    s = cfg.ssm
+    Bsz, _, d = x.shape
+    d_inner = s.expand * d
+    H = d_inner // s.head_dim
+    xt = x[:, 0]
+    z = L.linear(params["in_z"], xt[:, None])[:, 0]
+    xin = L.linear(params["in_x"], xt[:, None])[:, 0]
+    Bv = L.linear(params["in_b"], xt[:, None])[:, 0]
+    Cv = L.linear(params["in_c"], xt[:, None])[:, 0]
+    dt = L.linear(params["in_dt"], xt[:, None])[:, 0]
+    xin, cx = _conv_step(xin.astype(jnp.float32),
+                         state["conv_x"], params["conv_x"]["w"].astype(
+                             jnp.float32), params["conv_x"]["b"].astype(
+                             jnp.float32))
+    Bv, cb = _conv_step(Bv.astype(jnp.float32), state["conv_b"],
+                        params["conv_b"]["w"].astype(jnp.float32),
+                        params["conv_b"]["b"].astype(jnp.float32))
+    Cv, cc = _conv_step(Cv.astype(jnp.float32), state["conv_c"],
+                        params["conv_c"]["w"].astype(jnp.float32),
+                        params["conv_c"]["b"].astype(jnp.float32))
+    xin, Bv, Cv = jax.nn.silu(xin), jax.nn.silu(Bv), jax.nn.silu(Cv)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"][None, :])
+    A = -jnp.exp(params["A_log"])                      # (H,)
+    xh = xin.reshape(Bsz, H, s.head_dim)
+    rep = H // s.n_groups
+    Bh = jnp.repeat(Bv.reshape(Bsz, s.n_groups, s.state_dim), rep, axis=1)
+    Ch = jnp.repeat(Cv.reshape(Bsz, s.n_groups, s.state_dim), rep, axis=1)
+    dA = jnp.exp(dt * A[None, :])                      # (B,H)
+    S = state["ssm"] * dA[:, :, None, None] + jnp.einsum(
+        "bhp,bhn->bhpn", xh * dt[..., None], Bh)
+    y = jnp.einsum("bhpn,bhn->bhp", S, Ch) + xh * params["D"][None, :, None]
+    y = y.reshape(Bsz, d_inner).astype(x.dtype)
+    y = L.rms_norm(params["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    y = L.linear(params["out"], y[:, None])
+    return y, {"ssm": S, "conv_x": cx, "conv_b": cb, "conv_c": cc}

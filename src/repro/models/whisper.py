@@ -1,0 +1,196 @@
+"""whisper-tiny encoder-decoder. The conv/mel frontend is a STUB: batches
+carry precomputed frame embeddings (B, F, d_model) — see input_specs().
+Pre-LN transformer with learned positions, GELU MLPs, cross-attention."""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as A
+from repro.models import layers as L
+from repro.models.param import ParamDesc
+
+Tree = Any
+
+
+def _enc_block_descs(cfg):
+    return {"ln1": L.layer_norm_descs(cfg.d_model, cfg.param_dtype),
+            "attn": A.attn_descs(cfg),
+            "ln2": L.layer_norm_descs(cfg.d_model, cfg.param_dtype),
+            "ffn": L.ffn_descs(cfg)}
+
+
+def _dec_block_descs(cfg):
+    t = _enc_block_descs(cfg)
+    t["ln_x"] = L.layer_norm_descs(cfg.d_model, cfg.param_dtype)
+    t["xattn"] = A.attn_descs(cfg)
+    return t
+
+
+def whisper_descs(cfg: ModelConfig) -> Tree:
+    e = cfg.encdec
+    return {
+        "embed": L.embed_descs(cfg),
+        "pos_dec": ParamDesc((4096 if cfg.vocab_size > 1000 else 64,
+                              cfg.d_model), cfg.param_dtype, (None, "embed"),
+                             init="embed"),
+        "pos_enc": ParamDesc((e.num_frames, cfg.d_model), cfg.param_dtype,
+                             (None, "embed"), init="embed"),
+        "encoder": L.stack_descs(_enc_block_descs(cfg), e.num_encoder_layers),
+        "enc_norm": L.layer_norm_descs(cfg.d_model, cfg.param_dtype),
+        "decoder": L.stack_descs(_dec_block_descs(cfg), cfg.num_layers),
+        "final_norm": L.layer_norm_descs(cfg.d_model, cfg.param_dtype),
+    }
+
+
+def encode(params, frames, cfg: ModelConfig):
+    """frames: (B, F, d) stub embeddings -> encoder states (B, F, d)."""
+    F = frames.shape[1]
+    x = frames + params["pos_enc"][None, :F]
+
+    def body(h, lp):
+        hn = L.layer_norm(lp["ln1"], h, cfg.norm_eps)
+        h = h + A.attn_train(lp["attn"], hn, cfg, causal=False, rope=False)
+        hn = L.layer_norm(lp["ln2"], h, cfg.norm_eps)
+        h = h + L.ffn(lp["ffn"], hn, cfg.act)
+        return h, ()
+
+    x, _ = jax.lax.scan(body, x, params["encoder"])
+    return L.layer_norm(params["enc_norm"], x, cfg.norm_eps)
+
+
+def _dec_positions(params, tokens, offset=0):
+    S = tokens.shape[1]
+    pos_table = params["pos_dec"]
+    idx = jnp.clip(offset + jnp.arange(S), 0, pos_table.shape[0] - 1)
+    return pos_table[idx]
+
+
+def _cross_kv(lp, enc, cfg):
+    B, F, _ = enc.shape
+    D = cfg.resolved_head_dim
+    k = L.linear(lp["xattn"]["k"], enc).reshape(B, F, cfg.num_kv_heads, D)
+    v = L.linear(lp["xattn"]["v"], enc).reshape(B, F, cfg.num_kv_heads, D)
+    return k, v
+
+
+def _cross_attend(lp, h, xk, xv, cfg):
+    B, S, _ = h.shape
+    D = cfg.resolved_head_dim
+    q = L.linear(lp["xattn"]["q"], h).reshape(B, S, cfg.num_heads, D)
+    o = A.full_attention(q, xk, xv)
+    return L.linear(lp["xattn"]["o"], o.reshape(B, S, -1))
+
+
+def decoder_hidden(params, tokens, enc, cfg: ModelConfig, mesh=None,
+                   batch_axes=()):
+    x = L.embed(params["embed"], tokens) + _dec_positions(params, tokens)
+
+    def body(h, lp):
+        hn = L.layer_norm(lp["ln1"], h, cfg.norm_eps)
+        h = h + A.attn_train(lp["attn"], hn, cfg, causal=True, rope=False)
+        hn = L.layer_norm(lp["ln_x"], h, cfg.norm_eps)
+        xk, xv = _cross_kv(lp, enc, cfg)
+        h = h + _cross_attend(lp, hn, xk, xv, cfg)
+        hn = L.layer_norm(lp["ln2"], h, cfg.norm_eps)
+        h = h + L.ffn(lp["ffn"], hn, cfg.act)
+        return L.seq_shard(h, mesh, batch_axes), ()
+
+    body = jax.checkpoint(body) if cfg.remat == "full" else body
+    x, _ = jax.lax.scan(body, x, params["decoder"])
+    return L.layer_norm(params["final_norm"], x, cfg.norm_eps)
+
+
+def whisper_loss(params, batch, cfg: ModelConfig, mesh: Mesh, batch_axes):
+    enc = encode(params, batch["frames"], cfg)
+    x = decoder_hidden(params, batch["tokens"], enc, cfg, mesh, batch_axes)
+    mask = batch.get("mask")
+    if mask is None:
+        mask = jnp.ones_like(batch["targets"], jnp.float32)
+    return L.chunked_ce_loss(params["embed"], x, batch["targets"], mask,
+                             cfg.tie_embeddings, cfg.loss_chunk,
+                             mesh, batch_axes)
+
+
+def whisper_cache_descs(cfg: ModelConfig, batch: int, seq: int) -> Tree:
+    """LIST of per-layer caches (1:1 donation aliasing — see lm.py)."""
+    D = cfg.resolved_head_dim
+    F = cfg.encdec.num_frames
+    kv = lambda s: ParamDesc((batch, s, cfg.num_kv_heads, D), cfg.dtype,
+                             ("batch", "kv_seq", None, None), init="zeros")
+    xkv = lambda: ParamDesc((batch, F, cfg.num_kv_heads, D), cfg.dtype,
+                            ("batch", None, None, None), init="zeros")
+    return [{"k": kv(seq), "v": kv(seq), "xk": xkv(), "xv": xkv()}
+            for _ in range(cfg.num_layers)]
+
+
+def whisper_prefill(params, batch, cfg: ModelConfig, mesh: Mesh,
+                    batch_axes):
+    """Encode audio + run decoder over the prompt, building all caches."""
+    enc = encode(params, batch["frames"], cfg)
+    tokens = batch["tokens"]
+    x = L.embed(params["embed"], tokens) + _dec_positions(params, tokens)
+
+    def body(h, lp):
+        hn = L.layer_norm(lp["ln1"], h, cfg.norm_eps)
+        a, (k, v) = A.attn_train(lp["attn"], hn, cfg, causal=True,
+                                 return_kv=True, rope=False)
+        h = h + a
+        hn = L.layer_norm(lp["ln_x"], h, cfg.norm_eps)
+        xk, xv = _cross_kv(lp, enc, cfg)
+        h = h + _cross_attend(lp, hn, xk, xv, cfg)
+        hn = L.layer_norm(lp["ln2"], h, cfg.norm_eps)
+        h = h + L.ffn(lp["ffn"], hn, cfg.act)
+        return h, (k, v, xk, xv)
+
+    x, (ks, vs, xks, xvs) = jax.lax.scan(body, x, params["decoder"])
+    x = L.layer_norm(params["final_norm"], x, cfg.norm_eps)
+    logits = L.logits_fn(params["embed"], x[:, -1:, :],
+                         cfg.tie_embeddings)[:, 0]
+    cache = [{"k": ks[i], "v": vs[i], "xk": xks[i], "xv": xvs[i]}
+             for i in range(cfg.num_layers)]
+    return logits, cache
+
+
+def whisper_decode(params, token, pos, cache, cfg: ModelConfig, mesh: Mesh,
+                   batch_axes, seq_axes):
+    pos_table = params["pos_dec"]
+    x = L.embed(params["embed"], token) + pos_table[
+        jnp.clip(pos, 0, pos_table.shape[0] - 1)][:, None, :]
+
+    new_cache = list(cache)
+    for l in range(cfg.num_layers):
+        lp = jax.tree.map(lambda a: a[l], params["decoder"])
+        lc = cache[l]
+        hn = L.layer_norm(lp["ln1"], x, cfg.norm_eps)
+        B = hn.shape[0]
+        D = cfg.resolved_head_dim
+        q = L.linear(lp["attn"]["q"], hn).reshape(B, 1, cfg.num_heads, D)
+        k = L.linear(lp["attn"]["k"], hn).reshape(B, 1, cfg.num_kv_heads, D)
+        v = L.linear(lp["attn"]["v"], hn).reshape(B, 1, cfg.num_kv_heads, D)
+        out, k_c, v_c = A.flash_decode(
+            q[:, 0], lc["k"], lc["v"], k[:, 0], v[:, 0], pos, mesh=mesh,
+            seq_axes=seq_axes, batch_axes=batch_axes)
+        x = x + L.linear(lp["attn"]["o"], out.reshape(B, 1, -1))
+        hn = L.layer_norm(lp["ln_x"], x, cfg.norm_eps)
+        x = x + _cross_attend_cached(lp, hn, lc["xk"], lc["xv"], cfg)
+        hn = L.layer_norm(lp["ln2"], x, cfg.norm_eps)
+        x = x + L.ffn(lp["ffn"], hn, cfg.act)
+        new_cache[l] = {"k": k_c.astype(lc["k"].dtype),
+                        "v": v_c.astype(lc["v"].dtype),
+                        "xk": lc["xk"], "xv": lc["xv"]}
+    x = L.layer_norm(params["final_norm"], x, cfg.norm_eps)
+    logits = L.logits_fn(params["embed"], x, cfg.tie_embeddings)[:, 0]
+    return logits, new_cache
+
+
+def _cross_attend_cached(lp, h, xk, xv, cfg):
+    B, S, _ = h.shape
+    D = cfg.resolved_head_dim
+    q = L.linear(lp["xattn"]["q"], h).reshape(B, S, cfg.num_heads, D)
+    o = A.full_attention(q, xk, xv)
+    return L.linear(lp["xattn"]["o"], o.reshape(B, S, -1))

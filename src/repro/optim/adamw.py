@@ -1,0 +1,79 @@
+"""AdamW with decoupled weight decay, global-norm clipping, and a
+configurable optimizer-state dtype (bf16 moments let 671B-class models fit
+the 16 GB/chip HBM budget — see configs/deepseek_v3_671b.py).
+
+Pure pytree functions; state shardings mirror the parameter shardings so
+FSDP semantics fall out of GSPMD for free.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import TrainConfig
+
+Tree = Any
+
+
+class OptState(NamedTuple):
+    step: jax.Array
+    mu: Tree
+    nu: Tree
+
+
+def init(params: Tree, cfg: TrainConfig, state_dtype: str = "float32"
+         ) -> OptState:
+    dt = jnp.dtype(state_dtype)
+    z = lambda p: jnp.zeros(p.shape, dt)
+    return OptState(step=jnp.zeros((), jnp.int32),
+                    mu=jax.tree.map(z, params),
+                    nu=jax.tree.map(z, params))
+
+
+def abstract_state(params: Tree, cfg: TrainConfig,
+                   state_dtype: str = "float32") -> OptState:
+    dt = jnp.dtype(state_dtype)
+    z = lambda p: jax.ShapeDtypeStruct(p.shape, dt)
+    return OptState(step=jax.ShapeDtypeStruct((), jnp.int32),
+                    mu=jax.tree.map(z, params), nu=jax.tree.map(z, params))
+
+
+def clip_by_global_norm(grads: Tree, max_norm: float) -> Tuple[Tree,
+                                                               jax.Array]:
+    sq = sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+             for g in jax.tree.leaves(grads))
+    norm = jnp.sqrt(sq)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale
+                                   ).astype(g.dtype), grads), norm
+
+
+def apply(params: Tree, grads: Tree, opt: OptState, cfg: TrainConfig,
+          lr: jax.Array) -> Tuple[Tree, OptState, jax.Array]:
+    grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    step = opt.step + 1
+    b1, b2 = cfg.beta1, cfg.beta2
+    c1 = 1.0 - b1 ** step.astype(jnp.float32)
+    c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g32 = g.astype(jnp.float32)
+        m32 = m.astype(jnp.float32) * b1 + (1 - b1) * g32
+        v32 = v.astype(jnp.float32) * b2 + (1 - b2) * g32 * g32
+        mh = m32 / c1
+        vh = v32 / c2
+        delta = mh / (jnp.sqrt(vh) + cfg.eps) + cfg.weight_decay * \
+            p.astype(jnp.float32)
+        p2 = p.astype(jnp.float32) - lr * delta
+        return p2.astype(p.dtype), m32.astype(m.dtype), v32.astype(v.dtype)
+
+    out = jax.tree.map(upd, params, grads, opt.mu, opt.nu)
+    new_params = jax.tree.map(lambda t: t[0], out,
+                              is_leaf=lambda t: isinstance(t, tuple))
+    new_mu = jax.tree.map(lambda t: t[1], out,
+                          is_leaf=lambda t: isinstance(t, tuple))
+    new_nu = jax.tree.map(lambda t: t[2], out,
+                          is_leaf=lambda t: isinstance(t, tuple))
+    return new_params, OptState(step, new_mu, new_nu), gnorm

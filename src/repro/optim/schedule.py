@@ -1,0 +1,17 @@
+"""LR schedules: linear warmup + cosine decay (the framework default)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.configs.base import TrainConfig
+
+
+def lr_at(step, cfg: TrainConfig):
+    step = jnp.asarray(step, jnp.float32)
+    warm = cfg.learning_rate * jnp.minimum(step / max(cfg.warmup_steps, 1),
+                                           1.0)
+    t = jnp.clip((step - cfg.warmup_steps)
+                 / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+    return jnp.where(step < cfg.warmup_steps, warm,
+                     cfg.learning_rate * (0.1 + 0.9 * cos))

@@ -1,0 +1,22 @@
+import os
+import sys
+
+# tests must see ONE device (the dry-run sets its own flag in-process)
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+import pytest  # noqa: E402
+
+
+@pytest.fixture(scope="session")
+def mesh():
+    return jax.make_mesh(
+        (1, 1), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+@pytest.fixture()
+def rng():
+    return np.random.default_rng(0)

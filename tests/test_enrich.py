@@ -1,0 +1,44 @@
+"""Derived-feature math: moment identities on exact inputs."""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_dfa_config
+from repro.core import enrich as E
+
+
+def test_entry_features_moment_identities():
+    # synthetic exact sums for x = [2, 4, 6]: n=3, S1=12, S2=56, S3=288
+    xs = np.array([2.0, 4.0, 6.0])
+    ps = np.array([100.0, 200.0, 300.0])
+    stats = jnp.asarray([[3, xs.sum(), (xs**2).sum(), (xs**3).sum(),
+                          ps.sum(), (ps**2).sum(), (ps**3).sum()]],
+                        jnp.uint32)
+    f = np.asarray(E.entry_features(stats))[0]
+    assert f[0] == 3
+    np.testing.assert_allclose(f[1], xs.mean(), rtol=1e-6)        # iat mean
+    np.testing.assert_allclose(f[2], xs.var(), rtol=1e-5)         # iat var
+    np.testing.assert_allclose(f[3], xs.std(), rtol=1e-5)
+    np.testing.assert_allclose(f[4], xs.std() / xs.mean(), rtol=1e-5)
+    np.testing.assert_allclose(f[6], ps.mean(), rtol=1e-6)        # ps mean
+    np.testing.assert_allclose(f[11], ps.sum(), rtol=1e-6)        # volume
+    # skewness of a symmetric sample is ~0
+    m3 = ((xs - xs.mean()) ** 3).mean()
+    np.testing.assert_allclose(f[5], m3 / xs.std() ** 3, atol=1e-4)
+
+
+def test_derive_ref_dims_and_masking():
+    cfg = get_dfa_config(reduced=True)
+    F, H = 8, cfg.history
+    mem = np.zeros((F, H, 16), np.uint32)
+    mem[0, 0, 1:8] = [5, 50, 600, 8000, 500, 60000, 7000000]
+    valid = np.zeros((F, H), bool)
+    valid[0, 0] = True
+    out = np.asarray(E.derive_ref(jnp.asarray(mem), jnp.asarray(valid),
+                                  cfg))
+    assert out.shape == (F, cfg.derived_dim)
+    assert np.isfinite(out).all()
+    # invalid flows contribute nothing (nvalid column is clamped to >= 1)
+    nvalid_col = 4 * E.PER_ENTRY
+    masked = np.delete(out[1:], nvalid_col, axis=1)
+    assert (masked == 0).all()
+    assert out[0, 0] == 5                # count survives the window mean

@@ -1,0 +1,120 @@
+"""Per-kernel shape/dtype sweeps vs the pure-jnp oracles (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_dfa_config
+from repro.kernels.derived_features.kernel import derived_features_pallas
+from repro.kernels.derived_features.ref import derived_features_ref
+from repro.kernels.flow_moments.kernel import (EVENT_BLOCK,
+                                               flow_moments_pallas)
+from repro.kernels.flow_moments.ref import flow_moments_ref
+from repro.kernels.ring_scatter.kernel import ring_scatter_pallas
+from repro.kernels.ring_scatter.ref import ring_scatter_ref
+
+J = jnp.asarray
+
+
+@pytest.mark.parametrize("F,E,tile", [
+    (64, 16, 16), (128, 100, 32), (256, 256, 64), (256, 300, 128),
+    (512, 1000, 512),
+])
+def test_flow_moments_sweep(rng, F, E, tile):
+    regs = rng.integers(0, 2**31, size=(F, 7)).astype(np.uint32)
+    slots = rng.integers(0, F, size=E).astype(np.int32)
+    deltas = rng.integers(0, 2**32, size=(E, 7),
+                          dtype=np.uint64).astype(np.uint32)
+    valid = rng.random(E) > 0.15
+    got = flow_moments_pallas(regs, slots, deltas, valid, flow_tile=tile)
+    want = flow_moments_ref(J(regs), J(slots), J(deltas), J(valid))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_flow_moments_wraparound(rng):
+    """u16-split matmul accumulation must preserve mod-2^32 wraparound."""
+    F = 64
+    regs = np.full((F, 7), 0xFFFFFF00, np.uint32)
+    E = EVENT_BLOCK
+    slots = np.zeros(E, np.int32)
+    deltas = np.full((E, 7), 0x10, np.uint32)
+    valid = np.ones(E, bool)
+    got = flow_moments_pallas(regs, slots, deltas, valid, flow_tile=64)
+    want = flow_moments_ref(J(regs), J(slots), J(deltas), J(valid))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_flow_moments_all_invalid(rng):
+    regs = rng.integers(0, 100, size=(64, 7)).astype(np.uint32)
+    got = flow_moments_pallas(regs, np.zeros(32, np.int32),
+                              np.ones((32, 7), np.uint32),
+                              np.zeros(32, bool), flow_tile=64)
+    np.testing.assert_array_equal(np.asarray(got), regs)
+
+
+@pytest.mark.parametrize("F,H,R,tile", [
+    (32, 10, 16, 32), (128, 10, 64, 32), (64, 4, 128, 64),
+])
+def test_ring_scatter_sweep(rng, F, H, R, tile):
+    mem = rng.integers(0, 2**32, size=(F, H, 16),
+                       dtype=np.uint64).astype(np.uint32)
+    coords = rng.choice(F * H, size=min(R, F * H), replace=False)
+    R = len(coords)
+    flow = (coords // H).astype(np.int32)
+    hist = (coords % H).astype(np.int32)
+    pay = rng.integers(0, 2**32, size=(R, 16),
+                       dtype=np.uint64).astype(np.uint32)
+    pay[:, 0] = np.maximum(pay[:, 0], 1)
+    mask = rng.random(R) > 0.2
+    got = ring_scatter_pallas(mem, pay, flow, hist, mask, flow_tile=tile,
+                              history=H)
+    want = ring_scatter_ref(J(mem), J(pay), J(flow), J(hist), J(mask))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_ring_scatter_duplicate_order(rng):
+    """RDMA WRITE ordering: later report to the same address wins."""
+    F, H = 32, 10
+    mem = np.zeros((F, H, 16), np.uint32)
+    pay = np.stack([np.full(16, 1, np.uint32), np.full(16, 2, np.uint32),
+                    np.full(16, 3, np.uint32)])
+    flow = np.asarray([4, 4, 4], np.int32)
+    hist = np.asarray([7, 7, 7], np.int32)
+    got = np.asarray(ring_scatter_pallas(mem, pay, flow, hist,
+                                         np.ones(3, bool), flow_tile=32,
+                                         history=H))
+    assert (got[4, 7] == 3).all()
+
+
+@pytest.mark.parametrize("F,tile", [(64, 64), (128, 64), (256, 128)])
+def test_derived_features_sweep(rng, F, tile):
+    cfg = get_dfa_config(reduced=True)
+    entries = rng.integers(0, 2**20, size=(F, cfg.history, 16),
+                           dtype=np.uint64).astype(np.uint32)
+    valid = rng.random((F, cfg.history)) > 0.3
+    got = derived_features_pallas(entries, valid,
+                                  derived_dim=cfg.derived_dim,
+                                  flow_tile=tile)
+    want = derived_features_ref(J(entries), J(valid), cfg)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_kernels_plug_into_reporter(rng):
+    """flow_moments as the reporter's accumulate_fn (interpret mode)."""
+    from repro.core import reporter as R
+    from repro.kernels.flow_moments import ops
+    cfg = get_dfa_config(reduced=True)
+    keys = rng.integers(1, 2**31, size=(6, 5)).astype(np.uint32)
+    fidx = rng.integers(0, 6, size=48)
+    ev = {"ts": J(np.sort(rng.integers(0, 5000, 48)).astype(np.uint32)
+                  + np.arange(48, dtype=np.uint32)),
+          "size": J(rng.integers(40, 1500, 48).astype(np.uint32)),
+          "five_tuple": J(keys[fidx]),
+          "valid": J(np.ones(48, bool))}
+    st_ref = R.ingest(R.init_state(cfg), ev, cfg)
+    acc = lambda regs, slots, deltas, valid: ops.flow_moments(
+        regs, slots, deltas, valid, force="interpret")
+    st_k = R.ingest(R.init_state(cfg), ev, cfg, accumulate_fn=acc)
+    np.testing.assert_array_equal(np.asarray(st_ref.regs),
+                                  np.asarray(st_k.regs))

@@ -1,0 +1,67 @@
+"""log* LUT properties (paper Table I approximation)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import logstar as LS
+
+BITS = 7
+
+
+def test_log_exact_powers_of_two():
+    x = jnp.asarray([1, 2, 4, 1024, 1 << 20, 1 << 31], jnp.uint32)
+    got = np.asarray(LS.log2_star(x, BITS), np.int64)
+    want = (np.log2(np.asarray(x, np.float64)) * (1 << LS.Q)).round()
+    np.testing.assert_allclose(got, want, atol=1.0)
+
+
+def test_zero_maps_to_zero():
+    assert int(LS.log2_star(jnp.uint32(0), BITS)) == 0
+    assert int(LS.approx_pow(jnp.uint32(0), 2, BITS)) == 0
+
+
+@settings(max_examples=200, deadline=None)
+@given(st.integers(min_value=1, max_value=2**31 - 1))
+def test_log_relative_error_bounded(x):
+    got = int(LS.log2_star(jnp.uint32(x), BITS))
+    want = np.log2(x) * (1 << LS.Q)
+    # LUT truncation: one mantissa step, slope 1/ln2 in log2 space
+    assert abs(got - want) <= (1 << LS.Q) * 2.0 ** (-BITS) / np.log(2) + 2
+
+
+@settings(max_examples=150, deadline=None)
+@given(st.integers(min_value=0, max_value=2**30))
+def test_log_monotone(x):
+    a = int(LS.log2_star(jnp.uint32(x), BITS))
+    b = int(LS.log2_star(jnp.uint32(x + 1), BITS))
+    assert b >= a
+
+
+@settings(max_examples=150, deadline=None)
+@given(st.integers(min_value=1, max_value=65535), st.sampled_from([2, 3]))
+def test_approx_pow_relative_error(x, n):
+    got = float(int(LS.approx_pow(jnp.uint32(x), n, BITS)))
+    want = float(x) ** n
+    if want >= 2**32:
+        assert got == 2**32 - 1          # saturation (P4 semantics)
+    else:
+        rel = abs(got - want) / want
+        assert rel < 0.05, (x, n, got, want)   # ~n*2^-7 quantization
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.integers(min_value=1, max_value=2**31 - 1))
+def test_exp_inverts_log(x):
+    l = LS.log2_star(jnp.uint32(x), BITS)
+    back = float(int(LS.exp2_star(l, BITS)))
+    rel = abs(back - x) / x
+    assert rel < 0.02, (x, back)
+
+
+def test_vectorized_matches_scalar():
+    xs = np.asarray([1, 3, 7, 100, 1500, 65535, 2**20], np.uint32)
+    vec = np.asarray(LS.log2_star(jnp.asarray(xs), BITS))
+    for i, x in enumerate(xs):
+        assert vec[i] == int(LS.log2_star(jnp.uint32(x), BITS))

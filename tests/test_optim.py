@@ -1,0 +1,83 @@
+"""Optimizer + schedule + gradient compression."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import TrainConfig
+from repro.optim import adamw, compression
+from repro.optim.schedule import lr_at
+
+
+def test_adamw_converges_quadratic():
+    tcfg = TrainConfig(learning_rate=0.1, warmup_steps=1, total_steps=200,
+                       weight_decay=0.0, grad_clip=1e9)
+    target = jnp.asarray([1.0, -2.0, 3.0])
+    params = {"w": jnp.zeros(3)}
+    opt = adamw.init(params, tcfg)
+
+    def loss(p):
+        return jnp.sum((p["w"] - target) ** 2)
+
+    for _ in range(200):
+        g = jax.grad(loss)(params)
+        params, opt, _ = adamw.apply(params, g, opt, tcfg,
+                                     lr_at(opt.step, tcfg))
+    np.testing.assert_allclose(np.asarray(params["w"]), target, atol=0.05)
+
+
+def test_grad_clip():
+    g = {"a": jnp.full((4,), 100.0)}
+    clipped, norm = adamw.clip_by_global_norm(g, 1.0)
+    assert float(norm) == pytest.approx(200.0)
+    total = np.sqrt(np.sum(np.asarray(clipped["a"]) ** 2))
+    assert total == pytest.approx(1.0, rel=1e-5)
+
+
+def test_weight_decay_decoupled():
+    tcfg = TrainConfig(learning_rate=0.1, warmup_steps=0, total_steps=10,
+                       weight_decay=0.5)
+    params = {"w": jnp.ones(2)}
+    opt = adamw.init(params, tcfg)
+    zero_g = {"w": jnp.zeros(2)}
+    p2, _, _ = adamw.apply(params, zero_g, opt, tcfg, jnp.asarray(0.1))
+    assert float(p2["w"][0]) < 1.0          # decay applies without grads
+
+
+def test_schedule_shape():
+    tcfg = TrainConfig(learning_rate=1e-3, warmup_steps=10,
+                       total_steps=100)
+    lrs = [float(lr_at(s, tcfg)) for s in range(100)]
+    assert lrs[0] < lrs[5] < lrs[10]                       # warmup
+    assert lrs[10] == pytest.approx(1e-3, rel=1e-5)        # peak
+    assert lrs[99] < lrs[50] < lrs[11]                     # decay
+    assert lrs[99] >= 1e-4 * 0.99                          # floor 0.1x
+
+
+def test_compression_quantize_roundtrip(rng):
+    x = jnp.asarray(rng.standard_normal(256) * 3, jnp.float32)
+    err = jnp.zeros(256)
+    q, s, resid = compression.quantize(x, err)
+    back = compression.dequantize(q, s)
+    np.testing.assert_allclose(np.asarray(back + resid), np.asarray(x),
+                               rtol=1e-5, atol=1e-5)
+    assert q.dtype == jnp.int8
+
+
+def test_error_feedback_unbiased_over_steps(rng):
+    """With EF, the accumulated applied update converges to the true sum."""
+    true = jnp.asarray(rng.standard_normal(64), jnp.float32) * 0.01
+    err = jnp.zeros(64)
+    applied = jnp.zeros(64)
+    for _ in range(50):
+        q, s, err = compression.quantize(true, err)
+        applied = applied + compression.dequantize(q, s)
+    np.testing.assert_allclose(np.asarray(applied), np.asarray(true * 50),
+                               rtol=0.02, atol=1e-4)
+
+
+def test_opt_state_dtype_bf16():
+    tcfg = TrainConfig()
+    params = {"w": jnp.ones((4, 4), jnp.bfloat16)}
+    opt = adamw.init(params, tcfg, state_dtype="bfloat16")
+    assert opt.mu["w"].dtype == jnp.bfloat16

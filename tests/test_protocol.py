@@ -1,0 +1,72 @@
+"""Wire-format round trips (paper Figs 2/4) — bit-level properties."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import protocol as P
+
+u32 = st.integers(min_value=0, max_value=2**32 - 1)
+
+
+def test_sizes_match_paper():
+    assert P.PAYLOAD_WORDS * 4 == 64          # RoCEv2 pow-2 payload
+    assert P.MARINA_VECTOR_BYTES == 45        # 7*4B stats + 17B five-tuple
+    assert P.N_STATS == 7
+    assert P.REPORT_WORDS * 4 - 8 > P.MARINA_VECTOR_BYTES  # data fits
+
+
+@settings(max_examples=100, deadline=None)
+@given(u32, st.integers(0, 255), st.integers(0, 255),
+       st.lists(u32, min_size=7, max_size=7),
+       st.lists(u32, min_size=5, max_size=5))
+def test_dta_roundtrip(flow, rid, seq, stats, tup):
+    r = P.pack_dta_report(jnp.uint32(flow), jnp.uint32(rid),
+                          jnp.uint32(seq), jnp.asarray(stats, jnp.uint32),
+                          jnp.asarray(tup, jnp.uint32))
+    assert r.shape == (P.REPORT_WORDS,)
+    u = P.unpack_dta_report(r)
+    assert int(u["flow_id"]) == flow
+    assert int(u["reporter_id"]) == rid
+    assert int(u["seq"]) == seq
+    np.testing.assert_array_equal(np.asarray(u["stats"]), stats)
+    np.testing.assert_array_equal(np.asarray(u["five_tuple"]), tup)
+
+
+@settings(max_examples=100, deadline=None)
+@given(u32, st.integers(0, 255), st.integers(0, 255), st.integers(0, 9),
+       st.lists(u32, min_size=7, max_size=7),
+       st.lists(u32, min_size=5, max_size=5))
+def test_payload_roundtrip_and_checksum(flow, rid, seq, hist, stats, tup):
+    rep = {"flow_id": jnp.uint32(flow), "reporter_id": jnp.uint32(rid),
+           "seq": jnp.uint32(seq), "stats": jnp.asarray(stats, jnp.uint32),
+           "five_tuple": jnp.asarray(tup, jnp.uint32)}
+    p = P.pack_rocev2_payload(rep, jnp.uint32(hist))
+    assert p.shape == (P.PAYLOAD_WORDS,)
+    assert bool(P.payload_valid(p))
+    u = P.unpack_payload(p)
+    assert int(u["flow_id"]) == flow
+    assert int(u["hist_idx"]) == hist
+    assert int(u["seq"]) == seq
+    np.testing.assert_array_equal(np.asarray(u["stats"]), stats)
+
+
+@settings(max_examples=50, deadline=None)
+@given(u32, st.integers(0, 13), st.integers(1, 2**32 - 1))
+def test_checksum_detects_tampering(flow, word, flip):
+    rep = {"flow_id": jnp.uint32(flow), "reporter_id": jnp.uint32(1),
+           "seq": jnp.uint32(0),
+           "stats": jnp.arange(7, dtype=jnp.uint32),
+           "five_tuple": jnp.arange(5, dtype=jnp.uint32)}
+    p = P.pack_rocev2_payload(rep, jnp.uint32(3))
+    tampered = p.at[word].set(p[word] ^ jnp.uint32(flip))
+    assert not bool(P.payload_valid(tampered))
+
+
+def test_five_tuple_pack():
+    t = P.pack_five_tuple(jnp.uint32(0x0A000001), jnp.uint32(0xC0A80001),
+                          jnp.uint32(443), jnp.uint32(51000),
+                          jnp.uint32(6))
+    assert t.shape == (5,)
+    assert int(t[2]) == (443 << 16) | 51000
+    assert int(t[3]) == 6

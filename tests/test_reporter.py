@@ -1,0 +1,152 @@
+"""Reporter semantics vs a sequential numpy simulator."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_dfa_config
+from repro.core import logstar as LS
+from repro.core import reporter as R
+
+
+def np_simulate(cfg, events):
+    """Sequential per-packet reference (what the switch actually does)."""
+    F = cfg.flows_per_shard
+    regs = np.zeros((F, R.N_REG), np.uint64)
+    last = np.zeros(F, np.uint64)
+    keys = np.zeros((F, 5), np.uint64)
+    active = np.zeros(F, bool)
+    slots = np.asarray(R.hash_slot(jnp.asarray(events["five_tuple"]), F))
+    for i in range(len(slots)):
+        if not events["valid"][i]:
+            continue
+        s = slots[i]
+        key = events["five_tuple"][i]
+        if active[s] and not (keys[s] == key).all():
+            pass                              # collision: resident flow owns
+        if not active[s]:
+            keys[s] = key
+            active[s] = True
+            first = True
+        else:
+            first = False
+        ts, ps = int(events["ts"][i]), int(events["size"][i])
+        iat = 0 if first else ts - int(last[s])
+        d = [1, iat,
+             int(LS.approx_pow(jnp.uint32(iat), 2, cfg.logstar_bits)),
+             int(LS.approx_pow(jnp.uint32(iat), 3, cfg.logstar_bits)),
+             ps,
+             int(LS.approx_pow(jnp.uint32(ps), 2, cfg.logstar_bits)),
+             int(LS.approx_pow(jnp.uint32(ps), 3, cfg.logstar_bits))]
+        regs[s] = (regs[s] + np.asarray(d, np.uint64)) % (1 << 32)
+        last[s] = max(last[s], ts)
+    return regs.astype(np.uint32), last.astype(np.uint32)
+
+
+def make_events(rng, cfg, n_flows=8, E=96):
+    keys = rng.integers(1, 2**31, size=(n_flows, 5)).astype(np.uint32)
+    fidx = rng.integers(0, n_flows, size=E)
+    ts = np.sort(rng.integers(0, 10_000, size=E)).astype(np.uint32)
+    # strictly increasing to avoid ties (switch sees a total order)
+    ts = ts + np.arange(E, dtype=np.uint32)
+    return {"ts": ts,
+            "size": rng.integers(40, 1500, size=E).astype(np.uint32),
+            "five_tuple": keys[fidx],
+            "valid": np.ones(E, bool)}
+
+
+def test_ingest_matches_sequential_simulator(rng):
+    cfg = get_dfa_config(reduced=True)
+    events = make_events(rng, cfg)
+    st = R.init_state(cfg)
+    st = R.ingest(st, {k: jnp.asarray(v) for k, v in events.items()}, cfg)
+    regs_np, last_np = np_simulate(cfg, events)
+    np.testing.assert_array_equal(np.asarray(st.regs), regs_np)
+    np.testing.assert_array_equal(np.asarray(st.last_ts), last_np)
+
+
+def test_two_block_ingest_equals_one(rng):
+    """Splitting the stream into blocks must not change the registers."""
+    cfg = get_dfa_config(reduced=True)
+    ev = make_events(rng, cfg, E=64)
+    stA = R.init_state(cfg)
+    stA = R.ingest(stA, {k: jnp.asarray(v) for k, v in ev.items()}, cfg)
+    stB = R.init_state(cfg)
+    for sl in (slice(0, 32), slice(32, 64)):
+        part = {k: jnp.asarray(v[sl]) for k, v in ev.items()}
+        stB = R.ingest(stB, part, cfg)
+    np.testing.assert_array_equal(np.asarray(stA.regs),
+                                  np.asarray(stB.regs))
+
+
+def test_invalid_events_ignored(rng):
+    cfg = get_dfa_config(reduced=True)
+    ev = make_events(rng, cfg, E=32)
+    ev["valid"][10:] = False
+    st = R.ingest(R.init_state(cfg),
+                  {k: jnp.asarray(v) for k, v in ev.items()}, cfg)
+    ev2 = {k: v[:10] for k, v in ev.items()}
+    st2 = R.ingest(R.init_state(cfg),
+                   {k: jnp.asarray(v) for k, v in ev2.items()}, cfg)
+    np.testing.assert_array_equal(np.asarray(st.regs),
+                                  np.asarray(st2.regs))
+
+
+def test_due_flows_and_reports(rng):
+    cfg = get_dfa_config(reduced=True)
+    ev = make_events(rng, cfg, n_flows=5, E=64)
+    st = R.ingest(R.init_state(cfg),
+                  {k: jnp.asarray(v) for k, v in ev.items()}, cfg)
+    now = jnp.uint32(cfg.monitoring_period_us + 20_000)
+    slots, mask = R.due_flows(st, now, cfg, capacity=16)
+    n_active = int(np.asarray(st.active).sum())
+    assert int(mask.sum()) == n_active          # all active flows due
+    st2, reports = R.make_reports(st, slots, mask, now, 3, 0, cfg)
+    reports = np.asarray(reports)
+    assert (reports[np.asarray(mask), 0] ==
+            np.asarray(slots)[np.asarray(mask)]).all()
+    assert int(st2.seq) == n_active             # sequence ids consumed
+    # immediately after reporting, nothing is due
+    _, mask2 = R.due_flows(st2, now, cfg, capacity=16)
+    assert int(mask2.sum()) == 0
+
+
+def test_register_wraparound(rng):
+    """P4 32-bit registers wrap mod 2^32 — so do ours."""
+    cfg = get_dfa_config(reduced=True)
+    st = R.init_state(cfg)
+    regs = st.regs.at[0, 1].set(jnp.uint32(0xFFFFFFF0))
+    st = st._replace(regs=regs,
+                     active=st.active.at[0].set(True),
+                     keys=st.keys.at[0].set(jnp.arange(5, dtype=jnp.uint32)))
+    deltas = jnp.zeros((1, 7), jnp.uint32).at[0, 1].set(0x20)
+    out = R.accumulate_ref(st.regs, jnp.asarray([0]), deltas,
+                           jnp.asarray([True]))
+    assert int(out[0, 1]) == 0x10               # wrapped
+
+
+def test_collision_counting(rng):
+    cfg = get_dfa_config(reduced=True)
+    # two different keys forced into the same slot via crafted search
+    keys = rng.integers(1, 2**31, size=(64, 5)).astype(np.uint32)
+    slots = np.asarray(R.hash_slot(jnp.asarray(keys),
+                                   cfg.flows_per_shard))
+    dup = None
+    for i in range(len(slots)):
+        for j in range(i + 1, len(slots)):
+            if slots[i] == slots[j]:
+                dup = (i, j)
+                break
+        if dup:
+            break
+    if not dup:
+        pytest.skip("no hash collision in sample")
+    i, j = dup
+    ev = {"ts": np.asarray([10, 20], np.uint32),
+          "size": np.asarray([100, 200], np.uint32),
+          "five_tuple": np.stack([keys[i], keys[j]]),
+          "valid": np.ones(2, bool)}
+    st = R.ingest(R.init_state(cfg),
+                  {k: jnp.asarray(v) for k, v in ev.items()}, cfg)
+    st = R.ingest(st, {k: jnp.asarray(v) for k, v in ev.items()}, cfg)
+    assert int(st.collisions) >= 1
