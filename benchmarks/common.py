@@ -7,6 +7,7 @@ reports against the paper's NIC-bound measurements.
 """
 from __future__ import annotations
 
+import os
 import time
 
 import jax
@@ -16,9 +17,21 @@ PEAK_FLOPS = 197e12
 HBM_BW = 819e9
 ICI_BW = 50e9
 
+# bench-smoke mode (CI): shrink problem sizes and iteration counts so the
+# whole sweep finishes in minutes on a shared runner. Set by run.py --tiny.
+TINY = os.environ.get("REPRO_BENCH_TINY", "") not in ("", "0")
+
+# every csv() row, for run.py --json artifact emission
+ROWS: list = []
+
+
+def _counts(warmup, iters):
+    return (1, 2) if TINY else (warmup, iters)
+
 
 def time_it(fn, *args, warmup=2, iters=5):
     """Median wall seconds for jit'd fn(*args)."""
+    warmup, iters = _counts(warmup, iters)
     for _ in range(warmup):
         out = fn(*args)
         jax.tree.map(lambda a: a.block_until_ready()
@@ -43,6 +56,7 @@ def time_loop(fn, state, *args, warmup=2, iters=6):
             return out[0]
         return out
 
+    warmup, iters = _counts(warmup, iters)
     for _ in range(warmup):
         out = fn(state, *args)
         state = next_state(out)
@@ -60,4 +74,6 @@ def time_loop(fn, state, *args, warmup=2, iters=6):
 
 
 def csv(name: str, us: float, derived: str):
+    ROWS.append({"name": name, "us_per_call": float(us),
+                 "derived": derived})
     print(f"{name},{us:.2f},{derived}")

@@ -12,6 +12,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import HBM_BW, ICI_BW, PEAK_FLOPS, csv, time_loop
+from repro.compat import make_mesh
 from repro.configs import get_dfa_config
 from repro.core.pipeline import DFASystem
 from repro.core import protocol as P
@@ -19,14 +20,13 @@ from repro.data import packets as PK
 
 
 def run():
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((1, 1), ("data", "model"))
     cfg = get_dfa_config(reduced=True)
     system = DFASystem(cfg, mesh)
     flows = PK.gen_flows(64, seed=0)
     ev = PK.events_for_shards(flows, 0, 1, cfg.event_block)
     evj = {k: jnp.asarray(v) for k, v in ev.items()}
-    state = system.init_state()
+    state = system.init_sharded_state()
     step = jax.jit(system.dfa_step, donate_argnums=(0,))
     t = time_loop(step, state, evj, jnp.uint32(100_000))
     E = cfg.event_block

@@ -12,12 +12,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import HBM_BW, csv, time_loop
+from benchmarks.common import HBM_BW, TINY, csv, time_loop
 from repro.configs import get_dfa_config
 from repro.core import collector as C
 from repro.core import protocol as P
 
-R = 8192          # messages per batch
+R = 1024 if TINY else 8192        # messages per batch
+FLOWS = (1 << 10) if TINY else (1 << 14)   # fit CPU memory; same structure
 
 
 def payload_batch(rng, cfg, words):
@@ -36,8 +37,7 @@ def payload_batch(rng, cfg, words):
 
 
 def run():
-    cfg = get_dfa_config(reduced=False).__class__(
-        flows_per_shard=1 << 14)      # fit CPU memory; structure identical
+    cfg = get_dfa_config(reduced=False).__class__(flows_per_shard=FLOWS)
     rng = np.random.default_rng(0)
     state = C.init_state(cfg)
     pays = payload_batch(rng, cfg, P.PAYLOAD_WORDS)

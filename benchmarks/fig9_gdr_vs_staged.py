@@ -15,12 +15,12 @@ import numpy as np
 from benchmarks.common import HBM_BW, csv, time_loop
 from repro.configs import get_dfa_config
 from repro.core import collector as C
-from benchmarks.fig8_message_rate import R, payload_batch
+from benchmarks.fig8_message_rate import FLOWS, R, payload_batch
 from repro.core import protocol as P
 
 
 def run():
-    cfg = get_dfa_config(reduced=False).__class__(flows_per_shard=1 << 14)
+    cfg = get_dfa_config(reduced=False).__class__(flows_per_shard=FLOWS)
     rng = np.random.default_rng(0)
     pays = payload_batch(rng, cfg, P.PAYLOAD_WORDS)
     mask = jnp.ones(R, bool)

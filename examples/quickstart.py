@@ -12,14 +12,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.compat import make_mesh
 from repro.configs import get_dfa_config
 from repro.core.pipeline import DFASystem
 from repro.data import packets as PK
 
 
 def main():
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((1, 1), ("data", "model"))
     cfg = get_dfa_config(reduced=True)
     system = DFASystem(cfg, mesh)
     state = system.init_state()

@@ -18,6 +18,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.compat import make_mesh
 from repro.configs import get_config, get_dfa_config
 from repro.core.pipeline import DFASystem
 from repro.data import packets as PK
@@ -26,8 +27,7 @@ from repro.models.registry import get_model
 
 
 def main():
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((1, 1), ("data", "model"))
     dfa_cfg = get_dfa_config(reduced=True)
     system = DFASystem(dfa_cfg, mesh)
     state = system.init_state()

@@ -15,6 +15,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.compat import make_mesh
 from repro.configs import get_dfa_config
 from repro.configs.base import TrainConfig
 from repro.core.pipeline import DFASystem
@@ -64,8 +65,7 @@ def collect_features(system, periods=6, n_flows=32, seed=0):
 
 
 def main():
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((1, 1), ("data", "model"))
     cfg = get_dfa_config(reduced=True)
     system = DFASystem(cfg, mesh)
     with mesh:

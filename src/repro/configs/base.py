@@ -155,6 +155,11 @@ class DFAConfig:
     report_capacity: int = 4096            # max reports routed per step/shard
     derived_dim: int = 96                  # Marina-style derived feature count
     flow_tile: int = 512                   # kernel flow-block tile
+    # kernel implementation selection: "auto" | "ref" | "pallas" |
+    # "interpret" — see repro.kernels.dispatch (REPRO_KERNEL_BACKEND env
+    # var overrides this field; an explicit backend= argument beats both)
+    kernel_backend: str = "auto"
+
     def total_flows(self, shards: int) -> int:
         return self.flows_per_shard * shards
 

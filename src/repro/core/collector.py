@@ -61,8 +61,20 @@ def scatter_ref(memory: jax.Array, entry_valid: jax.Array,
 
 def ingest(state: CollectorState, payloads: jax.Array, mask: jax.Array,
            shard_flow_base, cfg: DFAConfig,
-           scatter_fn=scatter_ref) -> CollectorState:
-    """payloads: (R, 16) u32 RoCEv2 bodies routed to this shard."""
+           scatter_fn=None) -> CollectorState:
+    """payloads: (R, 16) u32 RoCEv2 bodies routed to this shard.
+
+    ``scatter_fn`` defaults to the ring_scatter kernel family resolved
+    through the dispatch registry (cfg.kernel_backend / env override);
+    pass ``scatter_ref`` to force the jnp oracle.
+    """
+    if scatter_fn is None:
+        from repro.kernels.ring_scatter.ops import ring_scatter_collector
+
+        def scatter_fn(memory, entry_valid, pays, flow, hist, m):
+            return ring_scatter_collector(memory, entry_valid, pays, flow,
+                                          hist, m, cfg=cfg)
+
     p = PROTO.unpack_payload(payloads)
     ok_csum = PROTO.payload_valid(payloads)
     bad = jnp.sum(mask & ~ok_csum)  # corrupted/tampered payloads (§VI-B)

@@ -81,7 +81,10 @@ def derive_ref(memory_entries: jax.Array, entry_valid: jax.Array,
     newest_f = jnp.take_along_axis(
         feats, newest[:, None, None].repeat(PER_ENTRY, -1), axis=1)[:, 0]
     mean_w = feats.sum(1) / nvalid
-    var_w = jnp.maximum((feats ** 2).sum(1) / nvalid - mean_w ** 2, 0.0)
+    # two-pass (masked) variance: E[(x-mean)^2] avoids the E[x^2]-mean^2
+    # cancellation, keeping ref and kernel paths within 1e-5 relative
+    dev = (feats - mean_w[:, None, :]) * vmask
+    var_w = (dev * dev).sum(1) / nvalid
     std_w = jnp.sqrt(var_w)
     delta = newest_f - mean_w
     maxhist = jnp.max(jnp.where(entry_valid, hist_idx.astype(jnp.float32),

@@ -13,8 +13,17 @@ Every device is simultaneously one Reporter shard and one Collector shard
   payloads ──ring placement──> (F, 10, 16-word) collector memory (Fig 4)
   received flows ──enrichment──> derived feature vectors -> inference
 
+Every hot stage (moment accumulation, ring placement, gather+enrichment)
+routes through the kernel dispatch registry (repro.kernels.dispatch):
+``DFAConfig.kernel_backend`` / ``REPRO_KERNEL_BACKEND`` select ref / pallas
+/ interpret per run, with the Pallas kernels jitting inside ``shard_map``
+(shard-local shapes are static).
+
 The step is jit-compatible, state is donated (in-place ring updates — the
-GDR analogue), and every stage has a fixed SPMD shape.
+GDR analogue), and every stage has a fixed SPMD shape. ``run_periods``
+streams T monitoring periods through the step under one ``lax.scan`` — the
+multi-period throughput shape the fig8 / dfa_throughput / streaming
+benchmarks measure.
 """
 from __future__ import annotations
 
@@ -26,12 +35,13 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import axis_size, shard_map
 from repro.configs.base import DFAConfig
 from repro.core import collector as COLL
-from repro.core import enrich as ENR
 from repro.core import protocol as PROTO
 from repro.core import reporter as REP
 from repro.core import translator as TRANS
+from repro.kernels.gather_enrich.ops import gather_enrich
 
 Tree = Any
 
@@ -82,6 +92,14 @@ class DFASystem:
         return jax.tree.map(lambda s: NamedSharding(self.mesh, s),
                             self.state_specs())
 
+    def init_sharded_state(self) -> DFAState:
+        """``init_state`` already placed on the mesh. Use this when feeding
+        a donated step/stream: plain ``init_state`` arrays are uncommitted,
+        so the first donated call returns mesh-sharded state and the second
+        call pays a full retrace."""
+        return jax.jit(self.init_state,
+                       out_shardings=self.state_shardings())()
+
     # -- the step ---------------------------------------------------------
     def dfa_step(self, state: DFAState, events: Dict[str, jax.Array],
                  now: jax.Array):
@@ -95,9 +113,9 @@ class DFASystem:
         def local(rep_st, tr_st, coll_st, ev_ts, ev_sz, ev_tu, ev_va, now_):
             shard = jnp.zeros((), jnp.int32)
             for a in ax:
-                shard = shard * jax.lax.axis_size(a) + jax.lax.axis_index(a)
+                shard = shard * axis_size(a) + jax.lax.axis_index(a)
             flow_base = shard * cfg.flows_per_shard
-            # 1. reporter ingest
+            # 1. reporter ingest (flow_moments via the dispatch registry)
             rep_st = REP.ingest(rep_st, {"ts": ev_ts, "size": ev_sz,
                                          "five_tuple": ev_tu,
                                          "valid": ev_va}, cfg)
@@ -124,12 +142,13 @@ class DFASystem:
             # 4. owner-side translator: history addresses + RoCEv2 payloads
             tr_st, payloads, coords = TRANS.translate(
                 tr_st, routed, rmask, flow_base, cfg)
-            # 5. collector ring placement + integrity checks
+            # 5. collector ring placement (ring_scatter via dispatch)
             coll_st = COLL.ingest(coll_st, payloads, rmask, flow_base, cfg)
-            # 6. enrichment of received flows
-            lf = jnp.clip(coords["local_flow"], 0, cfg.flows_per_shard - 1)
-            entries, ev_valid = COLL.gather_flow_history(coll_st, lf)
-            enriched = ENR.derive_ref(entries, ev_valid, cfg)
+            # 6. fused gather + enrichment of received flows (via dispatch;
+            #    skips the (R, H, 16) history materialization; the op owns
+            #    the [0, F) clamp of local_flow)
+            enriched = gather_enrich(coll_st.memory, coll_st.entry_valid,
+                                     coords["local_flow"], cfg)
             enriched = jnp.where(rmask[:, None], enriched, 0.0)
             flow_ids = jnp.where(rmask, routed[:, 0],
                                  jnp.uint32(0xFFFFFFFF))
@@ -149,7 +168,7 @@ class DFASystem:
         specs = self.state_specs()
         ev_specs = (P(ax), P(ax), P(ax, None), P(ax))
         out_state_specs = (specs.reporter, specs.translator, specs.collector)
-        fn = jax.shard_map(
+        fn = shard_map(
             local, mesh=self.mesh,
             in_specs=(specs.reporter, specs.translator, specs.collector)
             + ev_specs + (P(),),
@@ -158,7 +177,7 @@ class DFASystem:
                jax.tree.map(lambda _: P(), {
                    "reports_sent": 0, "reports_recv": 0, "bucket_drops": 0,
                    "collisions": 0, "bad_checksum": 0, "seq_anomalies": 0})),
-            check_vma=False)
+            check=False)
         rep_st, tr_st, coll_st, enriched, flow_ids, rmask, metrics = fn(
             state.reporter, state.translator, state.collector,
             events["ts"], events["size"], events["five_tuple"],
@@ -166,21 +185,52 @@ class DFASystem:
         return (DFAState(rep_st, tr_st, coll_st), enriched, flow_ids,
                 rmask, metrics)
 
+    # -- multi-period streaming -------------------------------------------
+    def run_periods(self, state: DFAState, events: Dict[str, jax.Array],
+                    nows: jax.Array):
+        """Stream T monitoring periods through ``dfa_step`` as one
+        ``lax.scan`` (state is the carry, so with donation the ring memory
+        is updated in place across the whole scan — the GDR analogue held
+        for an entire trace window).
+
+        events: dict of (T, n_shards*E, …) arrays; nows: (T,) u32.
+        Returns (state', enriched (T, R, D), flow_ids (T, R),
+        emask (T, R), metrics dict of (T,) arrays).
+        """
+
+        def body(st, xs):
+            ev, now_ = xs
+            st, enriched, flow_ids, emask, metrics = self.dfa_step(
+                st, ev, now_)
+            return st, (enriched, flow_ids, emask, metrics)
+
+        state, (enriched, flow_ids, emask, metrics) = jax.lax.scan(
+            body, state, (events, nows))
+        return state, enriched, flow_ids, emask, metrics
+
     # -- convenience ------------------------------------------------------
     def jit_step(self, donate: bool = True):
         return jax.jit(self.dfa_step,
                        donate_argnums=(0,) if donate else ())
 
-    def event_specs(self, events_per_shard: int):
-        """ShapeDtypeStructs + shardings for the global event batch."""
+    def jit_stream(self, donate: bool = True):
+        """jit'd ``run_periods`` with the state carry donated."""
+        return jax.jit(self.run_periods,
+                       donate_argnums=(0,) if donate else ())
+
+    def event_specs(self, events_per_shard: int, periods: int = 0):
+        """ShapeDtypeStructs + shardings for the global event batch; with
+        ``periods`` > 0, shapes carry the leading (T,) streaming dim."""
         n = self.n_shards * events_per_shard
+        lead = (periods,) if periods else ()
         sds = {
-            "ts": jax.ShapeDtypeStruct((n,), jnp.uint32),
-            "size": jax.ShapeDtypeStruct((n,), jnp.uint32),
-            "five_tuple": jax.ShapeDtypeStruct((n, 5), jnp.uint32),
-            "valid": jax.ShapeDtypeStruct((n,), jnp.bool_),
+            "ts": jax.ShapeDtypeStruct(lead + (n,), jnp.uint32),
+            "size": jax.ShapeDtypeStruct(lead + (n,), jnp.uint32),
+            "five_tuple": jax.ShapeDtypeStruct(lead + (n, 5), jnp.uint32),
+            "valid": jax.ShapeDtypeStruct(lead + (n,), jnp.bool_),
         }
         ax = self.axes
-        specs = {"ts": P(ax), "size": P(ax), "five_tuple": P(ax, None),
-                 "valid": P(ax)}
+        t = (None,) if periods else ()
+        specs = {"ts": P(*t, ax), "size": P(*t, ax),
+                 "five_tuple": P(*t, ax, None), "valid": P(*t, ax)}
         return sds, specs

@@ -150,12 +150,22 @@ def accumulate_ref(regs: jax.Array, slots: jax.Array, deltas: jax.Array,
 
 
 def ingest(state: ReporterState, events: Dict[str, jax.Array],
-           cfg: DFAConfig, accumulate_fn=accumulate_ref) -> ReporterState:
+           cfg: DFAConfig, accumulate_fn=None) -> ReporterState:
     """Process one block of packet events.
 
     events: ts (E,) u32 µs | size (E,) u32 | five_tuple (E,5) u32 |
             valid (E,) bool
+
+    ``accumulate_fn`` defaults to the flow_moments kernel family resolved
+    through the dispatch registry (cfg.kernel_backend / env override);
+    pass ``accumulate_ref`` to force the jnp oracle.
     """
+    if accumulate_fn is None:
+        from repro.kernels.flow_moments.ops import flow_moments
+
+        def accumulate_fn(regs, slots, deltas, valid):
+            return flow_moments(regs, slots, deltas, valid, cfg=cfg)
+
     slots = hash_slot(events["five_tuple"], cfg.flows_per_shard)
     pre_active = state.active            # BEFORE this block's admissions:
     state, valid = admit(state, slots, events["five_tuple"],

@@ -52,8 +52,8 @@ def compute_addresses(state: TranslatorState, local_flow: jax.Array,
     order = jnp.argsort(safe, stable=True)
     s = safe[order]
     seg_start = jnp.concatenate([jnp.array([True]), s[1:] != s[:-1]])
-    idx_in_run = jnp.arange(R) - jnp.maximum.accumulate(
-        jnp.where(seg_start, jnp.arange(R), 0))
+    idx_in_run = jnp.arange(R) - jax.lax.cummax(
+        jnp.where(seg_start, jnp.arange(R), 0), axis=0)
     rank = jnp.zeros((R,), jnp.int32).at[order].set(idx_in_run)
     base = state.hist_counter[jnp.clip(local_flow, 0, F - 1)]
     hist = ((base + rank.astype(jnp.uint32)) & 0xFF) % jnp.uint32(

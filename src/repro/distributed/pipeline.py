@@ -19,6 +19,8 @@ import jax.numpy as jnp
 from jax.sharding import Mesh
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import shard_map as _shard_map
+
 Tree = Any
 
 
@@ -82,10 +84,10 @@ def pipeline_apply(stage_fn: Callable[[Tree, jax.Array, jax.Array],
             jnp.where(sid == S - 1, outs, jnp.zeros_like(outs)), axis)
         return outs.reshape(xl.shape)
 
-    fn = jax.shard_map(
+    fn = _shard_map(
         local, mesh=mesh,
         in_specs=(jax.tree.map(lambda _: P(axis), stage_params),
                   P(other_axes or None)),
         out_specs=P(other_axes or None),
-        check_vma=False)
+        check=False)
     return fn(stage_params, x)

@@ -1,3 +1,5 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+# Kernel layer: one package per compute hot-spot the paper itself
+# optimizes (flow_moments, ring_scatter, derived_features, gather_enrich,
+# flash_attention). Each family ships ref.py (jnp oracle), kernel.py
+# (Pallas) and ops.py (thin registry client); backend selection lives in
+# repro.kernels.dispatch.

@@ -21,9 +21,15 @@ from repro.core.protocol import META_WORD, STATS_SLICE
 WORDS = 16
 
 
-def _kernel(entries_ref, valid_ref, out_ref, *, derived_dim: int):
-    entries = entries_ref[...]                       # (T, H, 16) u32
-    valid = valid_ref[...] > 0                       # (T, H)
+def derive_block(entries: jax.Array, valid: jax.Array,
+                 derived_dim: int) -> jax.Array:
+    """(T, H, 16) u32 entries + (T, H) bool -> (T, derived_dim) f32.
+
+    The feature math shared by this kernel and the fused gather_enrich
+    kernel; all selection (newest entry) is iota/one-hot — no gathers —
+    so it lowers cleanly inside any Pallas body. Mirrors
+    repro.core.enrich.derive_ref.
+    """
     T, H, _ = entries.shape
     stats = entries[:, :, STATS_SLICE].astype(jnp.uint32)
     hist_idx = (entries[:, :, META_WORD] & 0xFF).astype(jnp.float32)
@@ -38,8 +44,9 @@ def _kernel(entries_ref, valid_ref, out_ref, *, derived_dim: int):
            == newest[:, None]).astype(jnp.float32)   # (T, H) one-hot
     newest_f = jnp.sum(feats * sel[..., None], axis=1)       # (T, PER_ENTRY)
     mean_w = feats.sum(1) / nvalid
-    var_w = jnp.maximum((feats * feats).sum(1) / nvalid - mean_w * mean_w,
-                        0.0)
+    # two-pass (masked) variance — same formulation as enrich.derive_ref
+    dev = (feats - mean_w[:, None, :]) * vmask
+    var_w = (dev * dev).sum(1) / nvalid
     std_w = jnp.sqrt(var_w)
     delta = newest_f - mean_w
     maxhist = jnp.max(jnp.where(valid, hist_idx, 0.0), axis=-1,
@@ -49,7 +56,12 @@ def _kernel(entries_ref, valid_ref, out_ref, *, derived_dim: int):
     D = out.shape[-1]
     if D < derived_dim:
         out = jnp.pad(out, ((0, 0), (0, derived_dim - D)))
-    out_ref[...] = out[:, :derived_dim]
+    return out[:, :derived_dim]
+
+
+def _kernel(entries_ref, valid_ref, out_ref, *, derived_dim: int):
+    out_ref[...] = derive_block(entries_ref[...], valid_ref[...] > 0,
+                                derived_dim)
 
 
 @functools.partial(jax.jit,

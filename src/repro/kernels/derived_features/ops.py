@@ -1,24 +1,16 @@
-"""Dispatching wrapper for derived_features."""
+"""Registry client for derived_features (the enrichment stage)."""
 from __future__ import annotations
 
-import jax
-
-from repro.configs.base import DFAConfig
-from repro.kernels.derived_features.kernel import derived_features_pallas
-from repro.kernels.derived_features.ref import derived_features_ref
+from repro.kernels import dispatch
 
 
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
+def derived_features(entries, valid, cfg, backend=None, force=None):
+    """entries: (F, H, 16) u32; valid: (F, H) -> (F, derived_dim) f32.
 
-
-def derived_features(entries, valid, cfg: DFAConfig, force: str = "auto"):
-    if force == "ref" or (force == "auto" and not _on_tpu()):
-        return derived_features_ref(entries, valid, cfg)
-    interpret = (force == "interpret") or not _on_tpu()
-    ft = min(cfg.flow_tile, entries.shape[0])
-    while entries.shape[0] % ft:
-        ft -= 1
-    return derived_features_pallas(entries, valid,
-                                   derived_dim=cfg.derived_dim,
-                                   flow_tile=ft, interpret=interpret)
+    ``force`` is the legacy name for ``backend`` (kept for callers)."""
+    b, impl = dispatch.lookup("derived_features", backend or force, cfg)
+    if b == "ref":
+        return impl(entries, valid, cfg)
+    ft = dispatch.negotiate_tile(entries.shape[0], cfg.flow_tile)
+    return impl(entries, valid, derived_dim=cfg.derived_dim, flow_tile=ft,
+                interpret=dispatch.interpret_flag(b))

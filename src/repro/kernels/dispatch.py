@@ -1,0 +1,169 @@
+"""Unified kernel backend registry — the dispatch layer for the DFA hot path.
+
+Every kernel family registers up to three implementations:
+
+* ``ref``       — pure-jnp oracle (portable; bit-exact semantics contract)
+* ``pallas``    — compiled Pallas TPU kernel
+* ``interpret`` — the same Pallas kernel run by the Pallas interpreter
+                  (works on CPU; CI uses it for equivalence vs ``ref``)
+
+Families shipped here: ``flow_moments`` (reporter accumulate),
+``ring_scatter`` (collector placement), ``derived_features`` (enrichment),
+``gather_enrich`` (fused history-gather + enrichment) and
+``flash_attention`` (model serving path).
+
+Backend selection precedence (strongest first):
+
+1. an explicit ``backend=`` argument at the call site (``"auto"`` defers)
+2. the ``REPRO_KERNEL_BACKEND`` environment variable
+3. ``DFAConfig.kernel_backend``
+4. auto: ``pallas`` on TPU, ``ref`` everywhere else
+
+Resolution happens at trace time: a step traced under one setting keeps it
+until re-traced (jit caches are keyed on shapes, not on this env var).
+"""
+from __future__ import annotations
+
+import os
+import warnings
+from typing import Callable, Dict, List, Optional, Tuple
+
+import jax
+
+BACKENDS = ("ref", "pallas", "interpret")
+ENV_VAR = "REPRO_KERNEL_BACKEND"
+
+_REGISTRY: Dict[str, Dict[str, Callable]] = {}
+_BUILTIN_LOADED = False
+
+
+def register(family: str, backend: str, fn: Optional[Callable] = None):
+    """Register ``fn`` as ``family``'s ``backend`` implementation.
+
+    Usable directly (``register("fam", "ref", impl)``) or as a decorator
+    (``@register("fam", "ref")``). Re-registration overwrites.
+    """
+    if backend not in BACKENDS:
+        raise ValueError(f"backend {backend!r} not in {BACKENDS}")
+
+    def _set(f: Callable) -> Callable:
+        _REGISTRY.setdefault(family, {})[backend] = f
+        return f
+
+    return _set(fn) if fn is not None else _set
+
+
+def families() -> List[str]:
+    _ensure_builtin()
+    return sorted(_REGISTRY)
+
+
+def implementations(family: str) -> List[str]:
+    _ensure_builtin()
+    return sorted(_REGISTRY.get(family, {}))
+
+
+def negotiate_tile(size: int, preferred: int) -> int:
+    """Largest tile <= ``preferred`` that divides ``size`` exactly (>= 1).
+
+    Every Pallas family tiles its leading (flow/report) dimension; this is
+    the single negotiation rule all ops.py wrappers share.
+    """
+    size, preferred = int(size), int(preferred)
+    t = max(1, min(preferred, size))
+    while size % t:
+        t -= 1
+    return t
+
+
+def resolve_backend(backend: Optional[str] = None, cfg=None) -> str:
+    """Apply the selection precedence; returns one of BACKENDS."""
+    if backend in (None, "auto", ""):
+        env = os.environ.get(ENV_VAR, "").strip().lower()
+        cfg_backend = (getattr(cfg, "kernel_backend", "auto")
+                       if cfg is not None else "auto") or "auto"
+        if env not in ("", "auto"):
+            backend = env
+        elif cfg_backend != "auto":
+            backend = cfg_backend
+        else:
+            backend = "pallas" if jax.default_backend() == "tpu" else "ref"
+    if backend not in BACKENDS:
+        raise ValueError(
+            f"unknown kernel backend {backend!r}; expected one of "
+            f"{BACKENDS} or 'auto'")
+    return backend
+
+
+def interpret_flag(backend: str) -> bool:
+    """Whether a Pallas impl must run interpreted (also forced off-TPU, so a
+    'pallas' request never feeds Mosaic a CPU target). The downgrade is
+    loud: interpreter-mode timings must never be mistaken for compiled
+    pallas numbers."""
+    if backend == "interpret":
+        return True
+    if jax.default_backend() != "tpu":
+        warnings.warn(
+            f"kernel backend 'pallas' requested on "
+            f"{jax.default_backend()!r}: running in Pallas INTERPRETER "
+            "mode (orders of magnitude slower; not compiled-kernel "
+            "performance)", RuntimeWarning, stacklevel=3)
+        return True
+    return False
+
+
+def lookup(family: str, backend: Optional[str] = None,
+           cfg=None) -> Tuple[str, Callable]:
+    """Resolve (backend_name, implementation) for one call site."""
+    _ensure_builtin()
+    if family not in _REGISTRY:
+        raise KeyError(f"unknown kernel family {family!r}; "
+                       f"known: {sorted(_REGISTRY)}")
+    b = resolve_backend(backend, cfg)
+    impls = _REGISTRY[family]
+    if b not in impls:
+        raise KeyError(f"family {family!r} has no {b!r} implementation "
+                       f"(has: {sorted(impls)})")
+    return b, impls[b]
+
+
+def _ensure_builtin() -> None:
+    """Lazy-register the in-tree families (import cycle-free: kernel/ref
+    modules never import ops.py or this module)."""
+    global _BUILTIN_LOADED
+    if _BUILTIN_LOADED:
+        return
+    from repro.kernels.derived_features import kernel as df_k
+    from repro.kernels.derived_features import ref as df_r
+    from repro.kernels.flash_attention import kernel as fa_k
+    from repro.kernels.flash_attention import ref as fa_r
+    from repro.kernels.flow_moments import kernel as fm_k
+    from repro.kernels.flow_moments import ref as fm_r
+    from repro.kernels.gather_enrich import kernel as ge_k
+    from repro.kernels.gather_enrich import ref as ge_r
+    from repro.kernels.ring_scatter import kernel as rs_k
+    from repro.kernels.ring_scatter import ref as rs_r
+
+    register("flow_moments", "ref", fm_r.flow_moments_ref)
+    register("flow_moments", "pallas", fm_k.flow_moments_pallas)
+    register("flow_moments", "interpret", fm_k.flow_moments_pallas)
+
+    register("ring_scatter", "ref", rs_r.ring_scatter_ref)
+    register("ring_scatter", "pallas", rs_k.ring_scatter_pallas)
+    register("ring_scatter", "interpret", rs_k.ring_scatter_pallas)
+
+    register("derived_features", "ref", df_r.derived_features_ref)
+    register("derived_features", "pallas", df_k.derived_features_pallas)
+    register("derived_features", "interpret", df_k.derived_features_pallas)
+
+    register("gather_enrich", "ref", ge_r.gather_enrich_ref)
+    register("gather_enrich", "pallas", ge_k.gather_enrich_pallas)
+    register("gather_enrich", "interpret", ge_k.gather_enrich_pallas)
+
+    register("flash_attention", "ref", fa_r.flash_attention_ref)
+    register("flash_attention", "pallas", fa_k.flash_attention_pallas)
+    register("flash_attention", "interpret", fa_k.flash_attention_pallas)
+
+    # only after every family registered: a failed import above stays
+    # retryable instead of leaving a partial registry behind
+    _BUILTIN_LOADED = True

@@ -1,37 +1,22 @@
-"""Dispatching wrapper for the fused attention forward.
+"""Registry client for the fused attention forward.
 
 Model code keeps the pure-JAX flash path (attention.chunked_attention) as
 the portable default; on TPU this kernel replaces the forward hot loop
 (the §Roofline memory term's dominant contributor)."""
 from __future__ import annotations
 
-import jax
-
-from repro.kernels.flash_attention.kernel import flash_attention_pallas
-from repro.kernels.flash_attention.ref import flash_attention_ref
-
-
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
-
-
-def _pick(size: int, target: int) -> int:
-    target = max(1, min(target, size))
-    for c in range(target, 0, -1):
-        if size % c == 0:
-            return c
-    return size
+from repro.kernels import dispatch
 
 
 def flash_attention(q, k, v, *, group: int = 1, causal: bool = True,
-                    scale=None, force: str = "auto"):
-    """q: (BH, Sq, D); k/v: (BH//group, Sk, D|Dv) -> (BH, Sq, Dv)."""
-    if force == "ref" or (force == "auto" and not _on_tpu()):
-        return flash_attention_ref(q, k, v, group=group, causal=causal,
-                                   scale=scale)
-    interpret = (force == "interpret") or not _on_tpu()
-    bq = _pick(q.shape[1], 128)
-    bk = _pick(k.shape[1], 128)
-    return flash_attention_pallas(q, k, v, group=group, causal=causal,
-                                  scale=scale, bq=bq, bk=bk,
-                                  interpret=interpret)
+                    scale=None, backend=None, cfg=None, force=None):
+    """q: (BH, Sq, D); k/v: (BH//group, Sk, D|Dv) -> (BH, Sq, Dv).
+
+    ``force`` is the legacy name for ``backend`` (kept for callers)."""
+    b, impl = dispatch.lookup("flash_attention", backend or force, cfg)
+    if b == "ref":
+        return impl(q, k, v, group=group, causal=causal, scale=scale)
+    bq = dispatch.negotiate_tile(q.shape[1], 128)
+    bk = dispatch.negotiate_tile(k.shape[1], 128)
+    return impl(q, k, v, group=group, causal=causal, scale=scale,
+                bq=bq, bk=bk, interpret=dispatch.interpret_flag(b))

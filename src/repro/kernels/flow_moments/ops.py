@@ -1,26 +1,22 @@
-"""Dispatching wrapper: Pallas on TPU, interpret-mode Pallas or the jnp
-oracle elsewhere. This is the ``accumulate_fn`` plugged into
-repro.core.reporter.ingest."""
+"""Registry client for flow_moments — the ``accumulate_fn`` plugged into
+repro.core.reporter.ingest. Backend selection and tile negotiation live in
+repro.kernels.dispatch."""
 from __future__ import annotations
 
-import jax
-
-from repro.kernels.flow_moments.kernel import flow_moments_pallas
-from repro.kernels.flow_moments.ref import flow_moments_ref
+from repro.kernels import dispatch
 
 
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
+def flow_moments(regs, slots, deltas, valid, flow_tile=None,
+                 backend=None, cfg=None, force=None):
+    """regs: (F, 7) u32; slots: (E,) i32; deltas: (E, 7) u32; valid: (E,).
 
-
-def flow_moments(regs, slots, deltas, valid, flow_tile: int = 512,
-                 force: str = "auto"):
-    """force: "auto" | "pallas" | "interpret" | "ref"."""
-    if force == "ref" or (force == "auto" and not _on_tpu()):
-        return flow_moments_ref(regs, slots, deltas, valid)
-    interpret = (force == "interpret") or not _on_tpu()
-    ft = min(flow_tile, regs.shape[0])
-    while regs.shape[0] % ft:
-        ft -= 1
-    return flow_moments_pallas(regs, slots, deltas, valid, flow_tile=ft,
-                               interpret=interpret)
+    An explicit ``flow_tile`` wins; ``cfg.flow_tile`` is only the default.
+    ``force`` is the legacy name for ``backend`` (kept for callers)."""
+    b, impl = dispatch.lookup("flow_moments", backend or force, cfg)
+    if b == "ref":
+        return impl(regs, slots, deltas, valid)
+    if flow_tile is None:
+        flow_tile = cfg.flow_tile if cfg is not None else 512
+    ft = dispatch.negotiate_tile(regs.shape[0], flow_tile)
+    return impl(regs, slots, deltas, valid, flow_tile=ft,
+                interpret=dispatch.interpret_flag(b))

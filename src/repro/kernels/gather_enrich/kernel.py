@@ -1,0 +1,75 @@
+"""gather_enrich — fused history gather + feature derivation (Pallas).
+
+The unfused enrichment path gathers each routed report's (H, 16)-word ring
+history out of collector memory into an (R, H, 16) intermediate, then runs
+derived_features over it: one full round trip of 640 B/flow through HBM
+before the compute even starts. This kernel fuses the two stages: per
+report tile, a sequential gather loop pulls each flow's ring rows straight
+into a VMEM scratch tile and the derived-feature block is computed in
+place — the (R, H, 16) array never exists in HBM. This is the TPU shape of
+the paper's "build derived features on CUDA cores right next to the
+GDR-placed telemetry" argument (§III-C).
+
+Grid: (report_tiles,). Collector memory is presented as one un-tiled block
+(shard-local F; for Tofino-scale F keep shards small enough that the ring
+region fits VMEM, or fall back to the ref path).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.derived_features.kernel import derive_block
+
+WORDS = 16
+
+
+def _kernel(flows_ref, mem_ref, valid_ref, out_ref, ent_scratch,
+            val_scratch, *, derived_dim: int):
+    T = flows_ref.shape[0]
+
+    def gather(r, _):
+        f = flows_ref[r]
+        ent_scratch[pl.ds(r, 1)] = mem_ref[pl.ds(f, 1)]
+        val_scratch[pl.ds(r, 1)] = valid_ref[pl.ds(f, 1)]
+        return 0
+
+    jax.lax.fori_loop(0, T, gather, 0)
+    out_ref[...] = derive_block(ent_scratch[...], val_scratch[...] > 0,
+                                derived_dim)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("derived_dim", "report_tile",
+                                    "interpret"))
+def gather_enrich_pallas(memory: jax.Array, entry_valid: jax.Array,
+                         local_flow: jax.Array, derived_dim: int = 96,
+                         report_tile: int = 128,
+                         interpret: bool = True) -> jax.Array:
+    """memory: (F, H, 16) u32; entry_valid: (F, H); local_flow: (R,) i32
+    in [0, F) -> (R, derived_dim) f32."""
+    F, H, W = memory.shape
+    R = local_flow.shape[0]
+    assert R % report_tile == 0 and W == WORDS, (R, report_tile, W)
+    flows = jnp.clip(local_flow.astype(jnp.int32), 0, F - 1)
+
+    return pl.pallas_call(
+        functools.partial(_kernel, derived_dim=derived_dim),
+        grid=(R // report_tile,),
+        in_specs=[
+            pl.BlockSpec((report_tile,), lambda r: (r,)),
+            pl.BlockSpec((F, H, WORDS), lambda r: (0, 0, 0)),
+            pl.BlockSpec((F, H), lambda r: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((report_tile, derived_dim), lambda r: (r, 0)),
+        out_shape=jax.ShapeDtypeStruct((R, derived_dim), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((report_tile, H, WORDS), jnp.uint32),
+            pltpu.VMEM((report_tile, H), jnp.int32),
+        ],
+        interpret=interpret,
+    )(flows, memory, entry_valid.astype(jnp.int32))

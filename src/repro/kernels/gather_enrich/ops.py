@@ -1,0 +1,16 @@
+"""Registry client for the fused gather_enrich op (pipeline stage 6)."""
+from __future__ import annotations
+
+from repro.kernels import dispatch
+
+
+def gather_enrich(memory, entry_valid, local_flow, cfg, backend=None):
+    """(F,H,16) memory + (F,H) validity + (R,) local flow ids
+    -> (R, derived_dim) f32 enriched features, via the selected backend."""
+    b, impl = dispatch.lookup("gather_enrich", backend, cfg)
+    if b == "ref":
+        return impl(memory, entry_valid, local_flow, cfg)
+    rt = dispatch.negotiate_tile(local_flow.shape[0], cfg.flow_tile)
+    return impl(memory, entry_valid, local_flow,
+                derived_dim=cfg.derived_dim, report_tile=rt,
+                interpret=dispatch.interpret_flag(b))

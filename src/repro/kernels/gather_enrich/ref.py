@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for gather_enrich: explicit history gather followed by
+the enrichment oracle — materializes the (R, H, 16) intermediate the fused
+kernel exists to avoid."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.enrich import derive_ref
+
+
+def gather_enrich_ref(memory: jax.Array, entry_valid: jax.Array,
+                      local_flow: jax.Array, cfg) -> jax.Array:
+    """memory: (F, H, 16) u32; entry_valid: (F, H) bool;
+    local_flow: (R,) i32 in [0, F) -> (R, derived_dim) f32."""
+    lf = jnp.clip(local_flow.astype(jnp.int32), 0, memory.shape[0] - 1)
+    return derive_ref(memory[lf], entry_valid[lf], cfg)

@@ -1,34 +1,33 @@
-"""Dispatching wrapper for ring_scatter (collector scatter_fn slot-in)."""
+"""Registry client for ring_scatter (collector scatter_fn slot-in)."""
 from __future__ import annotations
 
-import jax
+import jax.numpy as jnp
 
-from repro.kernels.ring_scatter.kernel import ring_scatter_pallas
-from repro.kernels.ring_scatter.ref import ring_scatter_ref
-
-
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
+from repro.kernels import dispatch
 
 
-def ring_scatter(memory, payloads, flow, hist, mask, flow_tile: int = 512,
-                 force: str = "auto"):
-    if force == "ref" or (force == "auto" and not _on_tpu()):
-        return ring_scatter_ref(memory, payloads, flow, hist, mask)
-    interpret = (force == "interpret") or not _on_tpu()
-    ft = min(flow_tile, memory.shape[0])
-    while memory.shape[0] % ft:
-        ft -= 1
-    return ring_scatter_pallas(memory, payloads, flow, hist, mask,
-                               flow_tile=ft, history=memory.shape[1],
-                               interpret=interpret)
+def ring_scatter(memory, payloads, flow, hist, mask, flow_tile=None,
+                 backend=None, cfg=None, force=None):
+    """memory: (F, H, 16) u32; payloads: (R, 16) u32; flow/hist: (R,) i32.
+
+    An explicit ``flow_tile`` wins; ``cfg.flow_tile`` is only the default.
+    ``force`` is the legacy name for ``backend`` (kept for callers)."""
+    b, impl = dispatch.lookup("ring_scatter", backend or force, cfg)
+    if b == "ref":
+        return impl(memory, payloads, flow, hist, mask)
+    if flow_tile is None:
+        flow_tile = cfg.flow_tile if cfg is not None else 512
+    ft = dispatch.negotiate_tile(memory.shape[0], flow_tile)
+    return impl(memory, payloads, flow, hist, mask, flow_tile=ft,
+                history=memory.shape[1], interpret=dispatch.interpret_flag(b))
 
 
 def ring_scatter_collector(memory, entry_valid, payloads, flow, hist, mask,
-                           force: str = "interpret"):
-    """Adapter matching repro.core.collector.scatter_fn signature."""
-    mem = ring_scatter(memory, payloads, flow, hist, mask, force=force)
-    import jax.numpy as jnp
+                           backend=None, cfg=None, force=None):
+    """Adapter matching repro.core.collector.scatter_fn's signature:
+    placement via the dispatched kernel + jnp validity-bit update."""
+    mem = ring_scatter(memory, payloads, flow, hist, mask,
+                       backend=backend or force, cfg=cfg)
     F, H, _ = memory.shape
     ev = entry_valid.reshape(F * H).at[
         jnp.where(mask, flow * H + hist, F * H)].set(True, mode="drop")

@@ -6,11 +6,11 @@ from __future__ import annotations
 import jax
 from jax.sharding import Mesh
 
+from repro.compat import make_mesh
+
 
 def _mk(shape, axes, devices=None) -> Mesh:
-    return jax.make_mesh(
-        shape, axes, devices=devices,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes, devices=devices)
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:

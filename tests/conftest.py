@@ -1,7 +1,14 @@
 import os
 import sys
 
-# tests must see ONE device (the dry-run sets its own flag in-process)
+# Force 8 host CPU devices BEFORE jax initializes so multi-shard mesh tests
+# run on CPU-only hosts; merge with (never clobber) caller-provided
+# XLA_FLAGS. The dry-run sets its own 512-device flag in-process, which
+# wins because it runs in a fresh interpreter.
+_flags = os.environ.get("XLA_FLAGS", "")
+if "xla_force_host_platform_device_count" not in _flags:
+    os.environ["XLA_FLAGS"] = (
+        "--xla_force_host_platform_device_count=8 " + _flags).strip()
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
@@ -9,12 +16,24 @@ import jax  # noqa: E402
 import numpy as np  # noqa: E402
 import pytest  # noqa: E402
 
+from repro import compat  # noqa: E402
+
+
+def pytest_collection_modifyitems(config, items):
+    """Skip @pytest.mark.multidevice tests when the forced-device trick
+    didn't take (e.g. another jax-initializing plugin ran first)."""
+    if jax.device_count() >= 8:
+        return
+    skip = pytest.mark.skip(
+        reason=f"needs >= 8 local devices, have {jax.device_count()}")
+    for item in items:
+        if "multidevice" in item.keywords:
+            item.add_marker(skip)
+
 
 @pytest.fixture(scope="session")
 def mesh():
-    return jax.make_mesh(
-        (1, 1), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return compat.make_mesh((1, 1), ("data", "model"))
 
 
 @pytest.fixture()

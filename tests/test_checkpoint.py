@@ -58,8 +58,8 @@ def test_no_partial_checkpoint_visible(tmp_path, tree):
 def test_elastic_restore_resharding(tmp_path, tree):
     """Restore with explicit shardings (mesh migration path)."""
     C.save(tree, str(tmp_path), step=1)
-    mesh = jax.make_mesh((1,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.compat import make_mesh
+    mesh = make_mesh((1,), ("data",))
     sh = NamedSharding(mesh, P())
     shardings = jax.tree.map(lambda _: sh, tree)
     got, _ = C.restore(str(tmp_path), shardings=shardings)

@@ -5,6 +5,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.compat import make_mesh
 from repro.configs import get_dfa_config
 from repro.core import protocol as P
 from repro.core.pipeline import DFASystem
@@ -13,8 +14,7 @@ from repro.data import packets as PK
 
 @pytest.fixture(scope="module")
 def system():
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((1, 1), ("data", "model"))
     cfg = get_dfa_config(reduced=True)
     return DFASystem(cfg, mesh)
 

@@ -5,6 +5,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.compat import make_mesh
 from repro.configs import get_dfa_config
 from repro.core.pipeline import DFASystem
 from repro.data import packets as PK
@@ -12,8 +13,7 @@ from repro.data import packets as PK
 
 @pytest.fixture(scope="module")
 def mesh1():
-    return jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_mesh((1, 1), ("data", "model"))
 
 
 def test_telemetry_to_inference(mesh1):

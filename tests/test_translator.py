@@ -1,8 +1,11 @@
 """Translator semantics: history addressing + routing partition."""
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings
-from hypothesis import strategies as st
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings  # noqa: E402
+from hypothesis import strategies as st  # noqa: E402
 
 from repro.configs import get_dfa_config
 from repro.core import protocol as P
