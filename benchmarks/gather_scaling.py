@@ -1,0 +1,136 @@
+"""gather_enrich scaling sweep — flows/shard F up to the paper's 2^17.
+
+The question the tentpole answers: at what F does the full-block kernel
+(whole ring region as one VMEM block) stop being viable, and what does the
+HBM-resident tiled kernel cost at scale? This sweep times, per F:
+
+* ref                 — jnp oracle (gather + derive, (R,H,16) in HBM)
+* interpret/full      — full-block kernel, only while its working set
+                        fits the VMEM budget (beyond that the real TPU
+                        compile would fail — the sweep records the wall)
+* interpret/hbm       — HBM-tiled kernel, every F (its VMEM footprint is
+                        O(report_tile * H * 16), independent of F)
+
+plus the analytic VMEM crossover F from the budget formula — the bench-
+smoke artifact trends both the measured rows and the crossover per commit.
+CPU wall numbers are relative; the derived column carries a TPU v5e HBM
+projection of the per-report gather traffic (H * 68 B enriched straight
+out of the ring, no (R, H, 16) round trip).
+
+Standalone: ``python benchmarks/gather_scaling.py --tiny --json out.json``
+(also wired into benchmarks/run.py, so the CI bench-smoke artifact
+includes the per-F records).
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import sys
+
+if __package__ in (None, ""):           # executed as a script: mirror
+    _root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    sys.path.insert(0, os.path.join(_root, "src"))   # run.py's sys.path
+    sys.path.insert(0, _root)
+    if "--tiny" in sys.argv:            # before benchmarks.common binds TINY
+        os.environ["REPRO_BENCH_TINY"] = "1"
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import HBM_BW, TINY, csv, time_it
+from repro.configs import get_dfa_config
+from repro.kernels import dispatch
+from repro.kernels.gather_enrich.ops import gather_enrich
+
+H = 8                                    # acceptance shape: 2^17 x 8
+R = 256 if TINY else 1024
+REPORT_TILE = 128
+F_SWEEP = ([1 << 12, 1 << 14, 1 << 17] if TINY else
+           [1 << 10, 1 << 12, 1 << 14, 1 << 16, 1 << 17])
+
+
+def _case(F, rng):
+    mem = jnp.asarray(rng.integers(0, 1 << 20, size=(F, H, 16),
+                                   dtype=np.uint64).astype(np.uint32))
+    ev = jnp.asarray(rng.random((F, H)) > 0.3)
+    lf = jnp.asarray(rng.integers(0, F, size=R).astype(np.int32))
+    return mem, ev, lf
+
+
+def _timed(mem, ev, lf, cfg, backend, variant=None):
+    fn = jax.jit(lambda m, e, l: gather_enrich(m, e, l, cfg,
+                                               backend=backend,
+                                               variant=variant))
+    return time_it(fn, mem, ev, lf)
+
+
+def run():
+    cfg = dataclasses.replace(get_dfa_config(), history=H,
+                              flow_tile=REPORT_TILE)
+    budget = cfg.vmem_budget_mb * dispatch.VMEM_BYTES_PER_MB
+    rng = np.random.default_rng(0)
+    # per-report ring traffic the fused path moves: H x (64 B entry + 4 B
+    # validity) in, derived_dim x 4 B out — the v5e HBM-bound floor
+    bytes_per_report = H * (16 * 4 + 4) + cfg.derived_dim * 4
+    for F in F_SWEEP:
+        mem, ev, lf = _case(F, rng)
+        full_fits = dispatch.gather_vmem_bytes(
+            "full", F, H, REPORT_TILE, cfg.derived_dim) <= budget
+        auto = dispatch.resolve_gather_variant(None, cfg, F, H,
+                                               REPORT_TILE,
+                                               cfg.derived_dim)
+        variants = [("ref", "ref", None), ("interpret", "hbm", "hbm")]
+        if full_fits:
+            variants.append(("interpret", "full", "full"))
+        for backend, label, variant in variants:
+            t = _timed(mem, ev, lf, cfg, backend, variant)
+            tpu_us = R * bytes_per_report / HBM_BW * 1e6
+            csv(f"gather_scaling_F{F}_{label}", t * 1e6,
+                f"flows_per_s={R / t:.3e};R={R};H={H};auto={auto};"
+                f"tpu_v5e_us={tpu_us:.2f}")
+        if not full_fits:
+            # 0.0, not NaN: NaN rows would make the bench-smoke JSON
+            # artifact unparseable by strict consumers (jq, JSON.parse)
+            csv(f"gather_scaling_F{F}_full", 0.0,
+                f"skipped=ring_region_exceeds_vmem;"
+                f"ring_mb={dispatch.ring_vmem_bytes(F, H) / 2**20:.1f};"
+                f"budget_mb={cfg.vmem_budget_mb}")
+    # analytic crossover: largest power-of-two F whose full-block working
+    # set still fits the budget — auto flips to hbm one step above
+    Fx = 1
+    while dispatch.gather_vmem_bytes("full", Fx * 2, H, REPORT_TILE,
+                                     cfg.derived_dim) <= budget:
+        Fx *= 2
+    csv("gather_scaling_vmem_crossover", 0.0,
+        f"max_full_F={Fx};budget_mb={cfg.vmem_budget_mb};H={H};"
+        f"paper_F={1 << 17};paper_variant="
+        f"{dispatch.resolve_gather_variant(None, cfg, 1 << 17, H, REPORT_TILE, cfg.derived_dim)}")
+
+
+def main():
+    """Standalone entry: python benchmarks/gather_scaling.py [--tiny]
+    [--json PATH]. The --tiny env contract matches run.py (the flag is
+    consumed before benchmarks.common binds TINY, via the script
+    bootstrap above)."""
+    import argparse
+    import json
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--tiny", action="store_true")
+    ap.add_argument("--json", default=None, metavar="PATH")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    run()
+    if args.json:
+        from benchmarks import common
+        with open(args.json, "w") as f:
+            json.dump({"schema": "repro-bench-v1", "tiny": TINY,
+                       "jax": jax.__version__,
+                       "jax_backend": jax.default_backend(),
+                       "rows": common.ROWS}, f, indent=1)
+        print(f"[gather_scaling] wrote {len(common.ROWS)} rows -> "
+              f"{args.json}", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -5,11 +5,18 @@ path running continuously, period after period, with the ring memory
 updated in place — and the scan removes the per-period host dispatch the
 sequential loop pays.
 
+Also streams the same periods through both gather_enrich memory
+strategies (interpret backend, full-block VMEM vs HBM-tiled DMA) so the
+bench-smoke artifact records what the Tofino-scale memory strategy costs
+inside the full pipeline, not just at kernel level (gather_scaling.py).
+
 TPU projection: the per-period byte budget is identical to dfa_throughput;
 streaming changes the *dispatch* overhead, so the derived column reports
 host-side us/period for both drivers plus the scan speedup.
 """
 from __future__ import annotations
+
+import dataclasses
 
 import jax
 import jax.numpy as jnp
@@ -66,6 +73,19 @@ def run():
         f"us_per_period={t_seq / T * 1e6:.1f}")
     csv("streaming_scan_speedup", 0.0,
         f"x={t_seq / t_stream:.2f};paper_period_ms=20")
+
+    # gather memory strategy inside the stream: full-block vs HBM-tiled
+    # (interpret backend — CPU-relative numbers; the variant knob is what
+    # is being exercised, selection happens at trace time)
+    for variant in ("full", "hbm"):
+        cfg_v = dataclasses.replace(cfg, kernel_backend="interpret",
+                                    gather_variant=variant)
+        sys_v = DFASystem(cfg_v, mesh)
+        t_v = time_loop(sys_v.jit_stream(donate=True),
+                        sys_v.init_sharded_state(), events, nows)
+        csv(f"streaming_gather_{variant}", t_v / T * 1e6,
+            f"periods={T};events_per_s={T * E / t_v:.3e};"
+            f"backend=interpret;variant={variant}")
 
 
 if __name__ == "__main__":

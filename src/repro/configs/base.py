@@ -159,6 +159,20 @@ class DFAConfig:
     # "interpret" — see repro.kernels.dispatch (REPRO_KERNEL_BACKEND env
     # var overrides this field; an explicit backend= argument beats both)
     kernel_backend: str = "auto"
+    # gather_enrich memory strategy: "auto" | "full" (ring region pinned
+    # in VMEM) | "hbm" (ring stays HBM-resident, per-report-tile DMA).
+    # auto = VMEM-budget heuristic in dispatch.resolve_gather_variant;
+    # REPRO_GATHER_VARIANT env var overrides this field.
+    gather_variant: str = "auto"
+    # per-core VMEM the auto heuristic may plan against (TPU v4/v5e have
+    # ~16 MB; the full-block kernel is chosen only while its ring region
+    # + tile working set fit under this)
+    vmem_budget_mb: int = 16
+
+    def ring_region_bytes(self) -> int:
+        """Shard-local collector ring region footprint (entries+validity)."""
+        return self.flows_per_shard * self.history * (
+            self.payload_words * 4 + 4)
 
     def total_flows(self, shards: int) -> int:
         return self.flows_per_shard * shards

@@ -1,12 +1,22 @@
 """The paper's own DFA system configuration (defaults = Tofino deployment).
 
 PAPER      — faithful Tofino-scale config: 2^17 flows/shard, 10-entry ring,
-             64 B payload, 20 ms monitoring period.
-REDUCED    — CPU-testable miniature with the same structure.
+             64 B payload, 20 ms monitoring period. At this scale the ring
+             region is ~84 MB/shard, so gather_variant="auto" resolves to
+             the HBM-resident tiled kernel (ring stays in HBM, VMEM holds
+             only double-buffered report tiles).
+REDUCED    — CPU-testable miniature with the same structure; its ~170 KB
+             ring region fits VMEM, so auto resolves to the full-block
+             kernel.
 """
+import dataclasses
+
 from repro.configs.base import DFAConfig
 
-PAPER = DFAConfig()
+PAPER = DFAConfig(
+    gather_variant="auto",     # budget heuristic -> "hbm" at 2^17 flows
+    vmem_budget_mb=16,         # TPU v4/v5e per-core VMEM
+)
 
 REDUCED = DFAConfig(
     flows_per_shard=256,
@@ -19,4 +29,11 @@ REDUCED = DFAConfig(
     report_capacity=128,
     derived_dim=96,
     flow_tile=64,
+    gather_variant="auto",     # budget heuristic -> "full" at 256 flows
+    vmem_budget_mb=16,
 )
+
+# REDUCED shapes forced onto the Tofino-scale memory strategy: the
+# equivalence suite / benchmarks use this to exercise the HBM-tiled path
+# without allocating a 2^17-flow ring.
+REDUCED_HBM = dataclasses.replace(REDUCED, gather_variant="hbm")

@@ -120,3 +120,15 @@ def gather_flow_history(state: CollectorState, local_flow: jax.Array
                         ) -> Tuple[jax.Array, jax.Array]:
     """(flows_q,) -> (flows_q, H, 16) entries + validity (inference input)."""
     return state.memory[local_flow], state.entry_valid[local_flow]
+
+
+def enrich_flow_history(state: CollectorState, local_flow: jax.Array,
+                        cfg: DFAConfig, backend=None,
+                        variant=None) -> jax.Array:
+    """Fused alternative to gather_flow_history + derive: (flows_q,) ->
+    (flows_q, derived_dim) f32 straight out of the ring region, routed
+    through the kernel dispatch registry (backend + gather variant).
+    The (flows_q, H, 16) intermediate never exists in HBM."""
+    from repro.core.enrich import enrich_history
+    return enrich_history(state.memory, state.entry_valid, local_flow,
+                          cfg, backend=backend, variant=variant)

@@ -95,3 +95,21 @@ def derive_ref(memory_entries: jax.Array, entry_valid: jax.Array,
     if D < cfg.derived_dim:
         out = jnp.pad(out, ((0, 0), (0, cfg.derived_dim - D)))
     return out[:, :cfg.derived_dim]
+
+
+def enrich_history(memory: jax.Array, entry_valid: jax.Array,
+                   local_flow: jax.Array, cfg: DFAConfig,
+                   backend=None, variant=None) -> jax.Array:
+    """Selector-routed fused gather + derivation: the public enrichment
+    entry point. (F, H, 16) ring memory + (F, H) validity + (R,) local
+    flow ids -> (R, derived_dim) f32.
+
+    Routes through the gather_enrich dispatch family — backend per
+    ``DFAConfig.kernel_backend`` / ``REPRO_KERNEL_BACKEND``, memory
+    strategy (full-block VMEM vs HBM-resident tiled) per
+    ``DFAConfig.gather_variant`` / ``REPRO_GATHER_VARIANT`` / the
+    VMEM-budget heuristic. Never materializes the (R, H, 16) gather.
+    """
+    from repro.kernels.gather_enrich.ops import gather_enrich  # no cycle
+    return gather_enrich(memory, entry_valid, local_flow, cfg,
+                         backend=backend, variant=variant)

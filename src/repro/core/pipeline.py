@@ -41,7 +41,7 @@ from repro.core import collector as COLL
 from repro.core import protocol as PROTO
 from repro.core import reporter as REP
 from repro.core import translator as TRANS
-from repro.kernels.gather_enrich.ops import gather_enrich
+from repro.kernels import dispatch
 
 Tree = Any
 
@@ -146,9 +146,11 @@ class DFASystem:
             coll_st = COLL.ingest(coll_st, payloads, rmask, flow_base, cfg)
             # 6. fused gather + enrichment of received flows (via dispatch;
             #    skips the (R, H, 16) history materialization; the op owns
-            #    the [0, F) clamp of local_flow)
-            enriched = gather_enrich(coll_st.memory, coll_st.entry_valid,
-                                     coords["local_flow"], cfg)
+            #    the [0, F) clamp of local_flow and the memory-strategy
+            #    choice — full-block VMEM at reduced F, HBM-tiled at
+            #    Tofino scale)
+            enriched = COLL.enrich_flow_history(coll_st,
+                                                coords["local_flow"], cfg)
             enriched = jnp.where(rmask[:, None], enriched, 0.0)
             flow_ids = jnp.where(rmask, routed[:, 0],
                                  jnp.uint32(0xFFFFFFFF))
@@ -209,6 +211,32 @@ class DFASystem:
         return state, enriched, flow_ids, emask, metrics
 
     # -- convenience ------------------------------------------------------
+    def describe(self) -> Dict[str, Any]:
+        """Trace-time kernel selection for this system: backend, gather
+        memory strategy, and the VMEM numbers that drove the choice."""
+        cfg = self.cfg
+        backend = dispatch.resolve_backend(None, cfg)
+        # mirror dfa_step: each shard enriches n_shards * cap_out routed
+        # rows, and ops.gather_enrich tiles that R by flow_tile
+        R = self.n_shards * max(1, cfg.report_capacity // self.n_shards)
+        tile = min(cfg.flow_tile, R)
+        variant = ("ref" if backend == "ref" else
+                   dispatch.resolve_gather_variant(
+                       None, cfg, cfg.flows_per_shard, cfg.history, tile,
+                       cfg.derived_dim))
+        return {
+            "kernel_backend": backend,
+            "gather_variant": variant,
+            "ring_region_bytes": cfg.ring_region_bytes(),
+            "vmem_budget_bytes": cfg.vmem_budget_mb
+            * dispatch.VMEM_BYTES_PER_MB,
+            "gather_vmem_bytes": dispatch.gather_vmem_bytes(
+                "hbm" if variant == "hbm" else "full",
+                cfg.flows_per_shard, cfg.history, tile, cfg.derived_dim,
+                words=cfg.payload_words),
+            "n_shards": self.n_shards,
+        }
+
     def jit_step(self, donate: bool = True):
         return jax.jit(self.dfa_step,
                        donate_argnums=(0,) if donate else ())

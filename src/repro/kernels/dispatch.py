@@ -19,6 +19,18 @@ Backend selection precedence (strongest first):
 3. ``DFAConfig.kernel_backend``
 4. auto: ``pallas`` on TPU, ``ref`` everywhere else
 
+An unrecognized value raises ValueError listing the registered backends no
+matter where it sits in the precedence chain — a typo'd env var must fail
+loudly even at call sites that pass an explicit ``backend=``, not silently
+lose to the stronger setting.
+
+``gather_enrich`` additionally carries a memory-strategy *variant*: the
+``full`` kernel pins the shard's whole (F, H, 16) ring region in VMEM,
+the ``hbm`` kernel keeps it HBM-resident and DMAs per-report tiles into
+double-buffered scratch. ``resolve_gather_variant`` picks one by a
+VMEM-budget heuristic (full while the ring region fits, hbm beyond),
+overridable via ``DFAConfig.gather_variant`` or ``REPRO_GATHER_VARIANT``.
+
 Resolution happens at trace time: a step traced under one setting keeps it
 until re-traced (jit caches are keyed on shapes, not on this env var).
 """
@@ -32,6 +44,11 @@ import jax
 
 BACKENDS = ("ref", "pallas", "interpret")
 ENV_VAR = "REPRO_KERNEL_BACKEND"
+
+GATHER_VARIANTS = ("full", "hbm")
+GATHER_ENV_VAR = "REPRO_GATHER_VARIANT"
+WORDS = 16               # collector entry words (64 B RoCEv2 payload)
+VMEM_BYTES_PER_MB = 1 << 20
 
 _REGISTRY: Dict[str, Dict[str, Callable]] = {}
 _BUILTIN_LOADED = False
@@ -76,23 +93,96 @@ def negotiate_tile(size: int, preferred: int) -> int:
     return t
 
 
+def _check_choice(value: str, valid: Tuple[str, ...], source: str) -> None:
+    if value not in valid:
+        raise ValueError(
+            f"unknown value {value!r} from {source}; registered: "
+            f"{list(valid)} (or 'auto')")
+
+
 def resolve_backend(backend: Optional[str] = None, cfg=None) -> str:
-    """Apply the selection precedence; returns one of BACKENDS."""
+    """Apply the selection precedence; returns one of BACKENDS.
+
+    A malformed ``REPRO_KERNEL_BACKEND`` raises even when a stronger
+    setting (explicit argument) would win: a typo'd env var silently
+    losing the precedence fight is indistinguishable from it working.
+    """
+    env = os.environ.get(ENV_VAR, "").strip().lower()
+    if env not in ("", "auto"):
+        _check_choice(env, BACKENDS, f"env var {ENV_VAR}")
     if backend in (None, "auto", ""):
-        env = os.environ.get(ENV_VAR, "").strip().lower()
         cfg_backend = (getattr(cfg, "kernel_backend", "auto")
                        if cfg is not None else "auto") or "auto"
         if env not in ("", "auto"):
             backend = env
         elif cfg_backend != "auto":
+            _check_choice(cfg_backend, BACKENDS,
+                          "DFAConfig.kernel_backend")
             backend = cfg_backend
         else:
             backend = "pallas" if jax.default_backend() == "tpu" else "ref"
-    if backend not in BACKENDS:
-        raise ValueError(
-            f"unknown kernel backend {backend!r}; expected one of "
-            f"{BACKENDS} or 'auto'")
+    _check_choice(backend, BACKENDS, "backend= argument")
     return backend
+
+
+# -- gather_enrich memory-strategy variant ----------------------------------
+
+def ring_vmem_bytes(flows: int, history: int, words: int = WORDS) -> int:
+    """VMEM the full-block gather_enrich kernel pins for the shard ring
+    region: (F, H, words) u32 entries + (F, H) i32 validity."""
+    return flows * history * (words * 4 + 4)
+
+
+def gather_vmem_bytes(variant: str, flows: int, history: int,
+                      report_tile: int, derived_dim: int,
+                      words: int = WORDS) -> int:
+    """Estimated peak VMEM working set of one gather_enrich variant.
+
+    full: whole ring region + one report-tile scratch pair + out tile.
+    hbm:  two double-buffered report-tile scratch pairs + out tile —
+          independent of F (the ring region stays in HBM).
+    """
+    tile = report_tile * history * (words * 4 + 4)   # entries + validity
+    out = report_tile * derived_dim * 4
+    if variant == "full":
+        return ring_vmem_bytes(flows, history, words) + tile + out
+    if variant == "hbm":
+        return 2 * tile + out
+    raise ValueError(f"unknown gather variant {variant!r}; "
+                     f"registered: {list(GATHER_VARIANTS)}")
+
+
+def resolve_gather_variant(variant: Optional[str], cfg, flows: int,
+                           history: int, report_tile: int,
+                           derived_dim: int) -> str:
+    """full-block while its working set fits the VMEM budget, hbm beyond.
+
+    Same precedence (and same fail-loud env validation) as backends:
+    explicit ``variant=`` argument > ``REPRO_GATHER_VARIANT`` >
+    ``DFAConfig.gather_variant`` > the budget heuristic against
+    ``DFAConfig.vmem_budget_mb``.
+    """
+    env = os.environ.get(GATHER_ENV_VAR, "").strip().lower()
+    if env not in ("", "auto"):
+        _check_choice(env, GATHER_VARIANTS, f"env var {GATHER_ENV_VAR}")
+    if variant in (None, "auto", ""):
+        cfg_variant = (getattr(cfg, "gather_variant", "auto")
+                       if cfg is not None else "auto") or "auto"
+        if env not in ("", "auto"):
+            variant = env
+        elif cfg_variant != "auto":
+            _check_choice(cfg_variant, GATHER_VARIANTS,
+                          "DFAConfig.gather_variant")
+            variant = cfg_variant
+        else:
+            budget = int(getattr(cfg, "vmem_budget_mb", 16)
+                         ) * VMEM_BYTES_PER_MB
+            need = gather_vmem_bytes(
+                "full", flows, history, report_tile, derived_dim,
+                words=int(getattr(cfg, "payload_words", WORDS)))
+            variant = "full" if need <= budget else "hbm"
+    _check_choice(variant, GATHER_VARIANTS, "variant= argument")
+    return variant
 
 
 def interpret_flag(backend: str) -> bool:
@@ -159,6 +249,13 @@ def _ensure_builtin() -> None:
     register("gather_enrich", "ref", ge_r.gather_enrich_ref)
     register("gather_enrich", "pallas", ge_k.gather_enrich_pallas)
     register("gather_enrich", "interpret", ge_k.gather_enrich_pallas)
+
+    # HBM-resident memory-strategy variant (same semantics, ring region
+    # stays in HBM; selected by resolve_gather_variant)
+    register("gather_enrich_hbm", "ref", ge_r.gather_enrich_ref)
+    register("gather_enrich_hbm", "pallas", ge_k.gather_enrich_hbm_pallas)
+    register("gather_enrich_hbm", "interpret",
+             ge_k.gather_enrich_hbm_pallas)
 
     register("flash_attention", "ref", fa_r.flash_attention_ref)
     register("flash_attention", "pallas", fa_k.flash_attention_pallas)

@@ -3,16 +3,28 @@
 The unfused enrichment path gathers each routed report's (H, 16)-word ring
 history out of collector memory into an (R, H, 16) intermediate, then runs
 derived_features over it: one full round trip of 640 B/flow through HBM
-before the compute even starts. This kernel fuses the two stages: per
-report tile, a sequential gather loop pulls each flow's ring rows straight
-into a VMEM scratch tile and the derived-feature block is computed in
-place — the (R, H, 16) array never exists in HBM. This is the TPU shape of
-the paper's "build derived features on CUDA cores right next to the
-GDR-placed telemetry" argument (§III-C).
+before the compute even starts. Both kernels here fuse the two stages so
+the (R, H, 16) array never exists in HBM — the TPU shape of the paper's
+"build derived features on CUDA cores right next to the GDR-placed
+telemetry" argument (§III-C). Two memory strategies:
 
-Grid: (report_tiles,). Collector memory is presented as one un-tiled block
-(shard-local F; for Tofino-scale F keep shards small enough that the ring
-region fits VMEM, or fall back to the ref path).
+``gather_enrich_pallas`` (full-block)
+    Collector memory is presented as one un-tiled VMEM block and rows are
+    copied scratch-to-scratch inside the kernel. Fastest when the shard
+    ring region fits VMEM (reduced configs); impossible at Tofino scale —
+    2^17 flows x 10 x 64 B is ~84 MB against ~16 MB of VMEM.
+
+``gather_enrich_hbm_pallas`` (HBM-resident, tiled)
+    Collector memory stays in HBM (``pltpu.ANY``); the routed flow ids are
+    scalar-prefetched into SMEM and a per-report-tile double-buffered DMA
+    loop (``pltpu.make_async_copy`` into two scratch slots) pulls each
+    flow's (H, 16) ring rows into VMEM while the previous tile's
+    derive_block computes. VMEM footprint is O(report_tile * H * 16)
+    regardless of F, which is what lets one shard own the paper's full
+    2^17-flow table.
+
+Variant selection (VMEM-budget heuristic + overrides) lives in
+repro.kernels.dispatch; both kernels compute bit-identical features.
 """
 from __future__ import annotations
 
@@ -28,8 +40,12 @@ from repro.kernels.derived_features.kernel import derive_block
 WORDS = 16
 
 
-def _kernel(flows_ref, mem_ref, valid_ref, out_ref, ent_scratch,
-            val_scratch, *, derived_dim: int):
+# ---------------------------------------------------------------------------
+# full-block variant: ring region pinned in VMEM
+# ---------------------------------------------------------------------------
+
+def _full_kernel(flows_ref, mem_ref, valid_ref, out_ref, ent_scratch,
+                 val_scratch, *, derived_dim: int):
     T = flows_ref.shape[0]
 
     def gather(r, _):
@@ -58,7 +74,7 @@ def gather_enrich_pallas(memory: jax.Array, entry_valid: jax.Array,
     flows = jnp.clip(local_flow.astype(jnp.int32), 0, F - 1)
 
     return pl.pallas_call(
-        functools.partial(_kernel, derived_dim=derived_dim),
+        functools.partial(_full_kernel, derived_dim=derived_dim),
         grid=(R // report_tile,),
         in_specs=[
             pl.BlockSpec((report_tile,), lambda r: (r,)),
@@ -71,5 +87,99 @@ def gather_enrich_pallas(memory: jax.Array, entry_valid: jax.Array,
             pltpu.VMEM((report_tile, H, WORDS), jnp.uint32),
             pltpu.VMEM((report_tile, H), jnp.int32),
         ],
+        interpret=interpret,
+    )(flows, memory, entry_valid.astype(jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# HBM-resident variant: ring region stays in HBM, per-tile DMA gather
+# ---------------------------------------------------------------------------
+
+N_SLOTS = 2          # double buffering: fetch tile i+1 while tile i computes
+SEM_ENT, SEM_VAL = 0, 1
+
+
+def _hbm_kernel(flows_ref, mem_ref, valid_ref, out_ref, ent_scratch,
+                val_scratch, sems, *, derived_dim: int, report_tile: int,
+                n_tiles: int):
+    """Grid step i: wait for tile i's rows (prefetched by step i-1, or by
+    the prologue for i == 0), kick off tile i+1's DMAs into the other
+    scratch slot, then derive tile i in place."""
+    i = pl.program_id(0)
+
+    def _row_copies(tile, slot, r):
+        f = flows_ref[tile * report_tile + r]
+        ent = pltpu.make_async_copy(mem_ref.at[f], ent_scratch.at[slot, r],
+                                    sems.at[slot, SEM_ENT])
+        val = pltpu.make_async_copy(valid_ref.at[f], val_scratch.at[slot, r],
+                                    sems.at[slot, SEM_VAL])
+        return ent, val
+
+    def start_tile(tile, slot):
+        def row(r, _):
+            ent, val = _row_copies(tile, slot, r)
+            ent.start()
+            val.start()
+            return 0
+        jax.lax.fori_loop(0, report_tile, row, 0)
+
+    def wait_tile(tile, slot):
+        def row(r, _):
+            ent, val = _row_copies(tile, slot, r)
+            ent.wait()
+            val.wait()
+            return 0
+        jax.lax.fori_loop(0, report_tile, row, 0)
+
+    @pl.when(i == 0)
+    def _prologue():
+        start_tile(0, 0)
+
+    @pl.when(i + 1 < n_tiles)
+    def _prefetch_next():
+        start_tile(i + 1, (i + 1) % N_SLOTS)
+
+    slot = i % N_SLOTS
+    wait_tile(i, slot)
+    out_ref[...] = derive_block(ent_scratch[slot], val_scratch[slot] > 0,
+                                derived_dim)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("derived_dim", "report_tile",
+                                    "interpret"))
+def gather_enrich_hbm_pallas(memory: jax.Array, entry_valid: jax.Array,
+                             local_flow: jax.Array, derived_dim: int = 96,
+                             report_tile: int = 128,
+                             interpret: bool = True) -> jax.Array:
+    """Same contract as gather_enrich_pallas, but ``memory``/``entry_valid``
+    never leave HBM as whole blocks: VMEM holds only two
+    (report_tile, H, 16) scratch slots, so F is unbounded by VMEM."""
+    F, H, W = memory.shape
+    R = local_flow.shape[0]
+    assert R % report_tile == 0 and W == WORDS, (R, report_tile, W)
+    n_tiles = R // report_tile
+    flows = jnp.clip(local_flow.astype(jnp.int32), 0, F - 1)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,            # flows -> SMEM, whole array
+        grid=(n_tiles,),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.ANY),     # ring region (HBM)
+            pl.BlockSpec(memory_space=pltpu.ANY),     # validity (HBM)
+        ],
+        out_specs=pl.BlockSpec((report_tile, derived_dim),
+                               lambda i, flows: (i, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((N_SLOTS, report_tile, H, WORDS), jnp.uint32),
+            pltpu.VMEM((N_SLOTS, report_tile, H), jnp.int32),
+            pltpu.SemaphoreType.DMA((N_SLOTS, 2)),
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_hbm_kernel, derived_dim=derived_dim,
+                          report_tile=report_tile, n_tiles=n_tiles),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((R, derived_dim), jnp.float32),
         interpret=interpret,
     )(flows, memory, entry_valid.astype(jnp.int32))

@@ -21,7 +21,7 @@ from repro.kernels.ring_scatter.ops import ring_scatter
 
 J = jnp.asarray
 FAMILIES = ("flow_moments", "ring_scatter", "derived_features",
-            "gather_enrich", "flash_attention")
+            "gather_enrich", "gather_enrich_hbm", "flash_attention")
 
 
 # -- registry & selection -----------------------------------------------------
@@ -61,6 +61,87 @@ def test_backend_precedence(monkeypatch):
 def test_unknown_family_raises():
     with pytest.raises(KeyError):
         dispatch.lookup("no_such_kernel")
+
+
+def test_unknown_env_backend_always_raises(monkeypatch):
+    """Regression: a typo'd REPRO_KERNEL_BACKEND used to be silently
+    ignored whenever the call site passed an explicit backend= (explicit
+    wins the precedence fight, so the env value was never validated).
+    A malformed env var must raise with the registered backends listed,
+    no matter what else is set."""
+    cfg = get_dfa_config(reduced=True)
+    monkeypatch.setenv(dispatch.ENV_VAR, "cuda")
+    for explicit in (None, "auto", "ref", "interpret"):
+        with pytest.raises(ValueError) as ei:
+            dispatch.resolve_backend(explicit, cfg)
+        msg = str(ei.value)
+        assert dispatch.ENV_VAR in msg
+        for b in dispatch.BACKENDS:
+            assert b in msg
+    with pytest.raises(ValueError):
+        dispatch.lookup("gather_enrich", "ref", cfg)
+
+
+def test_unknown_cfg_backend_raises(monkeypatch):
+    monkeypatch.delenv(dispatch.ENV_VAR, raising=False)
+    cfg = dataclasses.replace(get_dfa_config(reduced=True),
+                              kernel_backend="vulkan")
+    with pytest.raises(ValueError) as ei:
+        dispatch.resolve_backend(None, cfg)
+    assert "kernel_backend" in str(ei.value)
+    # explicit argument still beats a malformed config field (only the
+    # env var is validated unconditionally: config is code, env is ops)
+    assert dispatch.resolve_backend("ref", cfg) == "ref"
+
+
+# -- gather_enrich memory-strategy variant ------------------------------------
+
+def test_gather_variant_precedence(monkeypatch):
+    cfg = get_dfa_config(reduced=True)
+    F, H = cfg.flows_per_shard, cfg.history
+    args = (F, H, 64, cfg.derived_dim)
+    monkeypatch.delenv(dispatch.GATHER_ENV_VAR, raising=False)
+    # auto on the reduced config: ring region fits VMEM -> full
+    assert dispatch.resolve_gather_variant(None, cfg, *args) == "full"
+    # config field beats auto
+    cfg_h = dataclasses.replace(cfg, gather_variant="hbm")
+    assert dispatch.resolve_gather_variant(None, cfg_h, *args) == "hbm"
+    # env beats config
+    monkeypatch.setenv(dispatch.GATHER_ENV_VAR, "full")
+    assert dispatch.resolve_gather_variant(None, cfg_h, *args) == "full"
+    # explicit argument beats env
+    assert dispatch.resolve_gather_variant("hbm", cfg_h, *args) == "hbm"
+    # malformed env raises even under an explicit argument
+    monkeypatch.setenv(dispatch.GATHER_ENV_VAR, "sram")
+    for explicit in (None, "auto", "full", "hbm"):
+        with pytest.raises(ValueError) as ei:
+            dispatch.resolve_gather_variant(explicit, cfg, *args)
+        assert dispatch.GATHER_ENV_VAR in str(ei.value)
+        assert "hbm" in str(ei.value)
+
+
+def test_gather_variant_vmem_budget_heuristic(monkeypatch):
+    monkeypatch.delenv(dispatch.GATHER_ENV_VAR, raising=False)
+    reduced = get_dfa_config(reduced=True)
+    paper = get_dfa_config()
+    # reduced ring (~170 KB) fits a 16 MB budget; paper ring (~84 MB)
+    # cannot -> the Tofino-scale config auto-selects the HBM-tiled path
+    assert dispatch.resolve_gather_variant(
+        None, reduced, reduced.flows_per_shard, reduced.history, 64,
+        reduced.derived_dim) == "full"
+    assert dispatch.resolve_gather_variant(
+        None, paper, paper.flows_per_shard, paper.history, 512,
+        paper.derived_dim) == "hbm"
+    # shrinking the budget flips the reduced config to hbm too
+    tiny = dataclasses.replace(reduced, vmem_budget_mb=0)
+    assert dispatch.resolve_gather_variant(
+        None, tiny, tiny.flows_per_shard, tiny.history, 64,
+        tiny.derived_dim) == "hbm"
+    # the hbm working set is F-independent and under any sane budget
+    assert dispatch.gather_vmem_bytes(
+        "hbm", 1 << 17, 10, 512, 96) == dispatch.gather_vmem_bytes(
+        "hbm", 256, 10, 512, 96)
+    assert dispatch.ring_vmem_bytes(1 << 17, 10) > 16 * 2**20
 
 
 # -- per-family ref vs interpret equivalence ---------------------------------

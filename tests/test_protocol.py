@@ -1,15 +1,22 @@
-"""Wire-format round trips (paper Figs 2/4) — bit-level properties."""
+"""Wire-format round trips (paper Figs 2/4) — bit-level properties.
+
+Plain tests run everywhere; the randomized round-trip/corruption sweeps
+additionally run under hypothesis when it is installed (CI always has it).
+"""
 import jax.numpy as jnp
 import numpy as np
-import pytest
-
-hypothesis = pytest.importorskip("hypothesis")
-from hypothesis import given, settings  # noqa: E402
-from hypothesis import strategies as st  # noqa: E402
 
 from repro.core import protocol as P
 
-u32 = st.integers(min_value=0, max_value=2**32 - 1)
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:       # pragma: no cover - exercised on bare containers
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+    u32 = st.integers(min_value=0, max_value=2**32 - 1)
 
 
 def test_sizes_match_paper():
@@ -19,51 +26,158 @@ def test_sizes_match_paper():
     assert P.REPORT_WORDS * 4 - 8 > P.MARINA_VECTOR_BYTES  # data fits
 
 
-@settings(max_examples=100, deadline=None)
-@given(u32, st.integers(0, 255), st.integers(0, 255),
-       st.lists(u32, min_size=7, max_size=7),
-       st.lists(u32, min_size=5, max_size=5))
-def test_dta_roundtrip(flow, rid, seq, stats, tup):
-    r = P.pack_dta_report(jnp.uint32(flow), jnp.uint32(rid),
-                          jnp.uint32(seq), jnp.asarray(stats, jnp.uint32),
-                          jnp.asarray(tup, jnp.uint32))
-    assert r.shape == (P.REPORT_WORDS,)
+def _payload(flow=7, rid=1, seq=0, hist=3, stats=None, tup=None):
+    rep = {"flow_id": jnp.uint32(flow), "reporter_id": jnp.uint32(rid),
+           "seq": jnp.uint32(seq),
+           "stats": jnp.asarray(stats if stats is not None
+                                else np.arange(7), jnp.uint32),
+           "five_tuple": jnp.asarray(tup if tup is not None
+                                     else np.arange(5), jnp.uint32)}
+    return P.pack_rocev2_payload(rep, jnp.uint32(hist))
+
+
+# -- hypothesis round trips ---------------------------------------------------
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=100, deadline=None)
+    @given(u32, st.integers(0, 255), st.integers(0, 255),
+           st.lists(u32, min_size=7, max_size=7),
+           st.lists(u32, min_size=5, max_size=5))
+    def test_dta_roundtrip(flow, rid, seq, stats, tup):
+        r = P.pack_dta_report(jnp.uint32(flow), jnp.uint32(rid),
+                              jnp.uint32(seq),
+                              jnp.asarray(stats, jnp.uint32),
+                              jnp.asarray(tup, jnp.uint32))
+        assert r.shape == (P.REPORT_WORDS,)
+        u = P.unpack_dta_report(r)
+        assert int(u["flow_id"]) == flow
+        assert int(u["reporter_id"]) == rid
+        assert int(u["seq"]) == seq
+        np.testing.assert_array_equal(np.asarray(u["stats"]), stats)
+        np.testing.assert_array_equal(np.asarray(u["five_tuple"]), tup)
+
+    @settings(max_examples=100, deadline=None)
+    @given(u32, st.integers(0, 255), st.integers(0, 255),
+           st.integers(0, 9),
+           st.lists(u32, min_size=7, max_size=7),
+           st.lists(u32, min_size=5, max_size=5))
+    def test_payload_roundtrip_and_checksum(flow, rid, seq, hist, stats,
+                                            tup):
+        p = _payload(flow, rid, seq, hist, stats, tup)
+        assert p.shape == (P.PAYLOAD_WORDS,)
+        assert bool(P.payload_valid(p))
+        u = P.unpack_payload(p)
+        assert int(u["flow_id"]) == flow
+        assert int(u["hist_idx"]) == hist
+        assert int(u["seq"]) == seq
+        np.testing.assert_array_equal(np.asarray(u["stats"]), stats)
+
+    @settings(max_examples=50, deadline=None)
+    @given(u32, st.integers(0, 14), st.integers(1, 2**32 - 1))
+    def test_checksum_detects_any_single_word_flip(flow, word, flip):
+        """Flipping exactly one covered word (0..13 data or the stored
+        checksum itself, word 14) is always detected."""
+        tampered = _payload(flow).at[word].set(
+            _payload(flow)[word] ^ jnp.uint32(flip))
+        assert not bool(P.payload_valid(tampered))
+
+    @settings(max_examples=50, deadline=None)
+    @given(st.integers(0, 13), st.integers(1, 2**32 - 1))
+    def test_xor_checksum_linearity(word, flip):
+        """checksum(p with word^mask) == checksum(p) ^ mask — a 1-word
+        corruption flips the fold by exactly its mask, which is why any
+        nonzero single-word flip is caught."""
+        p = _payload()
+        body = p[:P.CSUM_WORD]
+        tampered = body.at[word].set(body[word] ^ jnp.uint32(flip))
+        assert int(P.xor_checksum(tampered)) == (
+            int(P.xor_checksum(body)) ^ flip)
+
+    @settings(max_examples=100, deadline=None)
+    @given(u32)
+    def test_seq_ids_roundtrip_mod_256(seq):
+        """Reporter sequence ids are 8-bit on the wire (sec VI-B): packing
+        a raw (unmasked) seq then unpacking yields seq mod 256, and the
+        overflow bits never bleed into the adjacent meta fields."""
+        p = _payload(rid=0xAB, hist=5, seq=seq)
+        u = P.unpack_payload(p)
+        assert int(u["seq"]) == seq % 256
+        assert int(u["reporter_id"]) == 0xAB
+        assert int(u["hist_idx"]) == 5
+
+
+# -- deterministic checksum algebra / blind spots -----------------------------
+
+def test_checksum_word_flip_smoke():
+    p = _payload()
+    assert bool(P.payload_valid(p))
+    for word in range(15):
+        tampered = p.at[word].set(p[word] ^ jnp.uint32(0xDEAD))
+        assert not bool(P.payload_valid(tampered)), word
+
+
+def test_checksum_two_word_cancellation_blind_spot():
+    """xor-fold limitation, documented on purpose: the SAME mask applied
+    to two covered words cancels and validates clean. The paper's §VI-B
+    answer is the per-reporter sequence continuity check, not a stronger
+    checksum."""
+    p = _payload()
+    mask = jnp.uint32(0xBEEF)
+    double = p.at[2].set(p[2] ^ mask).at[9].set(p[9] ^ mask)
+    assert bool(P.payload_valid(double))
+
+
+def test_checksum_pad_word_blind_spot():
+    """Word 15 (pad) is outside the fold: flips there are invisible to
+    payload_valid — unpack_payload must never read it."""
+    p = _payload()
+    tampered = p.at[15].set(jnp.uint32(0xFFFFFFFF))
+    assert bool(P.payload_valid(tampered))
+    u_clean, u_bad = P.unpack_payload(p), P.unpack_payload(tampered)
+    for k in u_clean:
+        np.testing.assert_array_equal(np.asarray(u_clean[k]),
+                                      np.asarray(u_bad[k]))
+
+
+def test_batched_roundtrip_shapes():
+    """Packing is shape-polymorphic: (N,)-batched reports round-trip
+    identically to scalar packing (the reporter packs whole capacity
+    blocks at once)."""
+    rng = np.random.default_rng(7)
+    N = 33
+    flow = rng.integers(0, 2**32, size=N, dtype=np.uint64).astype(np.uint32)
+    rid = rng.integers(0, 256, size=N).astype(np.uint32)
+    seq = rng.integers(0, 256, size=N).astype(np.uint32)
+    stats = rng.integers(0, 2**32, size=(N, 7),
+                         dtype=np.uint64).astype(np.uint32)
+    tup = rng.integers(0, 2**32, size=(N, 5),
+                       dtype=np.uint64).astype(np.uint32)
+    hist = rng.integers(0, 10, size=N).astype(np.uint32)
+
+    r = P.pack_dta_report(jnp.asarray(flow), jnp.asarray(rid),
+                          jnp.asarray(seq), jnp.asarray(stats),
+                          jnp.asarray(tup))
+    assert r.shape == (N, P.REPORT_WORDS)
     u = P.unpack_dta_report(r)
-    assert int(u["flow_id"]) == flow
-    assert int(u["reporter_id"]) == rid
-    assert int(u["seq"]) == seq
+    np.testing.assert_array_equal(np.asarray(u["flow_id"]), flow)
+    np.testing.assert_array_equal(np.asarray(u["reporter_id"]), rid)
+    np.testing.assert_array_equal(np.asarray(u["seq"]), seq)
     np.testing.assert_array_equal(np.asarray(u["stats"]), stats)
     np.testing.assert_array_equal(np.asarray(u["five_tuple"]), tup)
 
-
-@settings(max_examples=100, deadline=None)
-@given(u32, st.integers(0, 255), st.integers(0, 255), st.integers(0, 9),
-       st.lists(u32, min_size=7, max_size=7),
-       st.lists(u32, min_size=5, max_size=5))
-def test_payload_roundtrip_and_checksum(flow, rid, seq, hist, stats, tup):
-    rep = {"flow_id": jnp.uint32(flow), "reporter_id": jnp.uint32(rid),
-           "seq": jnp.uint32(seq), "stats": jnp.asarray(stats, jnp.uint32),
-           "five_tuple": jnp.asarray(tup, jnp.uint32)}
-    p = P.pack_rocev2_payload(rep, jnp.uint32(hist))
-    assert p.shape == (P.PAYLOAD_WORDS,)
-    assert bool(P.payload_valid(p))
-    u = P.unpack_payload(p)
-    assert int(u["flow_id"]) == flow
-    assert int(u["hist_idx"]) == hist
-    assert int(u["seq"]) == seq
-    np.testing.assert_array_equal(np.asarray(u["stats"]), stats)
-
-
-@settings(max_examples=50, deadline=None)
-@given(u32, st.integers(0, 13), st.integers(1, 2**32 - 1))
-def test_checksum_detects_tampering(flow, word, flip):
-    rep = {"flow_id": jnp.uint32(flow), "reporter_id": jnp.uint32(1),
-           "seq": jnp.uint32(0),
-           "stats": jnp.arange(7, dtype=jnp.uint32),
-           "five_tuple": jnp.arange(5, dtype=jnp.uint32)}
-    p = P.pack_rocev2_payload(rep, jnp.uint32(3))
-    tampered = p.at[word].set(p[word] ^ jnp.uint32(flip))
-    assert not bool(P.payload_valid(tampered))
+    p = P.pack_rocev2_payload(u, jnp.asarray(hist))
+    assert p.shape == (N, P.PAYLOAD_WORDS)
+    assert bool(P.payload_valid(p).all())
+    up = P.unpack_payload(p)
+    np.testing.assert_array_equal(np.asarray(up["flow_id"]), flow)
+    np.testing.assert_array_equal(np.asarray(up["hist_idx"]), hist)
+    np.testing.assert_array_equal(np.asarray(up["stats"]), stats)
+    # row k of the batch == packing row k alone (no cross-row coupling)
+    k = 5
+    solo = P.pack_rocev2_payload(
+        {kk: jnp.asarray(vv[k]) for kk, vv in u.items()},
+        jnp.uint32(hist[k]))
+    np.testing.assert_array_equal(np.asarray(p[k]), np.asarray(solo))
 
 
 def test_five_tuple_pack():

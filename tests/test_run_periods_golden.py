@@ -1,0 +1,112 @@
+"""Golden regression for the streaming driver: a fixed-seed T=4
+``run_periods`` run is checked against a committed JSON fingerprint, so
+streaming/kernel refactors can't silently change enrichment output.
+
+The fingerprint holds the integer metrics bit-exactly and float summaries
+of the enriched features to 1e-4 (ref backend — pure jnp — so the values
+are platform-stable on CPU CI).
+
+Regenerate after an INTENTIONAL semantics change with:
+
+    REPRO_REGEN_GOLDENS=1 python -m pytest -q tests/test_run_periods_golden.py
+
+and include the refreshed tests/goldens/run_periods_t4.json in the same
+commit as the change that moved it.
+"""
+import dataclasses
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.compat import make_mesh
+from repro.configs import get_dfa_config
+from repro.core.pipeline import DFASystem
+from repro.data import packets as PK
+from repro.kernels import dispatch
+
+GOLDEN = os.path.join(os.path.dirname(__file__), "goldens",
+                      "run_periods_t4.json")
+T = 4
+EVENTS_PER_SHARD = 128
+
+
+def _run(monkeypatch):
+    monkeypatch.delenv(dispatch.ENV_VAR, raising=False)
+    monkeypatch.delenv(dispatch.GATHER_ENV_VAR, raising=False)
+    cfg = dataclasses.replace(get_dfa_config(reduced=True),
+                              kernel_backend="ref")
+    system = DFASystem(cfg, make_mesh((1, 1), ("data", "model")))
+    flows = PK.gen_flows(10, seed=3)
+    evs = [PK.events_for_shards(flows, t, system.n_shards,
+                                EVENTS_PER_SHARD) for t in range(T)]
+    events = {k: jnp.stack([jnp.asarray(e[k]) for e in evs])
+              for k in evs[0]}
+    nows = jnp.asarray([(t + 1) * 100_000 for t in range(T)], jnp.uint32)
+    with system.mesh:
+        state, enr, fid, em, met = jax.jit(system.run_periods)(
+            system.init_state(), events, nows)
+    return state, np.asarray(enr), np.asarray(fid), np.asarray(em), met
+
+
+def _fingerprint(state, enr, fid, em, met):
+    periods = []
+    for t in range(T):
+        rows = em[t]
+        e = enr[t][rows].astype(np.float64)
+        periods.append({
+            "received": int(rows.sum()),
+            "flow_ids": sorted(int(x) for x in fid[t][rows]),
+            "enriched_sum": float(e.sum()),
+            "enriched_abs_mean": float(np.abs(e).mean()) if e.size else 0.0,
+            "first_row_head": [float(x) for x in
+                               np.sort(e, axis=0)[0][:8]] if e.size else [],
+            "metrics": {k: int(np.asarray(met[k])[t]) for k in sorted(met)},
+        })
+    return {
+        "schema": "run-periods-golden-v1",
+        "T": T,
+        "events_per_shard": EVENTS_PER_SHARD,
+        "collector_received": int(np.asarray(state.collector.received)[0]),
+        "entry_valid_count": int(np.asarray(
+            state.collector.entry_valid).sum()),
+        "regs_checksum": int(np.bitwise_xor.reduce(
+            np.asarray(state.reporter.regs).reshape(-1).view(np.uint32))),
+        "periods": periods,
+    }
+
+
+def _assert_matches(got, want):
+    assert got["schema"] == want["schema"]
+    for k in ("T", "events_per_shard", "collector_received",
+              "entry_valid_count", "regs_checksum"):
+        assert got[k] == want[k], (k, got[k], want[k])
+    for t, (g, w) in enumerate(zip(got["periods"], want["periods"])):
+        assert g["received"] == w["received"], t
+        assert g["flow_ids"] == w["flow_ids"], t
+        assert g["metrics"] == w["metrics"], t
+        np.testing.assert_allclose(g["enriched_sum"], w["enriched_sum"],
+                                   rtol=1e-4, err_msg=f"period {t}")
+        np.testing.assert_allclose(g["enriched_abs_mean"],
+                                   w["enriched_abs_mean"], rtol=1e-4,
+                                   err_msg=f"period {t}")
+        np.testing.assert_allclose(g["first_row_head"],
+                                   w["first_row_head"], rtol=1e-4,
+                                   atol=1e-6, err_msg=f"period {t}")
+
+
+def test_run_periods_matches_golden(monkeypatch):
+    got = _fingerprint(*_run(monkeypatch))
+    if os.environ.get("REPRO_REGEN_GOLDENS"):
+        os.makedirs(os.path.dirname(GOLDEN), exist_ok=True)
+        with open(GOLDEN, "w") as f:
+            json.dump(got, f, indent=1, sort_keys=True)
+        return
+    assert os.path.exists(GOLDEN), (
+        f"missing {GOLDEN}; run REPRO_REGEN_GOLDENS=1 pytest "
+        "tests/test_run_periods_golden.py")
+    with open(GOLDEN) as f:
+        want = json.load(f)
+    _assert_matches(got, want)
