@@ -77,3 +77,28 @@ def csv(name: str, us: float, derived: str):
     ROWS.append({"name": name, "us_per_call": float(us),
                  "derived": derived})
     print(f"{name},{us:.2f},{derived}")
+
+
+def write_artifact(path: str, failures=(), tag: str = "bench"):
+    """Write the accumulated ROWS as the repro-bench-v1 JSON artifact —
+    the ONE place the schema lives (run.py and every standalone benchmark
+    entry point call this, so the nightly regression gate always sees
+    identically-shaped payloads)."""
+    import json
+    import platform
+
+    payload = {
+        "schema": "repro-bench-v1",
+        "tiny": TINY,
+        "unix_time": time.time(),
+        "platform": platform.platform(),
+        "python": platform.python_version(),
+        "jax": jax.__version__,
+        "jax_backend": jax.default_backend(),
+        "failures": list(failures),
+        "rows": ROWS,
+    }
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1)
+    import sys
+    print(f"[{tag}] wrote {len(ROWS)} rows -> {path}", file=sys.stderr)

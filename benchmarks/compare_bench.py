@@ -1,0 +1,104 @@
+"""Nightly bench-smoke regression gate: diff two benchmark JSON artifacts
+(schema repro-bench-v1, as written by ``benchmarks/run.py --json``) and
+fail when any matching row regressed by more than the threshold.
+
+    python benchmarks/compare_bench.py baseline.json current.json \
+        [--threshold 0.15] [--allow-missing-baseline]
+
+Rows are matched by name on ``us_per_call`` (lower is better). Rows that
+exist on only one side are reported but never fail the gate (benchmarks
+come and go across commits); rows whose time is 0 or NaN on either side
+are informational-only (speedup/crossover rows encode their payload in
+the derived column). Exit 1 iff at least one matched row slowed down by
+more than ``threshold`` (default 15%), mirroring CI runner noise bounds.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import sys
+
+
+def load_rows(path: str) -> dict:
+    with open(path) as f:
+        payload = json.load(f)
+    if payload.get("schema") != "repro-bench-v1":
+        sys.exit(f"{path}: unexpected schema {payload.get('schema')!r}")
+    rows = {}
+    for row in payload.get("rows", []):
+        rows[row["name"]] = row
+    return rows
+
+
+def compare(base: dict, cur: dict, threshold: float):
+    """-> (regressions, improvements, skipped, unmatched) row reports."""
+    regressions, improvements, skipped = [], [], []
+    for name, row in sorted(cur.items()):
+        if name not in base:
+            skipped.append((name, "new row (no baseline)"))
+            continue
+        b = base[name].get("us_per_call")
+        c = row.get("us_per_call")
+        if not _timed(b) or not _timed(c):
+            skipped.append((name, "untimed row (derived-only)"))
+            continue
+        ratio = c / b
+        line = (name, b, c, ratio)
+        if ratio > 1.0 + threshold:
+            regressions.append(line)
+        elif ratio < 1.0 - threshold:
+            improvements.append(line)
+    unmatched = [n for n in sorted(base) if n not in cur]
+    return regressions, improvements, skipped, unmatched
+
+
+def _timed(v) -> bool:
+    return isinstance(v, (int, float)) and math.isfinite(v) and v > 0
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("baseline")
+    ap.add_argument("current")
+    ap.add_argument("--threshold", type=float, default=0.15,
+                    help="max tolerated slowdown fraction (default 0.15)")
+    ap.add_argument("--allow-missing-baseline", action="store_true",
+                    help="exit 0 when the baseline file doesn't exist "
+                         "(first nightly run has nothing to diff)")
+    args = ap.parse_args()
+    # validate the current artifact FIRST: a corrupt/schema-drifted
+    # artifact must fail tonight, not next night when it becomes the
+    # baseline of a run that can't fix it
+    cur = load_rows(args.current)
+    try:
+        base = load_rows(args.baseline)
+    except FileNotFoundError:
+        if args.allow_missing_baseline:
+            print(f"[gate] no baseline at {args.baseline}; current "
+                  f"artifact parses ({len(cur)} rows) — nothing to diff, "
+                  "passing")
+            return
+        raise
+    regressions, improvements, skipped, unmatched = compare(
+        base, cur, args.threshold)
+
+    for name, reason in skipped:
+        print(f"[gate] skip {name}: {reason}")
+    for name in unmatched:
+        print(f"[gate] baseline-only row {name} (removed?)")
+    for name, b, c, r in improvements:
+        print(f"[gate] IMPROVED {name}: {b:.1f} -> {c:.1f} us "
+              f"({(1 - r) * 100:.0f}% faster)")
+    if regressions:
+        for name, b, c, r in regressions:
+            print(f"[gate] REGRESSION {name}: {b:.1f} -> {c:.1f} us "
+                  f"(+{(r - 1) * 100:.0f}%, threshold "
+                  f"{args.threshold * 100:.0f}%)")
+        sys.exit(1)
+    print(f"[gate] OK: {len(cur) - len(skipped)} matched rows within "
+          f"{args.threshold * 100:.0f}% of baseline")
+
+
+if __name__ == "__main__":
+    main()

@@ -114,7 +114,6 @@ def main():
     consumed before benchmarks.common binds TINY, via the script
     bootstrap above)."""
     import argparse
-    import json
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--tiny", action="store_true")
     ap.add_argument("--json", default=None, metavar="PATH")
@@ -123,13 +122,7 @@ def main():
     run()
     if args.json:
         from benchmarks import common
-        with open(args.json, "w") as f:
-            json.dump({"schema": "repro-bench-v1", "tiny": TINY,
-                       "jax": jax.__version__,
-                       "jax_backend": jax.default_backend(),
-                       "rows": common.ROWS}, f, indent=1)
-        print(f"[gather_scaling] wrote {len(common.ROWS)} rows -> "
-              f"{args.json}", file=sys.stderr)
+        common.write_artifact(args.json, tag="gather_scaling")
 
 
 if __name__ == "__main__":

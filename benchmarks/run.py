@@ -11,11 +11,8 @@ roofline projection used by EXPERIMENTS.md (this container has no TPU).
 from __future__ import annotations
 
 import argparse
-import json
 import os
-import platform
 import sys
-import time
 import traceback
 
 
@@ -61,22 +58,7 @@ def main() -> None:
             traceback.print_exc()
 
     if args.json:
-        import jax
-        payload = {
-            "schema": "repro-bench-v1",
-            "tiny": common.TINY,   # effective mode (env var or --tiny)
-            "unix_time": time.time(),
-            "platform": platform.platform(),
-            "python": platform.python_version(),
-            "jax": jax.__version__,
-            "jax_backend": jax.default_backend(),
-            "failures": failures,
-            "rows": common.ROWS,
-        }
-        with open(args.json, "w") as f:
-            json.dump(payload, f, indent=1)
-        print(f"[run] wrote {len(common.ROWS)} rows -> {args.json}",
-              file=sys.stderr)
+        common.write_artifact(args.json, failures=failures, tag="run")
     if failures:
         sys.exit(1)
 

@@ -1,9 +1,11 @@
 """Multi-period streaming throughput: ``run_periods`` (one lax.scan over T
 monitoring periods, donated state) vs T sequential jit'd ``dfa_step``
-calls. This is the shape the paper's headline numbers imply — the feature
-path running continuously, period after period, with the ring memory
-updated in place — and the scan removes the per-period host dispatch the
-sequential loop pays.
+calls, and — the headline row pair — the sequential scan vs
+``run_periods_overlapped`` (period t's enrich half software-pipelined into
+period t+1's scan body). The two drivers are output-identical (see
+tests/test_overlap_equiv.py), so their ratio isolates what overlapping
+ingest with enrich+inference buys: on TPU the enrich DMA/compute hides
+behind the next period's line-rate work instead of eating its budget.
 
 Also streams the same periods through both gather_enrich memory
 strategies (interpret backend, full-block VMEM vs HBM-tiled DMA) so the
@@ -12,14 +14,24 @@ inside the full pipeline, not just at kernel level (gather_scaling.py).
 
 TPU projection: the per-period byte budget is identical to dfa_throughput;
 streaming changes the *dispatch* overhead, so the derived column reports
-host-side us/period for both drivers plus the scan speedup.
+host-side us/period for both drivers plus the scan and overlap speedups.
+
+Standalone: ``python benchmarks/streaming_periods.py --tiny --json out.json``
+(also wired into benchmarks/run.py, so the CI bench-smoke artifact
+includes the sequential-vs-overlapped rows).
 """
 from __future__ import annotations
 
 import dataclasses
+import os
+import sys
 
-import jax
-import jax.numpy as jnp
+if __package__ in (None, ""):           # executed as a script: mirror
+    _root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    sys.path.insert(0, os.path.join(_root, "src"))   # run.py's sys.path
+    sys.path.insert(0, _root)
+    if "--tiny" in sys.argv:            # before benchmarks.common binds TINY
+        os.environ["REPRO_BENCH_TINY"] = "1"
 
 from benchmarks.common import TINY, csv, time_loop
 from repro.compat import make_mesh
@@ -30,25 +42,22 @@ from repro.data import packets as PK
 T = 4 if TINY else 16
 
 
-def _period_events(system, T_, events_per_shard):
-    flows = PK.gen_flows(32, seed=0)
-    evs = [PK.events_for_shards(flows, t, system.n_shards, events_per_shard)
-           for t in range(T_)]
-    events = {k: jnp.stack([jnp.asarray(e[k]) for e in evs])
-              for k in evs[0]}
-    nows = jnp.asarray([(t + 1) * 100_000 for t in range(T_)], jnp.uint32)
-    return events, nows
-
-
 def run():
     mesh = make_mesh((1, 1), ("data", "model"))
     cfg = get_dfa_config(reduced=True)
     system = DFASystem(cfg, mesh)
     E = cfg.event_block
-    events, nows = _period_events(system, T, E)
+    events, nows = PK.period_batches(system.n_shards, T, E, n_flows=32,
+                                     flow_seed=0)
 
-    stream = system.jit_stream(donate=True)
+    stream = system.jit_stream(donate=True, overlapped=False)
     t_stream = time_loop(stream, system.init_sharded_state(), events, nows)
+
+    # the software-pipelined driver on the SAME config/events: identical
+    # outputs, different latency shape (enrich overlaps the next ingest)
+    overlapped = system.jit_stream(donate=True, overlapped=True)
+    t_ovl = time_loop(overlapped, system.init_sharded_state(), events,
+                      nows)
 
     # donate the baseline too: both paths then elide the state copy and the
     # speedup row isolates per-period host dispatch overhead (time_loop
@@ -68,11 +77,28 @@ def run():
     csv("streaming_run_periods", t_stream / T * 1e6,
         f"periods={T};events_per_s={T * E / t_stream:.3e};"
         f"us_per_period={t_stream / T * 1e6:.1f}")
+    csv("streaming_run_periods_overlapped", t_ovl / T * 1e6,
+        f"periods={T};events_per_s={T * E / t_ovl:.3e};"
+        f"us_per_period={t_ovl / T * 1e6:.1f}")
     csv("streaming_sequential_steps", t_seq / T * 1e6,
         f"periods={T};events_per_s={T * E / t_seq:.3e};"
         f"us_per_period={t_seq / T * 1e6:.1f}")
     csv("streaming_scan_speedup", 0.0,
         f"x={t_seq / t_stream:.2f};paper_period_ms=20")
+    csv("streaming_overlap_speedup", 0.0,
+        f"x={t_stream / t_ovl:.2f};vs=run_periods;"
+        f"outputs_identical=true;paper_period_ms=20")
+
+    # the overlapped driver with the immediate-inference hook armed: the
+    # full paper headline (features -> verdicts in the same scan body)
+    cfg_i = dataclasses.replace(cfg, overlap_periods=True,
+                                inference_head="linear")
+    sys_i = DFASystem(cfg_i, mesh)
+    t_inf = time_loop(sys_i.jit_stream(donate=True),
+                      sys_i.init_sharded_state(), events, nows)
+    csv("streaming_overlapped_inference", t_inf / T * 1e6,
+        f"periods={T};events_per_s={T * E / t_inf:.3e};"
+        f"head=linear;classes={cfg_i.inference_classes}")
 
     # gather memory strategy inside the stream: full-block vs HBM-tiled
     # (interpret backend — CPU-relative numbers; the variant knob is what
@@ -88,5 +114,21 @@ def run():
             f"backend=interpret;variant={variant}")
 
 
-if __name__ == "__main__":
+def _main():
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--tiny", action="store_true",
+                    help="bench-smoke mode (already applied pre-import)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write rows as a JSON artifact")
+    args = ap.parse_args()
+    from benchmarks import common
+    print("name,us_per_call,derived")
     run()
+    if args.json:
+        common.write_artifact(args.json, tag="streaming_periods")
+
+
+if __name__ == "__main__":
+    _main()

@@ -1,17 +1,25 @@
 """End-to-end driver (the paper's headline use case): DFA telemetry feeding
-IMMEDIATE ML inference on the accelerator — batched requests against a
-small LM backbone whose prefix is the enriched flow features.
+IMMEDIATE ML inference on the accelerator — the enrich half's inference
+hook consumes the (R, derived_dim) features in the same scan body that
+ingests the NEXT monitoring period (run_periods_overlapped), so verdicts
+never serialize against collection. A small LM backbone then consumes the
+most suspicious flows as a second, heavier stage.
 
     PYTHONPATH=src python examples/serve_traffic_inference.py
 
-Pipeline: packets -> dfa_step -> enriched (R, 96) features -> projected to
-backbone embedding space as prefix "tokens" -> batched prefill+decode on
-the granite-3-2b (reduced) backbone -> per-flow verdict tokens.
+Pipeline: packets -> overlapped period stream
+            -> enriched (T, R, 96) features
+            -> per-flow verdict logits from the models.registry flow head
+               (the hook, inside the stream)
+            -> the top flows' verdict classes become the prompt tokens
+               for the granite-3-2b (reduced) backbone
+               -> batched prefill+decode.
 """
 import sys
 
 sys.path.insert(0, "src")
 
+import dataclasses
 import time
 
 import jax
@@ -22,52 +30,63 @@ from repro.compat import make_mesh
 from repro.configs import get_config, get_dfa_config
 from repro.core.pipeline import DFASystem
 from repro.data import packets as PK
-from repro.launch.serve import build_cache, serve
+from repro.launch.serve import serve
 from repro.models.registry import get_model
 
 
 def main():
     mesh = make_mesh((1, 1), ("data", "model"))
-    dfa_cfg = get_dfa_config(reduced=True)
+    # arm the streaming hook: overlapped periods + linear verdict head
+    dfa_cfg = dataclasses.replace(get_dfa_config(reduced=True),
+                                  overlap_periods=True,
+                                  inference_head="linear",
+                                  inference_classes=8)
     system = DFASystem(dfa_cfg, mesh)
-    state = system.init_state()
-    dfa = jax.jit(system.dfa_step, donate_argnums=(0,))
+    T = 4
+    events, nows = PK.period_batches(system.n_shards, T, 512, n_flows=24,
+                                     flow_seed=3)
 
     cfg = get_config("granite-3-2b", reduced=True)
     model = get_model(cfg, mesh)
     params = model.init(jax.random.key(0))
-    # feature -> embedding projection (the "enrichment adapter")
-    key = jax.random.key(1)
-    W_feat = 0.05 * jax.random.normal(key, (dfa_cfg.derived_dim,
-                                            cfg.d_model), jnp.float32)
 
-    flows = PK.gen_flows(24, seed=3)
     t0 = time.time()
     with mesh:
-        ev = PK.events_for_shards(flows, 0, system.n_shards, 512)
-        state, enriched, flow_ids, emask, metrics = dfa(
-            state, {k: jnp.asarray(v) for k, v in ev.items()},
-            jnp.uint32(100_000))
-        # take up to 4 received flows as one inference batch
-        idx = np.nonzero(np.asarray(emask))[0][:4]
-        feats = jnp.asarray(np.asarray(enriched)[idx])
-        feats = jnp.log1p(jnp.abs(feats))            # squash magnitudes
-        prefix = (feats @ W_feat).astype(jnp.bfloat16)   # (B, d_model)
-        B = prefix.shape[0]
-        # the feature vector becomes a 4-position prefix "prompt"
-        patches = jnp.tile(prefix[:, None, :], (1, 4, 1))
-        prompt = {"tokens": jnp.zeros((B, 4), jnp.int32),
-                  "patches": patches}
-        # granite has no vlm path; emulate prefix by summing into embeds:
+        # one jit'd call streams all T periods, each period's verdicts
+        # computed while the next period's packets ingest
+        stream = system.jit_stream(donate=True)
+        state, enriched, flow_ids, emask, metrics, preds = stream(
+            system.init_sharded_state(), events, nows)
+        em = np.asarray(emask)
+        verdicts = np.asarray(jnp.argmax(preds, axis=-1))
+        scores = np.asarray(jax.nn.logsumexp(preds, axis=-1))
+        # stage 2: the 4 highest-scoring flows of the last period go to
+        # the LM backbone; each flow's prompt is its verdict class id
+        # (offset past token 0) — a flow-dependent prefix, so different
+        # telemetry produces different stage-2 inputs
+        last = T - 1
+        rows = np.nonzero(em[last])[0]
+        rows = rows[np.argsort(-scores[last][rows])][:4]
+        B = max(1, len(rows))
+        vcls = (verdicts[last][rows] if len(rows)
+                else np.zeros(1, np.int64))
+        vtok = jnp.asarray(vcls.reshape(B, 1) + 1, jnp.int32)
         prompt = {"tokens": jnp.concatenate(
             [jnp.zeros((B, 4), jnp.int32),
-             jnp.ones((B, 4), jnp.int32)], axis=1)}
+             jnp.tile(vtok, (1, 4))], axis=1)}
         toks, tps = serve(model, params, prompt, 8, 8, 32)
     dt = time.time() - t0
-    print(f"flows observed -> reports {int(metrics['reports_sent'])} "
-          f"-> inference batch {B}")
+
+    sent = np.asarray(metrics["reports_sent"])
+    print(f"{T} overlapped periods: reports/period {sent.tolist()} "
+          f"(metrics are per-period deltas)")
+    for t in range(T):
+        v, c = np.unique(verdicts[t][em[t]], return_counts=True)
+        print(f"  period {t}: {int(em[t].sum()):3d} flows enriched, "
+              f"verdict histogram {dict(zip(v.tolist(), c.tolist()))}")
+    print(f"stage-2 batch: {B} flows {np.asarray(flow_ids[last])[rows]}")
     print(f"verdict tokens per flow: {np.asarray(toks)[:, :6]}")
-    print(f"end-to-end (telemetry->tokens) {dt*1000:.0f} ms; "
+    print(f"end-to-end (telemetry->verdicts->tokens) {dt*1000:.0f} ms; "
           f"decode {tps:.1f} tok/s; paper target: sub-20 ms periods "
           f"(on TPU, not this CPU container)")
 

@@ -168,6 +168,20 @@ class DFAConfig:
     # ~16 MB; the full-block kernel is chosen only while its ring region
     # + tile working set fit under this)
     vmem_budget_mb: int = 16
+    # streaming driver: software-pipeline the period stream so period t's
+    # enrich(+inference) half runs in the same scan body as period t+1's
+    # ingest half (pipeline.run_periods_overlapped); False = strictly
+    # sequential per-period chain (pipeline.run_periods). Output-identical
+    # by construction — the knob trades enrich latency out of the ingest
+    # budget.
+    overlap_periods: bool = False
+    # optional inference head applied to the (R, derived_dim) enriched
+    # features inside the enrich half: "none" | "linear" | "mlp" (built
+    # from models.registry.get_flow_head unless the caller passes its own
+    # infer_fn to DFASystem)
+    inference_head: str = "none"
+    inference_classes: int = 8         # verdict classes the head emits
+    inference_hidden: int = 64         # mlp hidden width (linear ignores)
 
     def ring_region_bytes(self) -> int:
         """Shard-local collector ring region footprint (entries+validity)."""

@@ -37,3 +37,15 @@ REDUCED = DFAConfig(
 # equivalence suite / benchmarks use this to exercise the HBM-tiled path
 # without allocating a 2^17-flow ring.
 REDUCED_HBM = dataclasses.replace(REDUCED, gather_variant="hbm")
+
+# REDUCED with the software-pipelined streaming driver: period t's enrich
+# half overlaps period t+1's ingest half (run_periods_overlapped).
+REDUCED_OVERLAP = dataclasses.replace(REDUCED, overlap_periods=True)
+
+# ... and with the immediate-inference hook armed: enriched features feed
+# a linear verdict head (models.registry.get_flow_head) inside the same
+# scan body — the paper's "features land on the accelerator and are
+# consumed in the same monitoring period" headline, end to end.
+REDUCED_INFER = dataclasses.replace(REDUCED, overlap_periods=True,
+                                    inference_head="linear",
+                                    inference_classes=8)

@@ -123,12 +123,17 @@ def gather_flow_history(state: CollectorState, local_flow: jax.Array
 
 
 def enrich_flow_history(state: CollectorState, local_flow: jax.Array,
-                        cfg: DFAConfig, backend=None,
+                        cfg: DFAConfig, mask=None, backend=None,
                         variant=None) -> jax.Array:
     """Fused alternative to gather_flow_history + derive: (flows_q,) ->
     (flows_q, derived_dim) f32 straight out of the ring region, routed
     through the kernel dispatch registry (backend + gather variant).
-    The (flows_q, H, 16) intermediate never exists in HBM."""
+    The (flows_q, H, 16) intermediate never exists in HBM.
+
+    ``local_flow``/``mask`` are the translator's routed coordinates
+    (pipeline.RoutedBatch) — the enrich half consumes them as produced by
+    the ingest half instead of re-deriving placement; masked-out rows are
+    zeroed."""
     from repro.core.enrich import enrich_history
     return enrich_history(state.memory, state.entry_valid, local_flow,
-                          cfg, backend=backend, variant=variant)
+                          cfg, mask=mask, backend=backend, variant=variant)

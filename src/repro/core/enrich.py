@@ -98,7 +98,7 @@ def derive_ref(memory_entries: jax.Array, entry_valid: jax.Array,
 
 
 def enrich_history(memory: jax.Array, entry_valid: jax.Array,
-                   local_flow: jax.Array, cfg: DFAConfig,
+                   local_flow: jax.Array, cfg: DFAConfig, mask=None,
                    backend=None, variant=None) -> jax.Array:
     """Selector-routed fused gather + derivation: the public enrichment
     entry point. (F, H, 16) ring memory + (F, H) validity + (R,) local
@@ -109,7 +109,13 @@ def enrich_history(memory: jax.Array, entry_valid: jax.Array,
     strategy (full-block VMEM vs HBM-resident tiled) per
     ``DFAConfig.gather_variant`` / ``REPRO_GATHER_VARIANT`` / the
     VMEM-budget heuristic. Never materializes the (R, H, 16) gather.
+
+    ``mask`` (optional (R,) bool — the routed-report validity from the
+    ingest half) zeroes masked-out output rows after the fused kernel.
     """
     from repro.kernels.gather_enrich.ops import gather_enrich  # no cycle
-    return gather_enrich(memory, entry_valid, local_flow, cfg,
-                         backend=backend, variant=variant)
+    out = gather_enrich(memory, entry_valid, local_flow, cfg,
+                        backend=backend, variant=variant)
+    if mask is not None:
+        out = jnp.where(mask[..., None], out, 0.0)
+    return out

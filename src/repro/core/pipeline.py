@@ -20,10 +20,31 @@ routes through the kernel dispatch registry (repro.kernels.dispatch):
 (shard-local shapes are static).
 
 The step is jit-compatible, state is donated (in-place ring updates — the
-GDR analogue), and every stage has a fixed SPMD shape. ``run_periods``
-streams T monitoring periods through the step under one ``lax.scan`` — the
-multi-period throughput shape the fig8 / dfa_throughput / streaming
-benchmarks measure.
+GDR analogue), and every stage has a fixed SPMD shape.
+
+One monitoring period is two explicit half-steps:
+
+  ``ingest_half``  — reporter ingest, due-flow reports, all_to_all
+                     routing, translator addressing, ring placement;
+                     returns the period's :class:`RoutedBatch` coords
+  ``enrich_half``  — fused gather+enrich of those routed flows (plus the
+                     optional immediate-inference hook: a model head from
+                     ``models.registry.get_flow_head`` consuming the
+                     (R, derived_dim) features in the same trace)
+
+``run_periods`` chains both halves per period under one ``lax.scan``;
+``run_periods_overlapped`` software-pipelines the stream — the carry holds
+period t's routed coords so its enrich half runs in the same scan body as
+period t+1's ingest half (one warm-up ingest, one drain enrich). The two
+drivers are output-identical by construction: the deferred enrich still
+reads the ring AFTER period t's placement and BEFORE period t+1's, so
+enrichment latency no longer eats the next period's ingest budget without
+changing a single emitted feature.
+
+Per-period ``metrics`` are all deltas: ``collisions`` / ``bad_checksum`` /
+``seq_anomalies`` report what THIS period added (the cumulative counters
+stay in the state), matching ``reports_sent`` / ``reports_recv`` /
+``bucket_drops`` which were always per-period.
 """
 from __future__ import annotations
 
@@ -52,14 +73,38 @@ class DFAState(NamedTuple):
     collector: COLL.CollectorState
 
 
-class DFASystem:
-    """Facade: builds sharded state + the jit-able distributed step."""
+class RoutedBatch(NamedTuple):
+    """One period's routing products, carried from the ingest half into
+    the (possibly deferred) enrich half — everything enrichment needs, so
+    nothing is re-derived. All arrays are mesh-sharded over their leading
+    dim exactly like the event batch (P(axes))."""
+    local_flow: jax.Array   # (R,) i32 — owner-shard-local flow coords
+    flow_id: jax.Array      # (R,) u32 — global flow ids (report word 0)
+    mask: jax.Array         # (R,) bool — routed-report validity
 
-    def __init__(self, cfg: DFAConfig, mesh: Mesh):
+
+class DFASystem:
+    """Facade: builds sharded state + the jit-able distributed step.
+
+    ``infer_fn`` (optional): ``feats (R, derived_dim) -> preds`` applied
+    inside the enrich half — immediate inference on the just-enriched
+    features. When omitted and ``cfg.inference_head != "none"`` a head is
+    built from ``models.registry.get_flow_head`` (params on
+    ``self.infer_params``); with the default head "none" every driver
+    keeps its historical 5-tuple returns."""
+
+    def __init__(self, cfg: DFAConfig, mesh: Mesh, infer_fn=None):
         self.cfg = cfg
         self.mesh = mesh
         self.axes = tuple(mesh.axis_names)
         self.n_shards = int(math.prod(mesh.devices.shape))
+        self.infer_params: Optional[Tree] = None
+        if infer_fn is None and cfg.inference_head != "none":
+            from repro.models.registry import get_flow_head  # lazy: heavy
+            self.infer_params, head = get_flow_head(cfg, jax.random.key(0))
+            params = self.infer_params
+            infer_fn = lambda feats: head(params, feats)  # noqa: E731
+        self.infer_fn = infer_fn
 
     # -- state ------------------------------------------------------------
     def init_state(self) -> DFAState:
@@ -100,11 +145,24 @@ class DFASystem:
         return jax.jit(self.init_state,
                        out_shardings=self.state_shardings())()
 
-    # -- the step ---------------------------------------------------------
-    def dfa_step(self, state: DFAState, events: Dict[str, jax.Array],
-                 now: jax.Array):
-        """events (global): ts/size (n_shards*E,), five_tuple (…,5),
-        valid (…,). Returns (state', enriched, flow_ids, emask, metrics)."""
+    # -- the step (two half-steps) ----------------------------------------
+    _METRIC_KEYS = ("reports_sent", "reports_recv", "bucket_drops",
+                    "collisions", "bad_checksum", "seq_anomalies")
+
+    def ingest_half(self, state: DFAState, events: Dict[str, jax.Array],
+                    now: jax.Array
+                    ) -> Tuple[DFAState, RoutedBatch, Dict[str, jax.Array]]:
+        """First half of one monitoring period: reporter ingest, due-flow
+        reports, all_to_all routing, translator addressing and ring
+        placement — everything that must happen at line rate.
+
+        events (global): ts/size (n_shards*E,), five_tuple (…,5),
+        valid (…,). Returns (state', routed, metrics): ``routed`` is the
+        period's :class:`RoutedBatch` (what the enrich half consumes, now
+        or a period later), ``metrics`` are all PER-PERIOD deltas — the
+        cumulative collision/checksum/sequence counters live in the state;
+        here each period reports only what it added.
+        """
         cfg = self.cfg
         n = self.n_shards
         cap_out = max(1, cfg.report_capacity // n)
@@ -115,6 +173,10 @@ class DFASystem:
             for a in ax:
                 shard = shard * axis_size(a) + jax.lax.axis_index(a)
             flow_base = shard * cfg.flows_per_shard
+            # cumulative counters BEFORE this period (for metric deltas)
+            collisions0 = jnp.sum(rep_st.collisions)
+            bad_csum0 = jnp.sum(coll_st.bad_checksum)
+            seq_anom0 = jnp.sum(coll_st.seq_anomalies)
             # 1. reporter ingest (flow_moments via the dispatch registry)
             rep_st = REP.ingest(rep_st, {"ts": ev_ts, "size": ev_sz,
                                          "five_tuple": ev_tu,
@@ -144,28 +206,21 @@ class DFASystem:
                 tr_st, routed, rmask, flow_base, cfg)
             # 5. collector ring placement (ring_scatter via dispatch)
             coll_st = COLL.ingest(coll_st, payloads, rmask, flow_base, cfg)
-            # 6. fused gather + enrichment of received flows (via dispatch;
-            #    skips the (R, H, 16) history materialization; the op owns
-            #    the [0, F) clamp of local_flow and the memory-strategy
-            #    choice — full-block VMEM at reduced F, HBM-tiled at
-            #    Tofino scale)
-            enriched = COLL.enrich_flow_history(coll_st,
-                                                coords["local_flow"], cfg)
-            enriched = jnp.where(rmask[:, None], enriched, 0.0)
-            flow_ids = jnp.where(rmask, routed[:, 0],
-                                 jnp.uint32(0xFFFFFFFF))
             metrics = {
                 "reports_sent": jax.lax.psum(jnp.sum(mask), ax),
                 "reports_recv": jax.lax.psum(jnp.sum(rmask), ax),
                 "bucket_drops": jax.lax.psum(jnp.sum(dropped), ax),
-                "collisions": jax.lax.psum(jnp.sum(rep_st.collisions), ax),
-                "bad_checksum": jax.lax.psum(jnp.sum(coll_st.bad_checksum),
-                                             ax),
+                # u32 new-minus-old is the period delta even across
+                # counter wraparound
+                "collisions": jax.lax.psum(
+                    jnp.sum(rep_st.collisions) - collisions0, ax),
+                "bad_checksum": jax.lax.psum(
+                    jnp.sum(coll_st.bad_checksum) - bad_csum0, ax),
                 "seq_anomalies": jax.lax.psum(
-                    jnp.sum(coll_st.seq_anomalies), ax),
+                    jnp.sum(coll_st.seq_anomalies) - seq_anom0, ax),
             }
-            return (rep_st, tr_st, coll_st, enriched, flow_ids, rmask,
-                    metrics)
+            return (rep_st, tr_st, coll_st, coords["local_flow"],
+                    routed[:, 0], rmask, metrics)
 
         specs = self.state_specs()
         ev_specs = (P(ax), P(ax), P(ax, None), P(ax))
@@ -175,40 +230,147 @@ class DFASystem:
             in_specs=(specs.reporter, specs.translator, specs.collector)
             + ev_specs + (P(),),
             out_specs=out_state_specs
-            + (P(ax, None), P(ax), P(ax),
-               jax.tree.map(lambda _: P(), {
-                   "reports_sent": 0, "reports_recv": 0, "bucket_drops": 0,
-                   "collisions": 0, "bad_checksum": 0, "seq_anomalies": 0})),
+            + (P(ax), P(ax), P(ax),
+               {k: P() for k in self._METRIC_KEYS}),
             check=False)
-        rep_st, tr_st, coll_st, enriched, flow_ids, rmask, metrics = fn(
+        rep_st, tr_st, coll_st, local_flow, flow_id, rmask, metrics = fn(
             state.reporter, state.translator, state.collector,
             events["ts"], events["size"], events["five_tuple"],
             events["valid"], now)
-        return (DFAState(rep_st, tr_st, coll_st), enriched, flow_ids,
-                rmask, metrics)
+        return (DFAState(rep_st, tr_st, coll_st),
+                RoutedBatch(local_flow, flow_id, rmask), metrics)
+
+    def enrich_half(self, state: DFAState, routed: RoutedBatch):
+        """Second half of a monitoring period: fused gather + enrichment
+        of the routed flows (via dispatch; skips the (R, H, 16) history
+        materialization; the op owns the [0, F) clamp of local_flow and
+        the memory-strategy choice — full-block VMEM at reduced F,
+        HBM-tiled at Tofino scale), plus the optional immediate-inference
+        hook on the resulting features.
+
+        Reads the collector ring, never writes it — which is what makes
+        it legal to defer one period in the overlapped driver. Returns
+        (enriched (R, D), flow_ids (R,), emask (R,), preds) where preds
+        is None unless an inference head is armed.
+        """
+        cfg = self.cfg
+        ax = self.axes
+
+        def local(coll_st, lf, fid, m):
+            enriched = COLL.enrich_flow_history(coll_st, lf, cfg, mask=m)
+            flow_ids = jnp.where(m, fid, jnp.uint32(0xFFFFFFFF))
+            return enriched, flow_ids, m
+
+        specs = self.state_specs()
+        fn = shard_map(
+            local, mesh=self.mesh,
+            in_specs=(specs.collector, P(ax), P(ax), P(ax)),
+            out_specs=(P(ax, None), P(ax), P(ax)), check=False)
+        enriched, flow_ids, emask = fn(state.collector, routed.local_flow,
+                                       routed.flow_id, routed.mask)
+        preds = None
+        if self.infer_fn is not None:
+            # the hook consumes the features in the same trace — "features
+            # land in device memory and are consumed in the same period"
+            preds = self.infer_fn(enriched)
+            preds = jnp.where(emask[:, None], preds, 0.0)
+        return enriched, flow_ids, emask, preds
+
+    def dfa_step(self, state: DFAState, events: Dict[str, jax.Array],
+                 now: jax.Array):
+        """One full monitoring period = ingest_half ∘ enrich_half.
+
+        events (global): ts/size (n_shards*E,), five_tuple (…,5),
+        valid (…,). Returns (state', enriched, flow_ids, emask, metrics)
+        — plus trailing ``preds`` when an inference head is armed."""
+        state, routed, metrics = self.ingest_half(state, events, now)
+        enriched, flow_ids, emask, preds = self.enrich_half(state, routed)
+        if preds is None:
+            return state, enriched, flow_ids, emask, metrics
+        return state, enriched, flow_ids, emask, metrics, preds
 
     # -- multi-period streaming -------------------------------------------
+    def _stream_returns(self, state, enriched, flow_ids, emask, metrics,
+                        preds):
+        if preds is None:
+            return state, enriched, flow_ids, emask, metrics
+        return state, enriched, flow_ids, emask, metrics, preds
+
     def run_periods(self, state: DFAState, events: Dict[str, jax.Array],
                     nows: jax.Array):
-        """Stream T monitoring periods through ``dfa_step`` as one
-        ``lax.scan`` (state is the carry, so with donation the ring memory
-        is updated in place across the whole scan — the GDR analogue held
-        for an entire trace window).
+        """Stream T monitoring periods, each a full ingest+enrich chain,
+        as one ``lax.scan`` (state is the carry, so with donation the ring
+        memory is updated in place across the whole scan — the GDR
+        analogue held for an entire trace window).
 
         events: dict of (T, n_shards*E, …) arrays; nows: (T,) u32.
         Returns (state', enriched (T, R, D), flow_ids (T, R),
-        emask (T, R), metrics dict of (T,) arrays).
+        emask (T, R), metrics dict of (T,) PER-PERIOD arrays) — plus
+        trailing preds (T, R, C) when an inference head is armed.
         """
 
         def body(st, xs):
             ev, now_ = xs
-            st, enriched, flow_ids, emask, metrics = self.dfa_step(
-                st, ev, now_)
-            return st, (enriched, flow_ids, emask, metrics)
+            st, routed, metrics = self.ingest_half(st, ev, now_)
+            enriched, flow_ids, emask, preds = self.enrich_half(st, routed)
+            return st, (enriched, flow_ids, emask, metrics, preds)
 
-        state, (enriched, flow_ids, emask, metrics) = jax.lax.scan(
+        state, (enriched, flow_ids, emask, metrics, preds) = jax.lax.scan(
             body, state, (events, nows))
-        return state, enriched, flow_ids, emask, metrics
+        return self._stream_returns(state, enriched, flow_ids, emask,
+                                    metrics, preds)
+
+    def run_periods_overlapped(self, state: DFAState,
+                               events: Dict[str, jax.Array],
+                               nows: jax.Array):
+        """Software-pipelined stream: period t's enrich(+inference) half
+        runs in the same scan body as period t+1's ingest half, so
+        enrichment latency overlaps the next period's line-rate work
+        instead of serializing against it (ROADMAP: "overlapped
+        ingest/enrich, double-buffered periods").
+
+        The scan carry is (state, RoutedBatch of the previous period); the
+        body first enriches the carried coords — reading the ring BEFORE
+        this body's placement touches it — then ingests the new period.
+        One warm-up ingest precedes the scan, one drain enrich follows it.
+        Output-identical to ``run_periods`` (the equivalence is exact, not
+        approximate: same reads of the same ring states in both drivers);
+        T=1 degenerates to warm-up + drain with a zero-length scan.
+
+        Same signature and returns as ``run_periods``.
+        """
+        ev0 = {k: v[0] for k, v in events.items()}
+        state, routed0, metrics0 = self.ingest_half(state, ev0, nows[0])
+
+        def body(carry, xs):
+            st, prev = carry
+            ev, now_ = xs
+            # enrich period t from the pre-ingest ring (sequential
+            # semantics) while ingesting period t+1
+            enriched, flow_ids, emask, preds = self.enrich_half(st, prev)
+            st, routed, metrics = self.ingest_half(st, ev, now_)
+            return (st, routed), (enriched, flow_ids, emask, metrics,
+                                  preds)
+
+        rest = ({k: v[1:] for k, v in events.items()}, nows[1:])
+        (state, last), (enriched, flow_ids, emask, metrics, preds) = (
+            jax.lax.scan(body, (state, routed0), rest))
+        # drain: the final period's enrich half
+        enr_t, fid_t, em_t, preds_t = self.enrich_half(state, last)
+
+        def tail(stacked, last_row):
+            return jnp.concatenate([stacked, last_row[None]], axis=0)
+
+        enriched = tail(enriched, enr_t)
+        flow_ids = tail(flow_ids, fid_t)
+        emask = tail(emask, em_t)
+        preds = None if preds_t is None else tail(preds, preds_t)
+        # the warm-up produced period 0's metrics; the scan periods 1..T-1
+        metrics = jax.tree.map(
+            lambda m0, m: jnp.concatenate([m0[None], m], axis=0),
+            metrics0, metrics)
+        return self._stream_returns(state, enriched, flow_ids, emask,
+                                    metrics, preds)
 
     # -- convenience ------------------------------------------------------
     def describe(self) -> Dict[str, Any]:
@@ -235,16 +397,28 @@ class DFASystem:
                 cfg.flows_per_shard, cfg.history, tile, cfg.derived_dim,
                 words=cfg.payload_words),
             "n_shards": self.n_shards,
+            "overlap_periods": cfg.overlap_periods,
+            "inference_head": ("custom" if (self.infer_fn is not None
+                                            and self.infer_params is None)
+                               else cfg.inference_head),
         }
 
     def jit_step(self, donate: bool = True):
         return jax.jit(self.dfa_step,
                        donate_argnums=(0,) if donate else ())
 
-    def jit_stream(self, donate: bool = True):
-        """jit'd ``run_periods`` with the state carry donated."""
-        return jax.jit(self.run_periods,
-                       donate_argnums=(0,) if donate else ())
+    def jit_stream(self, donate: bool = True,
+                   overlapped: Optional[bool] = None):
+        """jit'd streaming driver with the state carry donated.
+
+        ``overlapped`` defaults to ``cfg.overlap_periods``; the two
+        drivers are output-identical, so callers pick purely on latency
+        shape."""
+        if overlapped is None:
+            overlapped = self.cfg.overlap_periods
+        fn = (self.run_periods_overlapped if overlapped
+              else self.run_periods)
+        return jax.jit(fn, donate_argnums=(0,) if donate else ())
 
     def event_specs(self, events_per_shard: int, periods: int = 0):
         """ShapeDtypeStructs + shardings for the global event batch; with

@@ -15,9 +15,15 @@ RoCEv2 WRITE payload (translator -> collector), padded to a power of two:
   words 1-7   seven data fields
   words 8-12  five-tuple
   word 13     (reporter_id << 24) | (seq << 16) | hist_idx
-  word 14     checksum (xor-fold of words 0-13)
+  word 14     checksum (position-dependent rotate-then-xor fold of words
+              0-13 and the pad word 15)
   word 15     pad (zero)
   -> 16 words = 64 B exactly (the paper's RoCEv2 pow-2 payload)
+
+The checksum rotates each covered word left by its payload position before
+folding, so (a) the same corruption mask applied to two different words no
+longer cancels (plain xor-fold's blind spot) and (b) the pad word is inside
+the covered set — a flipped pad can't ride along undetected.
 
 Collector memory entry (Fig 4) uses the same 16-word layout, so a report is
 placed into GPU/HBM memory VERBATIM — the zero-copy property DFA gets from
@@ -43,10 +49,29 @@ MARINA_VECTOR_BYTES = 45  # 7*4 + 17 (paper: "full feature vector requires 45B")
 PAYLOAD_BYTES = PAYLOAD_WORDS * 4
 
 
-def xor_checksum(words: jax.Array) -> jax.Array:
-    """xor-fold over the leading words; words: (..., W) u32 -> (...,) u32."""
-    return jax.lax.reduce(words.astype(jnp.uint32), jnp.uint32(0),
-                          jax.lax.bitwise_xor, (words.ndim - 1,))
+def _rotl32(w: jax.Array, k: jax.Array) -> jax.Array:
+    """Rotate-left each u32 by k bits (k in [0, 32), k=0 is identity)."""
+    k = k.astype(jnp.uint32) % jnp.uint32(32)
+    return (w << k) | (w >> ((jnp.uint32(32) - k) % jnp.uint32(32)))
+
+
+def xor_checksum(words: jax.Array,
+                 positions: jax.Array | None = None) -> jax.Array:
+    """Position-dependent fold: XOR of rotl(word_i, pos_i); words
+    (..., W) u32 -> (...,) u32.
+
+    ``positions`` defaults to ``arange(W)`` — pass explicit payload word
+    positions when the covered set is non-contiguous (``payload_valid``
+    skips the stored checksum word itself). The rotation makes the fold
+    sensitive to WHERE a corruption lands: equal masks on two different
+    words rotate to different values and no longer cancel.
+    """
+    w = words.astype(jnp.uint32)
+    if positions is None:
+        positions = jnp.arange(words.shape[-1], dtype=jnp.uint32)
+    rot = _rotl32(w, positions.astype(jnp.uint32))
+    return jax.lax.reduce(rot, jnp.uint32(0), jax.lax.bitwise_xor,
+                          (words.ndim - 1,))
 
 
 def pack_dta_report(flow_id, reporter_id, seq, stats, five_tuple
@@ -87,6 +112,8 @@ def pack_rocev2_payload(rep: Dict[str, jax.Array], hist_idx: jax.Array
         rep["five_tuple"].astype(jnp.uint32),
         meta[..., None],
     ], axis=-1)                                            # 14 words
+    # the fold also covers the pad word (position 15), which packs as zero
+    # and thus contributes rotl(0, 15) = 0 — only tampering can change it
     csum = xor_checksum(body)
     pad = jnp.zeros_like(csum)
     return jnp.concatenate([body, csum[..., None], pad[..., None]], axis=-1)
@@ -104,9 +131,16 @@ def unpack_payload(p: jax.Array) -> Dict[str, jax.Array]:
     }
 
 
+CSUM_COVERED = tuple(range(CSUM_WORD)) + (PAYLOAD_WORDS - 1,)  # 0-13 + pad
+
+
 def payload_valid(p: jax.Array) -> jax.Array:
-    """Collector-side integrity check (Fig 4 checksum)."""
-    return xor_checksum(p[..., :CSUM_WORD]) == p[..., CSUM_WORD]
+    """Collector-side integrity check (Fig 4 checksum): rotate-then-xor
+    fold over words 0-13 AND the pad word 15, each rotated by its payload
+    position, compared against the stored word 14."""
+    covered = p[..., jnp.asarray(CSUM_COVERED)]
+    pos = jnp.asarray(CSUM_COVERED, jnp.uint32)
+    return xor_checksum(covered, pos) == p[..., CSUM_WORD]
 
 
 def pack_five_tuple(src_ip, dst_ip, sport, dport, proto) -> jax.Array:

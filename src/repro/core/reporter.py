@@ -111,9 +111,18 @@ def resolve_iat(slots: jax.Array, ts: jax.Array, valid: jax.Array,
     inv = jnp.argsort(order)                      # unsort
     iat = iat_sorted[inv]
     first_flags = first[inv]
-    # new last_ts per slot = max event ts per slot (events time-sorted)
-    new_last = last_ts.at[jnp.where(valid, slots, F)].max(
-        ts.astype(jnp.uint32), mode="drop")
+    # new last_ts per slot = the LAST event of the slot in arrival order.
+    # Events are time-sorted, so that is the latest — but NOT necessarily
+    # the numeric max: the u32 µs clock wraps every ~71.6 min, and a
+    # ``.max(ts)`` update would pin the stale pre-wrap value forever,
+    # corrupting every subsequent IAT. The stable slot-sort keeps arrival
+    # order within a slot, so the tail element of each slot run is the
+    # wrap-safe update (u32 subtraction in the IAT math already handles
+    # the wrap itself).
+    run_tail = jnp.concatenate(
+        [s_slot[1:] != s_slot[:-1], jnp.array([True])])
+    upd = jnp.where(run_tail & (s_slot < F), s_slot, F)
+    new_last = last_ts.at[upd].set(s_ts.astype(jnp.uint32), mode="drop")
     return iat, first_flags, new_last
 
 
@@ -186,12 +195,24 @@ def due_flows(state: ReporterState, now: jax.Array, cfg: DFAConfig,
 
     Returns (slots (capacity,) i32, mask (capacity,) bool) — fixed-size for
     SPMD; selection is by largest elapsed time (most-overdue-first).
+
+    The elapsed compare is u32-subtraction based, so it stays correct
+    across µs-clock wrap (now < last_report numerically still yields the
+    true elapsed interval mod 2^32).
     """
     elapsed = (now - state.last_report).astype(jnp.uint32)
     due = state.active & (elapsed >= jnp.uint32(cfg.monitoring_period_us))
-    score = jnp.where(due, elapsed, jnp.uint32(0))
-    top, idx = jax.lax.top_k(score, capacity)
-    return idx.astype(jnp.int32), top > 0
+    if cfg.monitoring_period_us == 0:
+        # elapsed can be 0 for a genuinely due flow; |1 keeps its score
+        # above every not-due slot so top_k cannot displace it
+        score = jnp.where(due, elapsed | jnp.uint32(1), jnp.uint32(0))
+    else:
+        score = jnp.where(due, elapsed, jnp.uint32(0))
+    _, idx = jax.lax.top_k(score, capacity)
+    # gather the due flags at the selected slots — the old ``top > 0``
+    # proxy silently dropped genuinely due flows whose elapsed score is 0
+    # (monitoring_period_us == 0 reports every period by contract)
+    return idx.astype(jnp.int32), due[idx]
 
 
 def make_reports(state: ReporterState, slots: jax.Array, mask: jax.Array,
@@ -212,7 +233,10 @@ def make_reports(state: ReporterState, slots: jax.Array, mask: jax.Array,
         seqs, stats, tuples)
     reports = jnp.where(mask[:, None], reports, jnp.uint32(0))
     F = state.last_report.shape[0]
-    last_report = state.last_report.at[jnp.where(mask, slots, F)].max(
+    # wrap-aware: ``now`` is the latest time by contract even when the u32
+    # clock wrapped below the stored value, so .set (slots from top_k are
+    # unique) — a .max here would stall the interval tracker post-wrap
+    last_report = state.last_report.at[jnp.where(mask, slots, F)].set(
         jnp.broadcast_to(now.astype(jnp.uint32), (R,)), mode="drop")
     new_seq = state.seq + jnp.sum(mask).astype(jnp.uint32)
     return state._replace(last_report=last_report, seq=new_seq), reports

@@ -58,3 +58,21 @@ def events_for_shards(flows, step: int, n_shards: int, events_per_shard: int,
     cat = {k: np.concatenate([o[k] for o in out]) for k in
            ("ts", "size", "five_tuple", "valid")}
     return cat
+
+
+def period_batches(n_shards: int, T: int, events_per_shard: int,
+                   n_flows: int = 32, flow_seed: int = 0,
+                   period_us: int = 100_000):
+    """Stacked streaming input: (T, n_shards*E, …) event batches + (T,)
+    ``nows`` u32 — the exact shape ``run_periods`` /
+    ``run_periods_overlapped`` consume (shared by the streaming tests,
+    benchmarks and examples so the batch layout has one definition)."""
+    import jax.numpy as jnp   # keep the generator itself numpy-only
+
+    flows = gen_flows(n_flows, seed=flow_seed)
+    evs = [events_for_shards(flows, t, n_shards, events_per_shard)
+           for t in range(T)]
+    events = {k: jnp.stack([jnp.asarray(e[k]) for e in evs])
+              for k in evs[0]}
+    nows = jnp.asarray([(t + 1) * period_us for t in range(T)], jnp.uint32)
+    return events, nows

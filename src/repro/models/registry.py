@@ -11,7 +11,7 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
-from repro.configs.base import ModelConfig
+from repro.configs.base import DFAConfig, ModelConfig
 from repro.configs.shapes import ShapeConfig
 from repro.models import hybrid as HY
 from repro.models import lm as LM
@@ -146,6 +146,49 @@ class Model:
 
 def get_model(cfg: ModelConfig, mesh: Mesh) -> Model:
     return Model(cfg, mesh)
+
+
+# --------------------------------------------- DFA inference heads ---------
+
+def get_flow_head(cfg: DFAConfig, key
+                  ) -> Tuple[Tree, Callable[[Tree, jax.Array], jax.Array]]:
+    """Inference head for DFA-enriched flow features (the paper's
+    immediate-inference consumer): ``(params, apply)`` with
+    ``apply(params, feats (R, derived_dim)) -> logits (R, classes)``.
+
+    ``cfg.inference_head`` selects "linear" (one projection) or "mlp"
+    (one hidden relu layer of ``cfg.inference_hidden``). Features are
+    log1p-squashed inside ``apply`` — raw moment sums span ~9 decades,
+    and the head must be safe to call straight off the enrich kernel
+    output with no host round trip.
+    """
+    D, C, Hd = cfg.derived_dim, cfg.inference_classes, cfg.inference_hidden
+    kind = cfg.inference_head
+    if kind == "linear":
+        params = {"w": 0.1 * jax.random.normal(key, (D, C), jnp.float32),
+                  "b": jnp.zeros((C,), jnp.float32)}
+
+        def apply(p, feats):
+            x = jnp.log1p(jnp.abs(feats.astype(jnp.float32)))
+            return x @ p["w"] + p["b"]
+
+        return params, apply
+    if kind == "mlp":
+        k1, k2 = jax.random.split(key)
+        params = {"w1": 0.1 * jax.random.normal(k1, (D, Hd), jnp.float32),
+                  "b1": jnp.zeros((Hd,), jnp.float32),
+                  "w2": 0.1 * jax.random.normal(k2, (Hd, C), jnp.float32),
+                  "b2": jnp.zeros((C,), jnp.float32)}
+
+        def apply(p, feats):
+            x = jnp.log1p(jnp.abs(feats.astype(jnp.float32)))
+            h = jax.nn.relu(x @ p["w1"] + p["b1"])
+            return h @ p["w2"] + p["b2"]
+
+        return params, apply
+    raise ValueError(
+        f"unknown inference_head {kind!r}; expected 'linear' or 'mlp' "
+        "(use 'none' to disable the hook)")
 
 
 # ------------------------------------------------------- input specs -------

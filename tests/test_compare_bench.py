@@ -1,0 +1,44 @@
+"""The nightly regression gate's comparison logic (benchmarks/compare_bench):
+matched-row thresholds, untimed/new/removed row handling."""
+import sys
+import os
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks.compare_bench import compare  # noqa: E402
+
+
+def _rows(**named):
+    return {k: {"name": k, "us_per_call": v} for k, v in named.items()}
+
+
+def test_within_threshold_passes():
+    base = _rows(a=100.0, b=50.0)
+    cur = _rows(a=110.0, b=45.0)
+    reg, imp, skipped, unmatched = compare(base, cur, 0.15)
+    assert reg == [] and imp == [] and skipped == [] and unmatched == []
+
+
+def test_regression_and_improvement_detected():
+    base = _rows(a=100.0, b=100.0)
+    cur = _rows(a=130.0, b=60.0)
+    reg, imp, *_ = compare(base, cur, 0.15)
+    assert [r[0] for r in reg] == ["a"]
+    assert [r[0] for r in imp] == ["b"]
+
+
+def test_untimed_new_and_removed_rows_never_gate():
+    base = _rows(a=100.0, gone=10.0, zero=0.0)
+    cur = _rows(a=100.0, fresh=999.0, zero=0.0)
+    cur["nan"] = {"name": "nan", "us_per_call": float("nan")}
+    reg, _, skipped, unmatched = compare(base, cur, 0.15)
+    assert reg == []
+    assert {s[0] for s in skipped} == {"fresh", "zero", "nan"}
+    assert unmatched == ["gone"]
+
+
+def test_exact_threshold_boundary_passes():
+    base = _rows(a=100.0)
+    cur = _rows(a=115.0)          # exactly +15%: not a regression
+    reg, *_ = compare(base, cur, 0.15)
+    assert reg == []

@@ -282,13 +282,8 @@ def test_env_override_interpret_matches_ref_end_to_end(monkeypatch):
 # -- multi-period streaming ---------------------------------------------------
 
 def _period_batches(system, T, events_per_shard=128):
-    flows = PK.gen_flows(10, seed=3)
-    evs = [PK.events_for_shards(flows, t, system.n_shards, events_per_shard)
-           for t in range(T)]
-    events = {k: jnp.stack([jnp.asarray(e[k]) for e in evs])
-              for k in evs[0]}
-    nows = jnp.asarray([(t + 1) * 100_000 for t in range(T)], jnp.uint32)
-    return events, nows
+    return PK.period_batches(system.n_shards, T, events_per_shard,
+                             n_flows=10, flow_seed=3)
 
 
 def test_run_periods_matches_sequential_steps():

@@ -63,9 +63,15 @@ def test_memory_entries_verbatim_payloads(system, rng):
     ev_valid = np.asarray(state.collector.entry_valid)
     rows = mem[ev_valid]
     assert len(rows) > 0
-    ok = np.bitwise_xor.reduce(rows[:, :P.CSUM_WORD], axis=1) == \
-        rows[:, P.CSUM_WORD]
-    assert ok.all()
+    # independent recomputation of the rotate-then-xor fold (words 0-13 +
+    # pad word 15, each rotated left by its payload position)
+    acc = np.zeros(len(rows), np.uint64)
+    for w in P.CSUM_COVERED:
+        x = rows[:, w].astype(np.uint64)
+        k = w % 32
+        acc ^= ((x << k) | (x >> ((32 - k) % 32))) & 0xFFFFFFFF
+    assert (acc.astype(np.uint32) == rows[:, P.CSUM_WORD]).all()
+    assert np.asarray(P.payload_valid(jnp.asarray(rows))).all()
 
 
 def test_history_accumulates_over_periods(system):

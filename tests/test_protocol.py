@@ -73,10 +73,11 @@ if HAVE_HYPOTHESIS:
         np.testing.assert_array_equal(np.asarray(u["stats"]), stats)
 
     @settings(max_examples=50, deadline=None)
-    @given(u32, st.integers(0, 14), st.integers(1, 2**32 - 1))
+    @given(u32, st.integers(0, 15), st.integers(1, 2**32 - 1))
     def test_checksum_detects_any_single_word_flip(flow, word, flip):
-        """Flipping exactly one covered word (0..13 data or the stored
-        checksum itself, word 14) is always detected."""
+        """Flipping exactly one word ANYWHERE in the payload — data words
+        0..13, the stored checksum (14), or the pad word (15, previously
+        outside the fold's coverage) — is always detected."""
         tampered = _payload(flow).at[word].set(
             _payload(flow)[word] ^ jnp.uint32(flip))
         assert not bool(P.payload_valid(tampered))
@@ -84,14 +85,18 @@ if HAVE_HYPOTHESIS:
     @settings(max_examples=50, deadline=None)
     @given(st.integers(0, 13), st.integers(1, 2**32 - 1))
     def test_xor_checksum_linearity(word, flip):
-        """checksum(p with word^mask) == checksum(p) ^ mask — a 1-word
-        corruption flips the fold by exactly its mask, which is why any
-        nonzero single-word flip is caught."""
+        """checksum(p with word^mask) == checksum(p) ^ rotl(mask, word) —
+        a 1-word corruption flips the fold by its mask rotated to the
+        word's position, which is why any nonzero single-word flip is
+        caught AND why the same mask on two different words no longer
+        cancels."""
         p = _payload()
         body = p[:P.CSUM_WORD]
         tampered = body.at[word].set(body[word] ^ jnp.uint32(flip))
+        k = word % 32
+        rotated = ((flip << k) | (flip >> ((32 - k) % 32))) & 0xFFFFFFFF
         assert int(P.xor_checksum(tampered)) == (
-            int(P.xor_checksum(body)) ^ flip)
+            int(P.xor_checksum(body)) ^ rotated)
 
     @settings(max_examples=100, deadline=None)
     @given(u32)
@@ -106,33 +111,53 @@ if HAVE_HYPOTHESIS:
         assert int(u["hist_idx"]) == 5
 
 
-# -- deterministic checksum algebra / blind spots -----------------------------
+# -- deterministic checksum algebra / former blind spots ----------------------
 
 def test_checksum_word_flip_smoke():
     p = _payload()
     assert bool(P.payload_valid(p))
-    for word in range(15):
+    for word in range(16):          # every word, pad included
         tampered = p.at[word].set(p[word] ^ jnp.uint32(0xDEAD))
         assert not bool(P.payload_valid(tampered)), word
 
 
-def test_checksum_two_word_cancellation_blind_spot():
-    """xor-fold limitation, documented on purpose: the SAME mask applied
-    to two covered words cancels and validates clean. The paper's §VI-B
-    answer is the per-reporter sequence continuity check, not a stronger
-    checksum."""
+def test_checksum_two_word_cancellation_detected():
+    """The plain xor-fold's blind spot — the SAME mask applied to two
+    covered words cancelled and validated clean — is closed by the
+    position-dependent fold: rotl(mask, i) ^ rotl(mask, j) != 0 for
+    i != j unless the mask is rotation-invariant under (i - j)."""
     p = _payload()
-    mask = jnp.uint32(0xBEEF)
+    mask = jnp.uint32(0xBEEF)       # the historical documented blind spot
     double = p.at[2].set(p[2] ^ mask).at[9].set(p[9] ^ mask)
+    assert not bool(P.payload_valid(double))
+    # sweep every covered pair with an asymmetric mask
+    for i in range(14):
+        for j in range(i + 1, 14):
+            t = p.at[i].set(p[i] ^ mask).at[j].set(p[j] ^ mask)
+            assert not bool(P.payload_valid(t)), (i, j)
+
+
+def test_checksum_rotation_invariant_mask_residual_blind_spot():
+    """Honest residual: a mask invariant under rotation by (i - j) — the
+    all-ones word is invariant under EVERY rotation — still cancels
+    across two words. The paper's §VI-B sequence-continuity check is the
+    backstop for adversarial tampering; the fold targets fat-finger /
+    bit-rot corruption."""
+    p = _payload()
+    ones = jnp.uint32(0xFFFFFFFF)
+    double = p.at[2].set(p[2] ^ ones).at[9].set(p[9] ^ ones)
     assert bool(P.payload_valid(double))
 
 
-def test_checksum_pad_word_blind_spot():
-    """Word 15 (pad) is outside the fold: flips there are invisible to
-    payload_valid — unpack_payload must never read it."""
+def test_checksum_pad_word_flip_detected():
+    """Word 15 (pad) used to be outside the fold — flips there were
+    invisible. It is now covered (rotated by position 15): any nonzero
+    pad is rejected, while unpack_payload still never reads it."""
     p = _payload()
     tampered = p.at[15].set(jnp.uint32(0xFFFFFFFF))
-    assert bool(P.payload_valid(tampered))
+    assert not bool(P.payload_valid(tampered))
+    tampered_lsb = p.at[15].set(jnp.uint32(1))
+    assert not bool(P.payload_valid(tampered_lsb))
     u_clean, u_bad = P.unpack_payload(p), P.unpack_payload(tampered)
     for k in u_clean:
         np.testing.assert_array_equal(np.asarray(u_clean[k]),

@@ -125,6 +125,101 @@ def test_register_wraparound(rng):
     assert int(out[0, 1]) == 0x10               # wrapped
 
 
+def test_timestamp_wrap_iat(rng):
+    """u32 µs clock wrap (~71.6 min): IATs must stay correct across the
+    wrap and last_ts must track the LATEST event, not the numeric max —
+    the old ``.max(ts)`` update pinned the stale pre-wrap value forever,
+    corrupting every subsequent IAT for the flow."""
+    cfg = get_dfa_config(reduced=True)    # COL_IAT sums are exact (no log*)
+    key = np.arange(1, 6, dtype=np.uint32)
+    slot = int(np.asarray(R.hash_slot(jnp.asarray(key),
+                                      cfg.flows_per_shard)))
+
+    def block(ts_list):
+        n = len(ts_list)
+        return {"ts": jnp.asarray(ts_list, jnp.uint32),
+                "size": jnp.full((n,), 100, jnp.uint32),
+                "five_tuple": jnp.tile(jnp.asarray(key), (n, 1)),
+                "valid": jnp.ones((n,), bool)}
+
+    st = R.init_state(cfg)
+    # pre-wrap block: two packets just below 2^32
+    st = R.ingest(st, block([0xFFFFFF00, 0xFFFFFFF0]), cfg)
+    assert int(st.last_ts[slot]) == 0xFFFFFFF0
+    assert int(st.regs[slot, R.COL_IAT]) == 0xF0     # second - first
+    # post-wrap block: one packet at 0x10 — true IAT 0x20 via mod 2^32
+    st = R.ingest(st, block([0x00000010]), cfg)
+    assert int(st.last_ts[slot]) == 0x10, \
+        "last_ts must take the post-wrap (numerically smaller) value"
+    assert int(st.regs[slot, R.COL_IAT]) == 0xF0 + 0x20
+    # next packet's IAT is measured from the post-wrap register
+    st = R.ingest(st, block([0x00000030]), cfg)
+    assert int(st.regs[slot, R.COL_IAT]) == 0xF0 + 0x20 + 0x20
+
+
+def test_wrap_crossing_mid_block(rng):
+    """A wrap INSIDE one block: arrival order (not numeric ts order) must
+    drive both the in-block IAT chain and the final last_ts register."""
+    cfg = get_dfa_config(reduced=True)    # COL_IAT sums are exact (no log*)
+    key = np.arange(11, 16, dtype=np.uint32)
+    slot = int(np.asarray(R.hash_slot(jnp.asarray(key),
+                                      cfg.flows_per_shard)))
+    ev = {"ts": jnp.asarray([0xFFFFFFE0, 0x00000008], jnp.uint32),
+          "size": jnp.full((2,), 64, jnp.uint32),
+          "five_tuple": jnp.tile(jnp.asarray(key), (2, 1)),
+          "valid": jnp.ones((2,), bool)}
+    st = R.ingest(R.init_state(cfg), ev, cfg)
+    assert int(st.last_ts[slot]) == 0x8
+    assert int(st.regs[slot, R.COL_IAT]) == 0x28     # 0x8 - 0xFFFFFFE0
+
+
+def test_due_flows_wrap_crossing():
+    """last_report just below the wrap, now just after it: the u32
+    subtraction yields the true elapsed interval, so the flow goes due
+    exactly one period later — and reporting at a post-wrap ``now`` must
+    STORE that smaller value (the old .max update stalled the tracker)."""
+    cfg = get_dfa_config(reduced=True)
+    st = R.init_state(cfg)
+    st = st._replace(active=st.active.at[0].set(True),
+                     last_report=st.last_report.at[0].set(
+                         jnp.uint32(0xFFFFF000)))
+    period = jnp.uint32(cfg.monitoring_period_us)
+    now_due = jnp.uint32(0xFFFFF000) + period        # wraps past 2^32
+    assert int(now_due) < 0xFFFFF000                 # really wrapped
+    _, mask_early = R.due_flows(st, now_due - jnp.uint32(1), cfg, 8)
+    assert int(mask_early.sum()) == 0
+    slots, mask = R.due_flows(st, now_due, cfg, 8)
+    assert int(mask.sum()) == 1
+    st2, _ = R.make_reports(st, slots, mask, now_due, 0, 0, cfg)
+    assert int(st2.last_report[0]) == int(now_due), \
+        "post-wrap report time must replace the pre-wrap register"
+    _, mask_after = R.due_flows(st2, now_due, cfg, 8)
+    assert int(mask_after.sum()) == 0
+
+
+def test_due_flows_zero_period_edge(rng):
+    """monitoring_period_us == 0 means report every period — but the old
+    ``top > 0`` proxy scored just-reported flows 0 and silently dropped
+    them. The due flags gathered at the top-k indices keep them."""
+    import dataclasses
+    cfg = dataclasses.replace(get_dfa_config(reduced=True),
+                              monitoring_period_us=0)
+    ev = make_events(rng, cfg, n_flows=5, E=32)
+    st = R.ingest(R.init_state(cfg),
+                  {k: jnp.asarray(v) for k, v in ev.items()}, cfg)
+    n_active = int(np.asarray(st.active).sum())
+    now = jnp.uint32(50_000)
+    slots, mask = R.due_flows(st, now, cfg, capacity=16)
+    assert int(mask.sum()) == n_active
+    st, _ = R.make_reports(st, slots, mask, now, 0, 0, cfg)
+    # same instant, zero elapsed: still due (elapsed 0 >= period 0)
+    slots2, mask2 = R.due_flows(st, now, cfg, capacity=16)
+    assert int(mask2.sum()) == n_active
+    got = {int(s) for s, m in zip(np.asarray(slots2), np.asarray(mask2))
+           if m}
+    assert got == {int(s) for s in np.nonzero(np.asarray(st.active))[0]}
+
+
 def test_collision_counting(rng):
     cfg = get_dfa_config(reduced=True)
     # two different keys forced into the same slot via crafted search

@@ -18,7 +18,6 @@ import json
 import os
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.compat import make_mesh
@@ -39,12 +38,9 @@ def _run(monkeypatch):
     cfg = dataclasses.replace(get_dfa_config(reduced=True),
                               kernel_backend="ref")
     system = DFASystem(cfg, make_mesh((1, 1), ("data", "model")))
-    flows = PK.gen_flows(10, seed=3)
-    evs = [PK.events_for_shards(flows, t, system.n_shards,
-                                EVENTS_PER_SHARD) for t in range(T)]
-    events = {k: jnp.stack([jnp.asarray(e[k]) for e in evs])
-              for k in evs[0]}
-    nows = jnp.asarray([(t + 1) * 100_000 for t in range(T)], jnp.uint32)
+    events, nows = PK.period_batches(system.n_shards, T,
+                                     EVENTS_PER_SHARD, n_flows=10,
+                                     flow_seed=3)
     with system.mesh:
         state, enr, fid, em, met = jax.jit(system.run_periods)(
             system.init_state(), events, nows)
