@@ -1,0 +1,167 @@
+"""ingest_update scaling sweep — events/shard E up to 2^20.
+
+The paper's headline number is line-rate *ingest* (31M feature vectors/s
+of extraction), so this sweep measures events/s the way gather_scaling
+measures flows/s: per E it times, on one reporter shard,
+
+* multipass  — the pre-fusion ingest (backend="ref": two argsorts,
+               a materialized (E, 7) delta array, three scatters)
+* fused      — the sort-once jnp engine (one argsort, deltas formed on
+               the sorted stream and segment-reduced per slot run by
+               cumsum differences, one scatter-add per run)
+* interpret/block, interpret/hbm — the Pallas kernels in interpreter
+               mode, smallest E only (interpreter walls are orders of
+               magnitude off compiled-kernel performance and would
+               drown the sweep; they pin the kernels' plumbing cost)
+
+plus the analytic block->hbm VMEM crossover E from the budget formula —
+the bench-smoke artifact trends the measured rows and the fused-vs-
+multipass ratio per commit (the PR 3 nightly regression-gate diffs
+matched rows). CPU walls are relative; the derived column carries a TPU
+v5e HBM projection of the per-event stream traffic.
+
+Standalone: ``python benchmarks/ingest_scaling.py --tiny --json out.json``
+(also wired into benchmarks/run.py, so the CI bench-smoke artifact
+includes the per-E records).
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import sys
+
+if __package__ in (None, ""):           # executed as a script: mirror
+    _root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    sys.path.insert(0, os.path.join(_root, "src"))   # run.py's sys.path
+    sys.path.insert(0, _root)
+    if "--tiny" in sys.argv:            # before benchmarks.common binds TINY
+        os.environ["REPRO_BENCH_TINY"] = "1"
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import HBM_BW, TINY, csv
+from repro.configs import get_dfa_config
+from repro.core import reporter as R
+from repro.kernels import dispatch
+from repro.kernels.ingest_update.kernel import clamp_tile
+from repro.kernels.ingest_update.ops import (ingest_update,
+                                             ingest_update_fused)
+
+F = 1 << 12 if TINY else 1 << 17         # flows/shard (paper: 2^17)
+E_SWEEP = ([1 << 10, 1 << 12, 1 << 14] if TINY else
+           [1 << 12, 1 << 14, 1 << 16, 1 << 18, 1 << 20])
+INTERPRET_E = E_SWEEP[0]                 # interpreter rows: smallest E only
+
+
+def _events(rng, E):
+    n_keys = max(8, E // 16)             # ~16-packet flows per block
+    keys = rng.integers(1, 2**31, size=(n_keys, 5)).astype(np.uint32)
+    ts = np.sort(rng.integers(0, 10_000_000, size=E)) + np.arange(E)
+    return {"ts": jnp.asarray(ts.astype(np.uint32)),
+            "size": jnp.asarray(rng.integers(40, 1500, size=E)
+                                .astype(np.uint32)),
+            "five_tuple": jnp.asarray(keys[rng.integers(0, n_keys,
+                                                        size=E)]),
+            "valid": jnp.ones(E, bool)}
+
+
+def _fused_fn(cfg):
+    def fn(st, ev):
+        slots = R.hash_slot(ev["five_tuple"], cfg.flows_per_shard)
+        return ingest_update_fused(
+            st.regs, st.last_ts, st.keys, st.active, st.collisions,
+            slots, ev["ts"], ev["size"], ev["five_tuple"], ev["valid"],
+            cfg)
+    return fn
+
+
+def _interpret_fn(cfg, variant):
+    def fn(st, ev):
+        slots = R.hash_slot(ev["five_tuple"], cfg.flows_per_shard)
+        return ingest_update(
+            st.regs, st.last_ts, st.keys, st.active, st.collisions,
+            slots, ev["ts"], ev["size"], ev["five_tuple"], ev["valid"],
+            cfg, backend="interpret", variant=variant)
+    return fn
+
+
+def _timed(fn, *args):
+    """min-of-6 wall seconds. time_it's tiny-mode median-of-2 is too
+    noisy for the fused-vs-multipass ratio the regression gate watches,
+    and these row sizes are cheap enough that 6 iterations still fit the
+    bench-smoke budget; min is the stable statistic for a ratio."""
+    import time
+
+    import numpy as _np
+    out = fn(*args)
+    jax.tree.map(lambda a: a.block_until_ready()
+                 if hasattr(a, "block_until_ready") else a, out)
+    ts = []
+    for _ in range(6):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.tree.map(lambda a: a.block_until_ready()
+                     if hasattr(a, "block_until_ready") else a, out)
+        ts.append(time.perf_counter() - t0)
+    return float(_np.min(ts))
+
+
+def run():
+    cfg = dataclasses.replace(get_dfa_config(), flows_per_shard=F)
+    rng = np.random.default_rng(0)
+    st = R.init_state(cfg)
+    # per-event stream traffic the fused kernel moves: five sorted u32
+    # words in, one 8-word run-sum row out — the v5e HBM-bound floor
+    bytes_per_event = dispatch.EVENT_WORDS * 4 + 8 * 4
+    for E in E_SWEEP:
+        ev = _events(rng, E)
+        tile = clamp_tile(cfg.event_tile, E)
+        auto = dispatch.resolve_ingest_variant(None, cfg, E, tile)
+        tpu_us = E * bytes_per_event / HBM_BW * 1e6
+        t_multi = _timed(jax.jit(
+            lambda s, e: R.ingest(s, e, cfg, backend="ref")), st, ev)
+        csv(f"ingest_scaling_E{E}_multipass", t_multi * 1e6,
+            f"events_per_s={E / t_multi:.3e};F={F};auto={auto}")
+        t_fused = _timed(jax.jit(_fused_fn(cfg)), st, ev)
+        csv(f"ingest_scaling_E{E}_fused", t_fused * 1e6,
+            f"events_per_s={E / t_fused:.3e};F={F};"
+            f"fused_vs_multipass={t_multi / t_fused:.2f};auto={auto};"
+            f"tpu_v5e_us={tpu_us:.2f}")
+        if E <= INTERPRET_E:
+            for variant in ("block", "hbm"):
+                t = _timed(jax.jit(_interpret_fn(cfg, variant)), st, ev)
+                csv(f"ingest_scaling_E{E}_interpret_{variant}", t * 1e6,
+                    f"events_per_s={E / t:.3e};F={F}")
+    # analytic crossover: largest power-of-two E whose sorted stream
+    # still fits the VMEM budget as blocks — auto flips to hbm above
+    budget = cfg.vmem_budget_mb * dispatch.VMEM_BYTES_PER_MB
+    Ex = 1
+    while dispatch.ingest_vmem_bytes("block", Ex * 2, 256) <= budget:
+        Ex *= 2
+    csv("ingest_scaling_vmem_crossover", 0.0,
+        f"max_block_E={Ex};budget_mb={cfg.vmem_budget_mb};"
+        f"event_tile=256;target_E={1 << 20};target_variant="
+        f"{dispatch.resolve_ingest_variant(None, cfg, 1 << 20, 256)}")
+
+
+def main():
+    """Standalone entry: python benchmarks/ingest_scaling.py [--tiny]
+    [--json PATH]. The --tiny env contract matches run.py (the flag is
+    consumed before benchmarks.common binds TINY, via the script
+    bootstrap above)."""
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--tiny", action="store_true")
+    ap.add_argument("--json", default=None, metavar="PATH")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    run()
+    if args.json:
+        from benchmarks import common
+        common.write_artifact(args.json, tag="ingest_scaling")
+
+
+if __name__ == "__main__":
+    main()

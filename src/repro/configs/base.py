@@ -168,6 +168,17 @@ class DFAConfig:
     # ~16 MB; the full-block kernel is chosen only while its ring region
     # + tile working set fit under this)
     vmem_budget_mb: int = 16
+    # ingest_update event-stream strategy: "auto" | "block" (sorted event
+    # stream streams through BlockSpec-tiled VMEM) | "hbm" (stream stays
+    # HBM-resident, per-event_tile double-buffered DMA — events/shard can
+    # grow to 2^20 with VMEM = O(event_tile)). auto = VMEM-budget
+    # heuristic in dispatch.resolve_ingest_variant; REPRO_INGEST_VARIANT
+    # env var overrides this field.
+    ingest_variant: str = "auto"
+    # sorted-event tile the fused ingest kernels process per grid step;
+    # clamped to 256 (the u16-half matmul exactness bound) and to the
+    # block's event count
+    event_tile: int = 256
     # streaming driver: software-pipeline the period stream so period t's
     # enrich(+inference) half runs in the same scan body as period t+1's
     # ingest half (pipeline.run_periods_overlapped); False = strictly

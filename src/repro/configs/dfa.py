@@ -31,6 +31,7 @@ REDUCED = DFAConfig(
     flow_tile=64,
     gather_variant="auto",     # budget heuristic -> "full" at 256 flows
     vmem_budget_mb=16,
+    event_tile=64,             # multiple event tiles per 128-event block
 )
 
 # REDUCED shapes forced onto the Tofino-scale memory strategy: the

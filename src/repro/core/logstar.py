@@ -34,10 +34,11 @@ def _luts(bits: int):
     return log_lut, exp_lut
 
 
-def log2_star(x: jax.Array, bits: int) -> jax.Array:
-    """u32 -> Q16 fixed-point log2 approximation (0 for x == 0)."""
-    log_lut, _ = _luts(bits)
-    lut = jnp.asarray(log_lut)
+def log2_star_with_lut(x: jax.Array, bits: int,
+                       lut: jax.Array) -> jax.Array:
+    """:func:`log2_star` with the LUT passed explicitly — for Pallas
+    kernel bodies, where a captured jnp constant is illegal and the LUT
+    must arrive as a kernel input."""
     x = x.astype(jnp.uint32)
     # exponent = position of the leading set bit (31 - clz), on u32 so the
     # top bit (x >= 2^31) is handled correctly
@@ -54,10 +55,14 @@ def log2_star(x: jax.Array, bits: int) -> jax.Array:
     return jnp.where(x == 0, jnp.uint32(0), val.astype(jnp.uint32))
 
 
-def exp2_star(l: jax.Array, bits: int) -> jax.Array:
-    """Q16 fixed-point log2 -> u32 value (saturating at 2^32-1)."""
-    _, exp_lut = _luts(bits)
-    lut = jnp.asarray(exp_lut)
+def log2_star(x: jax.Array, bits: int) -> jax.Array:
+    """u32 -> Q16 fixed-point log2 approximation (0 for x == 0)."""
+    return log2_star_with_lut(x, bits, jnp.asarray(_luts(bits)[0]))
+
+
+def exp2_star_with_lut(l: jax.Array, bits: int,
+                       lut: jax.Array) -> jax.Array:
+    """:func:`exp2_star` with the LUT passed explicitly (Pallas-safe)."""
     l = l.astype(jnp.uint32)
     e = (l >> Q).astype(jnp.int32)                         # integer part
     frac = ((l >> (Q - bits)) & ((1 << bits) - 1)).astype(jnp.uint32)
@@ -74,15 +79,30 @@ def exp2_star(l: jax.Array, bits: int) -> jax.Array:
     return jnp.where(l == 0, jnp.uint32(1), val).astype(jnp.uint32)
 
 
-def approx_pow(x: jax.Array, n: int, bits: int) -> jax.Array:
-    """x^n through the log*/exp* LUT pipeline (saturating u32); 0 -> 0."""
-    lx = log2_star(x, bits)
+def exp2_star(l: jax.Array, bits: int) -> jax.Array:
+    """Q16 fixed-point log2 -> u32 value (saturating at 2^32-1)."""
+    return exp2_star_with_lut(l, bits, jnp.asarray(_luts(bits)[1]))
+
+
+def approx_pow_with_luts(x: jax.Array, n: int, bits: int,
+                         log_lut: jax.Array,
+                         exp_lut: jax.Array) -> jax.Array:
+    """:func:`approx_pow` with both LUTs passed explicitly (Pallas-safe:
+    kernel bodies feed the LUT refs they received as inputs)."""
+    lx = log2_star_with_lut(x, bits, log_lut)
     ln = lx * jnp.uint32(n)
     # detect overflow of the power before exp
     sat = (ln >> Q) >= 32
-    v = exp2_star(ln, bits)
+    v = exp2_star_with_lut(ln, bits, exp_lut)
     v = jnp.where(sat, jnp.uint32(0xFFFFFFFF), v)
     return jnp.where(x == 0, jnp.uint32(0), v)
+
+
+def approx_pow(x: jax.Array, n: int, bits: int) -> jax.Array:
+    """x^n through the log*/exp* LUT pipeline (saturating u32); 0 -> 0."""
+    log_lut, exp_lut = _luts(bits)
+    return approx_pow_with_luts(x, n, bits, jnp.asarray(log_lut),
+                                jnp.asarray(exp_lut))
 
 
 def decode_log(l: jax.Array) -> jax.Array:

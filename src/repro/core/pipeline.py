@@ -177,7 +177,10 @@ class DFASystem:
             collisions0 = jnp.sum(rep_st.collisions)
             bad_csum0 = jnp.sum(coll_st.bad_checksum)
             seq_anom0 = jnp.sum(coll_st.seq_anomalies)
-            # 1. reporter ingest (flow_moments via the dispatch registry)
+            # 1. reporter ingest (ingest_update via the dispatch
+            # registry: ref = multipass oracle, pallas/interpret = fused
+            # sort-once kernel; cfg.ingest_variant/event_tile select the
+            # event-stream memory strategy)
             rep_st = REP.ingest(rep_st, {"ts": ev_ts, "size": ev_sz,
                                          "five_tuple": ev_tu,
                                          "valid": ev_va}, cfg)
@@ -375,7 +378,9 @@ class DFASystem:
     # -- convenience ------------------------------------------------------
     def describe(self) -> Dict[str, Any]:
         """Trace-time kernel selection for this system: backend, gather
-        memory strategy, and the VMEM numbers that drove the choice."""
+        memory strategy, ingest event-stream strategy, and the VMEM
+        numbers that drove the choices."""
+        from repro.kernels.ingest_update.kernel import clamp_tile
         cfg = self.cfg
         backend = dispatch.resolve_backend(None, cfg)
         # mirror dfa_step: each shard enriches n_shards * cap_out routed
@@ -386,9 +391,19 @@ class DFASystem:
                    dispatch.resolve_gather_variant(
                        None, cfg, cfg.flows_per_shard, cfg.history, tile,
                        cfg.derived_dim))
+        # ingest side: each shard sorts/reduces event_block events/period
+        etile = clamp_tile(cfg.event_tile, cfg.event_block)
+        ingest_variant = ("ref" if backend == "ref" else
+                          dispatch.resolve_ingest_variant(
+                              None, cfg, cfg.event_block, etile))
         return {
             "kernel_backend": backend,
             "gather_variant": variant,
+            "ingest_variant": ingest_variant,
+            "event_tile": etile,
+            "ingest_vmem_bytes": dispatch.ingest_vmem_bytes(
+                "hbm" if ingest_variant == "hbm" else "block",
+                cfg.event_block, etile),
             "ring_region_bytes": cfg.ring_region_bytes(),
             "vmem_budget_bytes": cfg.vmem_budget_mb
             * dispatch.VMEM_BYTES_PER_MB,

@@ -10,8 +10,11 @@ bottleneck) is replaced by in-path admission — see DESIGN.md §11(3).
 Packet events arrive as time-sorted arrays; IAT resolution uses the stored
 last-timestamp register, with in-block predecessors resolved by a stable
 sort per slot (the vectorized equivalent of sequential packet processing).
-Moment accumulation — the hot spot — is delegated to the flow_moments
-kernel (Pallas on TPU, jnp oracle elsewhere).
+``ingest`` routes through the ingest_update kernel family: the ref backend
+keeps this module's multipass shape as the bitwise oracle, the Pallas
+backends take the fused sort-once / segment-reduce path
+(repro.kernels.ingest_update) that forms the Table-I deltas inside the
+kernel and emits one scatter-add per slot run.
 """
 from __future__ import annotations
 
@@ -60,6 +63,10 @@ def hash_slot(five_tuple: jax.Array, n_slots: int) -> jax.Array:
     for i in range(5):
         h = (h ^ five_tuple[..., i].astype(jnp.uint32)) * jnp.uint32(
             0x01000193)
+    if n_slots & (n_slots - 1) == 0:
+        # power-of-two table (every shipped config): the modulo is a
+        # mask — bit-identical to ``h % n_slots``, no division per event
+        return (h & jnp.uint32(n_slots - 1)).astype(jnp.int32)
     return (h % jnp.uint32(n_slots)).astype(jnp.int32)
 
 
@@ -126,27 +133,53 @@ def resolve_iat(slots: jax.Array, ts: jax.Array, valid: jax.Array,
     return iat, first_flags, new_last
 
 
-def admit(state: ReporterState, slots: jax.Array, five_tuple: jax.Array,
-          valid: jax.Array) -> Tuple[ReporterState, jax.Array]:
-    """Hash-slot admission with stored-key collision detection.
+def admit_arrays(keys: jax.Array, active: jax.Array,
+                 collisions: jax.Array, slots: jax.Array,
+                 five_tuple: jax.Array, valid: jax.Array
+                 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Pure-array hash-slot admission with stored-key collision detection.
 
     A valid event either (a) matches the stored key (tracked flow),
     (b) lands in an empty slot (new flow — install key), or (c) collides —
     counted in telemetry and the event attributed to the resident flow
     (paper: no explicit mechanism for such flows either, §IV-A).
+
+    First-come install is enforced WITHIN a block too: when several new
+    flows hash to the same empty slot in one block, only the first in
+    arrival order installs its key; later same-block arrivals compare
+    against that installed key (same key -> tracked, different key ->
+    collision). The old duplicate-index ``.at[].set`` let the last
+    writer win nondeterministically.
     """
-    F = state.keys.shape[0]
+    F = keys.shape[0]
+    E = slots.shape[0]
     cl = jnp.clip(slots, 0, F - 1)
-    stored = state.keys[cl]                       # (E, 5)
-    empty = ~state.active[cl]
+    stored = keys[cl]                             # (E, 5)
+    empty = ~active[cl]
     match = jnp.all(stored == five_tuple, axis=-1) & ~empty
-    collide = valid & ~match & ~empty
-    install = valid & empty
-    # first-come key install; out-of-range sentinel rows are dropped
-    tgt = jnp.where(install, slots, F)
-    keys = state.keys.at[tgt].set(five_tuple, mode="drop")
-    active = state.active.at[tgt].set(True, mode="drop")
-    collisions = state.collisions + jnp.sum(collide).astype(jnp.uint32)
+    want_install = valid & empty
+    # first arrival index per install slot (scatter-min; sentinel row F)
+    cand = jnp.where(want_install, slots, F)
+    idx = jnp.arange(E, dtype=jnp.int32)
+    first_idx = jnp.full((F + 1,), E, jnp.int32).at[cand].min(idx)
+    winner = want_install & (first_idx[cl] == idx)
+    tgt = jnp.where(winner, slots, F)             # unique -> deterministic
+    new_keys = keys.at[tgt].set(five_tuple, mode="drop")
+    new_active = active.at[tgt].set(True, mode="drop")
+    # same-block losers compare against the key the winner installed
+    dup_match = jnp.all(new_keys[cl] == five_tuple, axis=-1)
+    collide = valid & ((~empty & ~match)
+                       | (empty & ~winner & ~dup_match))
+    new_coll = collisions + jnp.sum(collide).astype(jnp.uint32)
+    return new_keys, new_active, new_coll
+
+
+def admit(state: ReporterState, slots: jax.Array, five_tuple: jax.Array,
+          valid: jax.Array) -> Tuple[ReporterState, jax.Array]:
+    """State-level wrapper over :func:`admit_arrays` (semantics there)."""
+    keys, active, collisions = admit_arrays(
+        state.keys, state.active, state.collisions, slots, five_tuple,
+        valid)
     return state._replace(keys=keys, active=active,
                           collisions=collisions), valid
 
@@ -159,23 +192,40 @@ def accumulate_ref(regs: jax.Array, slots: jax.Array, deltas: jax.Array,
 
 
 def ingest(state: ReporterState, events: Dict[str, jax.Array],
-           cfg: DFAConfig, accumulate_fn=None) -> ReporterState:
+           cfg: DFAConfig, accumulate_fn=None,
+           backend=None) -> ReporterState:
     """Process one block of packet events.
 
     events: ts (E,) u32 µs | size (E,) u32 | five_tuple (E,5) u32 |
             valid (E,) bool
 
-    ``accumulate_fn`` defaults to the flow_moments kernel family resolved
-    through the dispatch registry (cfg.kernel_backend / env override);
-    pass ``accumulate_ref`` to force the jnp oracle.
+    Routes through the ``ingest_update`` kernel family
+    (cfg.kernel_backend / REPRO_KERNEL_BACKEND / ``backend=``): the
+    ``ref`` backend keeps the pre-fusion multipass shape (hash -> admit
+    -> resolve_iat -> event_deltas -> scatter-accumulate) as the bitwise
+    oracle; ``pallas``/``interpret`` take the fused sort-once,
+    segment-reduce path (one argsort, deltas formed and reduced per slot
+    run inside the kernel, one scatter-add per run). Passing an explicit
+    ``accumulate_fn`` forces the legacy multipass path with that
+    accumulator (how the flow_moments kernel is unit-tested in place).
     """
-    if accumulate_fn is None:
-        from repro.kernels.flow_moments.ops import flow_moments
-
-        def accumulate_fn(regs, slots, deltas, valid):
-            return flow_moments(regs, slots, deltas, valid, cfg=cfg)
-
     slots = hash_slot(events["five_tuple"], cfg.flows_per_shard)
+    if accumulate_fn is not None:
+        return _ingest_multipass(state, slots, events, cfg, accumulate_fn)
+    from repro.kernels.ingest_update.ops import ingest_update
+    regs, last_ts, keys, active, collisions = ingest_update(
+        state.regs, state.last_ts, state.keys, state.active,
+        state.collisions, slots, events["ts"], events["size"],
+        events["five_tuple"], events["valid"], cfg, backend=backend)
+    return state._replace(regs=regs, last_ts=last_ts, keys=keys,
+                          active=active, collisions=collisions)
+
+
+def _ingest_multipass(state: ReporterState, slots: jax.Array,
+                      events: Dict[str, jax.Array], cfg: DFAConfig,
+                      accumulate_fn) -> ReporterState:
+    """The pre-fusion multipass ingest with a caller-chosen accumulator
+    (admit -> resolve_iat -> event_deltas -> accumulate)."""
     pre_active = state.active            # BEFORE this block's admissions:
     state, valid = admit(state, slots, events["five_tuple"],
                          events["valid"])
@@ -208,11 +258,20 @@ def due_flows(state: ReporterState, now: jax.Array, cfg: DFAConfig,
         score = jnp.where(due, elapsed | jnp.uint32(1), jnp.uint32(0))
     else:
         score = jnp.where(due, elapsed, jnp.uint32(0))
-    _, idx = jax.lax.top_k(score, capacity)
+    # top_k over k > axis size crashes; clamp to F and pad the fixed-size
+    # SPMD return back up to ``capacity`` (pad rows masked out)
+    F = score.shape[0]
+    k = min(capacity, F)
+    _, idx = jax.lax.top_k(score, k)
     # gather the due flags at the selected slots — the old ``top > 0``
     # proxy silently dropped genuinely due flows whose elapsed score is 0
     # (monitoring_period_us == 0 reports every period by contract)
-    return idx.astype(jnp.int32), due[idx]
+    mask = due[idx]
+    if k < capacity:
+        idx = jnp.concatenate(
+            [idx, jnp.zeros((capacity - k,), idx.dtype)])
+        mask = jnp.concatenate([mask, jnp.zeros((capacity - k,), bool)])
+    return idx.astype(jnp.int32), mask
 
 
 def make_reports(state: ReporterState, slots: jax.Array, mask: jax.Array,

@@ -31,6 +31,16 @@ double-buffered scratch. ``resolve_gather_variant`` picks one by a
 VMEM-budget heuristic (full while the ring region fits, hbm beyond),
 overridable via ``DFAConfig.gather_variant`` or ``REPRO_GATHER_VARIANT``.
 
+``ingest_update`` (reporter-side fused sort-once / segment-reduce ingest)
+mirrors that scheme on the *event* axis: the ``block`` kernel streams the
+sorted event arrays through BlockSpec-tiled VMEM blocks, the ``hbm``
+kernel keeps them HBM-resident (``pltpu.ANY``) and double-buffers
+per-``event_tile`` DMA slices with scalar-prefetched run-boundary
+metadata, so events_per_shard can grow to 2^20 with VMEM = O(event_tile).
+``resolve_ingest_variant`` picks block while the whole sorted stream fits
+the VMEM budget, overridable via ``DFAConfig.ingest_variant`` or
+``REPRO_INGEST_VARIANT``.
+
 Resolution happens at trace time: a step traced under one setting keeps it
 until re-traced (jit caches are keyed on shapes, not on this env var).
 """
@@ -47,7 +57,10 @@ ENV_VAR = "REPRO_KERNEL_BACKEND"
 
 GATHER_VARIANTS = ("full", "hbm")
 GATHER_ENV_VAR = "REPRO_GATHER_VARIANT"
+INGEST_VARIANTS = ("block", "hbm")
+INGEST_ENV_VAR = "REPRO_INGEST_VARIANT"
 WORDS = 16               # collector entry words (64 B RoCEv2 payload)
+EVENT_WORDS = 5          # sorted-event-stream words: slot/ts/ps/base_ts/first
 VMEM_BYTES_PER_MB = 1 << 20
 
 _REGISTRY: Dict[str, Dict[str, Callable]] = {}
@@ -100,29 +113,42 @@ def _check_choice(value: str, valid: Tuple[str, ...], source: str) -> None:
             f"{list(valid)} (or 'auto')")
 
 
-def resolve_backend(backend: Optional[str] = None, cfg=None) -> str:
-    """Apply the selection precedence; returns one of BACKENDS.
+def _resolve_choice(explicit: Optional[str], cfg, *, env_var: str,
+                    choices: Tuple[str, ...], cfg_attr: str, heuristic,
+                    arg_source: str) -> str:
+    """The one selection-precedence ladder every knob shares: explicit
+    argument > ``env_var`` > ``DFAConfig.<cfg_attr>`` > ``heuristic()``.
 
-    A malformed ``REPRO_KERNEL_BACKEND`` raises even when a stronger
-    setting (explicit argument) would win: a typo'd env var silently
-    losing the precedence fight is indistinguishable from it working.
+    A malformed env value raises even when a stronger setting (explicit
+    argument) would win: a typo'd env var silently losing the precedence
+    fight is indistinguishable from it working.
     """
-    env = os.environ.get(ENV_VAR, "").strip().lower()
+    env = os.environ.get(env_var, "").strip().lower()
     if env not in ("", "auto"):
-        _check_choice(env, BACKENDS, f"env var {ENV_VAR}")
-    if backend in (None, "auto", ""):
-        cfg_backend = (getattr(cfg, "kernel_backend", "auto")
-                       if cfg is not None else "auto") or "auto"
+        _check_choice(env, choices, f"env var {env_var}")
+    if explicit in (None, "auto", ""):
+        cfg_value = (getattr(cfg, cfg_attr, "auto")
+                     if cfg is not None else "auto") or "auto"
         if env not in ("", "auto"):
-            backend = env
-        elif cfg_backend != "auto":
-            _check_choice(cfg_backend, BACKENDS,
-                          "DFAConfig.kernel_backend")
-            backend = cfg_backend
+            explicit = env
+        elif cfg_value != "auto":
+            _check_choice(cfg_value, choices, f"DFAConfig.{cfg_attr}")
+            explicit = cfg_value
         else:
-            backend = "pallas" if jax.default_backend() == "tpu" else "ref"
-    _check_choice(backend, BACKENDS, "backend= argument")
-    return backend
+            explicit = heuristic()
+    _check_choice(explicit, choices, arg_source)
+    return explicit
+
+
+def resolve_backend(backend: Optional[str] = None, cfg=None) -> str:
+    """Apply the selection precedence; returns one of BACKENDS (auto:
+    ``pallas`` on TPU, ``ref`` everywhere else)."""
+    return _resolve_choice(
+        backend, cfg, env_var=ENV_VAR, choices=BACKENDS,
+        cfg_attr="kernel_backend",
+        heuristic=lambda: ("pallas" if jax.default_backend() == "tpu"
+                           else "ref"),
+        arg_source="backend= argument")
 
 
 # -- gather_enrich memory-strategy variant ----------------------------------
@@ -162,27 +188,63 @@ def resolve_gather_variant(variant: Optional[str], cfg, flows: int,
     ``DFAConfig.gather_variant`` > the budget heuristic against
     ``DFAConfig.vmem_budget_mb``.
     """
-    env = os.environ.get(GATHER_ENV_VAR, "").strip().lower()
-    if env not in ("", "auto"):
-        _check_choice(env, GATHER_VARIANTS, f"env var {GATHER_ENV_VAR}")
-    if variant in (None, "auto", ""):
-        cfg_variant = (getattr(cfg, "gather_variant", "auto")
-                       if cfg is not None else "auto") or "auto"
-        if env not in ("", "auto"):
-            variant = env
-        elif cfg_variant != "auto":
-            _check_choice(cfg_variant, GATHER_VARIANTS,
-                          "DFAConfig.gather_variant")
-            variant = cfg_variant
-        else:
-            budget = int(getattr(cfg, "vmem_budget_mb", 16)
-                         ) * VMEM_BYTES_PER_MB
-            need = gather_vmem_bytes(
-                "full", flows, history, report_tile, derived_dim,
-                words=int(getattr(cfg, "payload_words", WORDS)))
-            variant = "full" if need <= budget else "hbm"
-    _check_choice(variant, GATHER_VARIANTS, "variant= argument")
-    return variant
+    def heuristic():
+        budget = int(getattr(cfg, "vmem_budget_mb", 16)
+                     ) * VMEM_BYTES_PER_MB
+        need = gather_vmem_bytes(
+            "full", flows, history, report_tile, derived_dim,
+            words=int(getattr(cfg, "payload_words", WORDS)))
+        return "full" if need <= budget else "hbm"
+
+    return _resolve_choice(
+        variant, cfg, env_var=GATHER_ENV_VAR, choices=GATHER_VARIANTS,
+        cfg_attr="gather_variant", heuristic=heuristic,
+        arg_source="variant= argument")
+
+
+# -- ingest_update event-stream variant -------------------------------------
+
+def ingest_vmem_bytes(variant: str, events: int, event_tile: int) -> int:
+    """Estimated peak VMEM working set of one ingest_update variant.
+
+    Both kernels share the per-tile working set: the five sorted-stream
+    input words, the (event_tile, event_tile) segment mask the MXU
+    reduction contracts against, and the u16-half / output tiles.
+
+    block: the whole padded sorted stream is staged through VMEM blocks
+           by the Pallas pipeline (conservatively modeled as resident).
+    hbm:   two double-buffered event-tile scratch slots — independent of
+           E (the sorted stream stays in HBM), which is what lets one
+           shard ingest the 2^20-events-per-period blocks.
+    """
+    tile_ws = (event_tile * EVENT_WORDS * 4          # input tile words
+               + event_tile * event_tile * 4         # segment mask (f32)
+               + 3 * event_tile * 8 * 4)             # lo/hi halves + out
+    if variant == "block":
+        return events * EVENT_WORDS * 4 + tile_ws
+    if variant == "hbm":
+        return 2 * event_tile * EVENT_WORDS * 4 + tile_ws
+    raise ValueError(f"unknown ingest variant {variant!r}; "
+                     f"registered: {list(INGEST_VARIANTS)}")
+
+
+def resolve_ingest_variant(variant: Optional[str], cfg, events: int,
+                           event_tile: int) -> str:
+    """block while the sorted event stream fits the VMEM budget, hbm
+    beyond. Same precedence (and same fail-loud env validation) as the
+    gather variant: explicit ``variant=`` argument >
+    ``REPRO_INGEST_VARIANT`` > ``DFAConfig.ingest_variant`` > the budget
+    heuristic against ``DFAConfig.vmem_budget_mb``."""
+    def heuristic():
+        budget = int(getattr(cfg, "vmem_budget_mb", 16)
+                     ) * VMEM_BYTES_PER_MB
+        need = ingest_vmem_bytes("block", events, event_tile)
+        return "block" if need <= budget else "hbm"
+
+    return _resolve_choice(
+        variant, cfg, env_var=INGEST_ENV_VAR, choices=INGEST_VARIANTS,
+        cfg_attr="ingest_variant", heuristic=heuristic,
+        arg_source="variant= argument")
 
 
 def interpret_flag(backend: str) -> bool:
@@ -231,6 +293,8 @@ def _ensure_builtin() -> None:
     from repro.kernels.flow_moments import ref as fm_r
     from repro.kernels.gather_enrich import kernel as ge_k
     from repro.kernels.gather_enrich import ref as ge_r
+    from repro.kernels.ingest_update import kernel as iu_k
+    from repro.kernels.ingest_update import ref as iu_r
     from repro.kernels.ring_scatter import kernel as rs_k
     from repro.kernels.ring_scatter import ref as rs_r
 
@@ -256,6 +320,19 @@ def _ensure_builtin() -> None:
     register("gather_enrich_hbm", "pallas", ge_k.gather_enrich_hbm_pallas)
     register("gather_enrich_hbm", "interpret",
              ge_k.gather_enrich_hbm_pallas)
+
+    # reporter-side fused ingest (sort-once, segment-reduce); the ref
+    # backend keeps the pre-fusion multipass shape as the bitwise oracle
+    register("ingest_update", "ref", iu_r.ingest_update_ref)
+    register("ingest_update", "pallas", iu_k.ingest_update_pallas)
+    register("ingest_update", "interpret", iu_k.ingest_update_pallas)
+
+    # HBM-resident event-stream variant (same semantics, sorted stream
+    # stays in HBM; selected by resolve_ingest_variant)
+    register("ingest_update_hbm", "ref", iu_r.ingest_update_ref)
+    register("ingest_update_hbm", "pallas", iu_k.ingest_update_hbm_pallas)
+    register("ingest_update_hbm", "interpret",
+             iu_k.ingest_update_hbm_pallas)
 
     register("flash_attention", "ref", fa_r.flash_attention_ref)
     register("flash_attention", "pallas", fa_k.flash_attention_pallas)

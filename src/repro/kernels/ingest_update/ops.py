@@ -1,0 +1,76 @@
+"""Registry client for the fused ingest_update family (reporter stage 1).
+
+Besides backend resolution (ref / pallas / interpret) this wrapper owns
+the event-stream policy the kernels don't:
+
+* memory-strategy variant selection — ``dispatch.resolve_ingest_variant``
+  picks the block kernel while the sorted event stream fits the VMEM
+  budget and the HBM-resident tiled kernel beyond (2^20 events/shard),
+  with ``DFAConfig.ingest_variant`` / ``REPRO_INGEST_VARIANT`` overrides;
+* the ``event_tile`` clamp — tiles are capped at 256 (the u16-half
+  matmul exactness bound) and E is padded up to a tile multiple inside
+  ``stream_prep`` (pad rows ride the invalid-sentinel slot).
+
+``ingest_update_fused`` is the portable pure-jnp expression of the same
+sort-once algorithm (one argsort, per-column cumsum segment reduction,
+one scatter-add per slot run) — the fused path on backends without a
+Pallas lowering, the CPU side of the fused-vs-multipass benchmark, and a
+second independent implementation the bitwise equivalence suite pins
+against the kernels.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import logstar as LS
+from repro.kernels import dispatch
+from repro.kernels.ingest_update import kernel as K
+
+
+def ingest_update(regs, last_ts, keys, active, collisions, slots, ts, ps,
+                  five_tuple, valid, cfg, backend=None, variant=None):
+    """(F,·) reporter registers + one (E,) event block -> the five
+    updated register arrays, via the selected backend and event-stream
+    variant. Contract and bitwise semantics: ref.ingest_update_ref."""
+    b = dispatch.resolve_backend(backend, cfg)   # validate env even if E=0
+    E = slots.shape[0]
+    if E == 0:                 # all backends: a zero-length block no-ops
+        return regs, last_ts, keys, active, collisions
+    if b == "ref":
+        _, impl = dispatch.lookup("ingest_update", "ref", cfg)
+        return impl(regs, last_ts, keys, active, collisions, slots, ts,
+                    ps, five_tuple, valid, logstar_bits=cfg.logstar_bits)
+    tile = K.clamp_tile(cfg.event_tile, E)
+    v = dispatch.resolve_ingest_variant(variant, cfg, E, tile)
+    family = "ingest_update" if v == "block" else "ingest_update_hbm"
+    _, impl = dispatch.lookup(family, b, cfg)
+    return impl(regs, last_ts, keys, active, collisions, slots, ts, ps,
+                five_tuple, valid, logstar_bits=cfg.logstar_bits,
+                event_tile=tile, interpret=dispatch.interpret_flag(b))
+
+
+def ingest_update_fused(regs, last_ts, keys, active, collisions, slots,
+                        ts, ps, five_tuple, valid, cfg):
+    """Pure-jnp fused engine: sort once, form the seven delta columns on
+    the sorted stream, segment-reduce each by cumsum differences at run
+    boundaries, apply one scatter-add per slot run. Bitwise-identical to
+    the oracle (u32 cumsum wraps mod 2^32, so boundary differences are
+    exact segment sums) without ever stacking a per-event (E, 7) delta
+    array — only the per-RUN sums are materialized for the scatter."""
+    E = slots.shape[0]
+    if E == 0:
+        return regs, last_ts, keys, active, collisions
+    st = K.stream_prep(last_ts, keys, active, slots, ts, ps, five_tuple,
+                       valid, cfg.event_tile)
+    iat = jnp.where(st.first, jnp.uint32(0), st.s_ts - st.base_ts)
+    log_lut, exp_lut = (jnp.asarray(t)
+                        for t in LS._luts(cfg.logstar_bits))
+    sums = []
+    for c in K.delta_cols(iat, st.s_ps, cfg.logstar_bits, log_lut,
+                          exp_lut):
+        cs = jnp.cumsum(c)                     # u32: wraps mod 2^32
+        excl = cs - c                          # exclusive prefix
+        sums.append(cs - excl[st.head_idx])    # run-prefix sum at row r
+    run_sums = jnp.stack(sums, axis=-1)        # per-run totals at tails
+    return K.apply_updates(regs, last_ts, keys, active, collisions, st,
+                           run_sums, st.run_tail)

@@ -1,0 +1,34 @@
+"""Pure-jnp oracle for ingest_update: the pre-fusion multipass reporter
+ingest — admit, stable-sort IAT resolution, a materialized per-event
+(E, 7) delta array, and a per-event scatter-accumulate. Every fused
+implementation (jnp sort-once engine and both Pallas kernels) must match
+it BITWISE on regs / last_ts / keys / active / collisions: the math is
+all-integer (u32 mod 2^32), so there is no tolerance to hide behind."""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+
+from repro.core.reporter import (accumulate_ref, admit_arrays,
+                                 event_deltas, resolve_iat)
+
+
+def ingest_update_ref(regs: jax.Array, last_ts: jax.Array, keys: jax.Array,
+                      active: jax.Array, collisions: jax.Array,
+                      slots: jax.Array, ts: jax.Array, ps: jax.Array,
+                      five_tuple: jax.Array, valid: jax.Array, *,
+                      logstar_bits: int
+                      ) -> Tuple[jax.Array, jax.Array, jax.Array,
+                                 jax.Array, jax.Array]:
+    """regs (F,7) u32 | last_ts (F,) u32 | keys (F,5) u32 | active (F,)
+    bool | collisions () u32 | slots (E,) i32 | ts/ps (E,) u32 |
+    five_tuple (E,5) u32 | valid (E,) bool -> the five updated arrays."""
+    pre_active = active                  # admissions see themselves as new
+    keys, active, collisions = admit_arrays(keys, active, collisions,
+                                            slots, five_tuple, valid)
+    iat, first, last_ts = resolve_iat(slots, ts, valid, last_ts,
+                                      pre_active)
+    deltas = event_deltas(iat, ps, first, valid, logstar_bits)
+    regs = accumulate_ref(regs, slots, deltas, valid)
+    return regs, last_ts, keys, active, collisions

@@ -21,7 +21,8 @@ from repro.kernels.ring_scatter.ops import ring_scatter
 
 J = jnp.asarray
 FAMILIES = ("flow_moments", "ring_scatter", "derived_features",
-            "gather_enrich", "gather_enrich_hbm", "flash_attention")
+            "gather_enrich", "gather_enrich_hbm", "ingest_update",
+            "ingest_update_hbm", "flash_attention")
 
 
 # -- registry & selection -----------------------------------------------------

@@ -1,0 +1,348 @@
+"""Property-based equivalence suite for the ingest_update family.
+
+Four implementations must agree on every input — BITWISE, on all five
+reporter register arrays (regs / last_ts / keys / active / collisions):
+
+* ref          — multipass oracle (the pre-fusion reporter ingest shape)
+* fused jnp    — sort-once + per-column cumsum segment reduction
+* block kernel — Pallas, sorted stream BlockSpec-tiled (interpret mode)
+* hbm kernel   — Pallas, stream HBM-resident, scalar-prefetched run
+                 metadata, double-buffered tile DMA (interpret mode)
+
+The math is all-integer (u32 mod 2^32, wrap-safe by construction), so
+unlike the gather_enrich float suite there is no tolerance: any
+reduction-order or boundary-handling slip shows up as a hard mismatch.
+
+Covers: mid-block u32 timestamp wrap, colliding / duplicate slots,
+first-packet runs, all-invalid blocks, non-power-of-two E vs event_tile,
+the in-block duplicate-install corner, the power-of-two hash fast path,
+variant precedence/heuristic, and a randomized hypothesis sweep.
+"""
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_dfa_config
+from repro.core import reporter as R
+from repro.kernels import dispatch
+from repro.kernels.ingest_update.kernel import MAX_EVENT_TILE, clamp_tile
+from repro.kernels.ingest_update.ops import (ingest_update,
+                                             ingest_update_fused)
+
+J = jnp.asarray
+OUT_NAMES = ("regs", "last_ts", "keys", "active", "collisions")
+
+
+def make_state(rng, cfg, occupancy=0.3):
+    """ReporterState with ``occupancy`` of slots already holding flows."""
+    F = cfg.flows_per_shard
+    st = R.init_state(cfg)
+    occ = J(rng.random(F) < occupancy)
+    return st._replace(
+        regs=J(rng.integers(0, 2**32, size=(F, 7),
+                            dtype=np.uint64).astype(np.uint32)),
+        last_ts=J(rng.integers(0, 2**32, size=F,
+                               dtype=np.uint64).astype(np.uint32)),
+        keys=J(rng.integers(1, 2**31, size=(F, 5)).astype(np.uint32)),
+        active=occ)
+
+
+def make_events(rng, E, n_keys=8, invalid_frac=0.0, ts_base=0):
+    """Time-sorted event block over a pool of ``n_keys`` five-tuples.
+    ``ts_base`` near 2^32 produces mid-block u32 clock wraps."""
+    keys = rng.integers(1, 2**31, size=(max(1, n_keys), 5)
+                        ).astype(np.uint32)
+    fidx = rng.integers(0, max(1, n_keys), size=E)
+    ts = np.sort(rng.integers(0, 50_000, size=E)) + np.arange(E)
+    ts = (np.uint64(ts_base) + ts.astype(np.uint64)) % (1 << 32)
+    return {"ts": J(ts.astype(np.uint32)),
+            "size": J(rng.integers(40, 1500, size=E).astype(np.uint32)),
+            "five_tuple": J(keys[fidx]),
+            "valid": J(rng.random(E) >= invalid_frac)}
+
+
+def run_all_four(st, events, cfg):
+    """Run every implementation; assert bitwise equality; return ref."""
+    slots = R.hash_slot(events["five_tuple"], cfg.flows_per_shard)
+    args = (st.regs, st.last_ts, st.keys, st.active, st.collisions,
+            slots, events["ts"], events["size"], events["five_tuple"],
+            events["valid"])
+    ref = ingest_update(*args, cfg, backend="ref")
+    impls = {
+        "fused_jnp": ingest_update_fused(*args, cfg),
+        "block": ingest_update(*args, cfg, backend="interpret",
+                               variant="block"),
+        "hbm": ingest_update(*args, cfg, backend="interpret",
+                             variant="hbm"),
+    }
+    for impl, got in impls.items():
+        for name, a, b in zip(OUT_NAMES, ref, got):
+            np.testing.assert_array_equal(
+                np.asarray(a), np.asarray(b),
+                err_msg=f"{impl} diverges from ref on {name}")
+    return ref
+
+
+# -- deterministic edge cases -------------------------------------------------
+
+def test_clamp_tile():
+    assert clamp_tile(256, 1024) == 256      # exactness cap holds
+    assert clamp_tile(512, 1024) == MAX_EVENT_TILE
+    assert clamp_tile(64, 1024) == 64
+    assert clamp_tile(256, 100) == 100       # tile never exceeds E
+    assert clamp_tile(0, 8) == 1
+
+
+def test_first_packet_runs(rng):
+    """Empty table, many new flows: every run head must install + flag
+    first (IAT terms zero), every follower chains off its predecessor."""
+    cfg = get_dfa_config(reduced=True)
+    ev = make_events(rng, 96, n_keys=12)
+    ref = run_all_four(R.init_state(cfg), ev, cfg)
+    assert int(ref[4]) == 0                  # no residents -> no collisions
+    assert int(np.asarray(ref[3]).sum()) > 0
+
+
+def test_occupied_table_and_collisions(rng):
+    """Pre-populated slots with foreign keys: every valid event either
+    matches, installs, or counts one collision — identically everywhere."""
+    cfg = get_dfa_config(reduced=True)
+    ev = make_events(rng, 128, n_keys=10)
+    ref = run_all_four(make_state(rng, cfg, occupancy=0.6), ev, cfg)
+    assert int(ref[4]) > 0                   # foreign keys must collide
+
+
+def test_mid_block_timestamp_wrap(rng):
+    """u32 µs clock wraps INSIDE the block: arrival order (not numeric ts
+    order) must drive the IAT chain and the final last_ts register."""
+    cfg = get_dfa_config(reduced=True)
+    ev = make_events(rng, 64, n_keys=5, ts_base=(1 << 32) - 30_000)
+    ts = np.asarray(ev["ts"])
+    assert ts[0] > ts[-1]                    # really wrapped mid-block
+    run_all_four(R.init_state(cfg), ev, cfg)
+
+
+def test_heavy_slot_collisions(rng):
+    """A 16-slot table under 200 events: long duplicate-slot runs, many
+    same-block install races, colliding residents — the worst case for
+    segment boundary handling."""
+    cfg = dataclasses.replace(get_dfa_config(reduced=True),
+                              flows_per_shard=16)
+    ev = make_events(rng, 200, n_keys=40)
+    ref = run_all_four(make_state(rng, cfg, occupancy=0.5), ev, cfg)
+    assert int(ref[4]) > 0
+
+
+def test_all_invalid_block(rng):
+    """valid all-False: every register array must come back bitwise
+    untouched (the whole block rides the sentinel bucket)."""
+    cfg = get_dfa_config(reduced=True)
+    ev = make_events(rng, 64, invalid_frac=1.1)
+    assert not bool(np.asarray(ev["valid"]).any())
+    st = make_state(rng, cfg)
+    ref = run_all_four(st, ev, cfg)
+    for name, a, b in zip(OUT_NAMES, ref,
+                          (st.regs, st.last_ts, st.keys, st.active,
+                           st.collisions)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                      err_msg=name)
+
+
+def test_zero_length_block_noops_on_every_backend(rng):
+    """E == 0 must be a no-op on EVERY backend (the ref branch used to
+    crash in resolve_iat while the kernel branch returned unchanged)."""
+    cfg = get_dfa_config(reduced=True)
+    st = make_state(rng, cfg)
+    args = (st.regs, st.last_ts, st.keys, st.active, st.collisions,
+            jnp.zeros((0,), jnp.int32), jnp.zeros((0,), jnp.uint32),
+            jnp.zeros((0,), jnp.uint32), jnp.zeros((0, 5), jnp.uint32),
+            jnp.zeros((0,), bool))
+    for out in (ingest_update(*args, cfg, backend="ref"),
+                ingest_update(*args, cfg, backend="interpret"),
+                ingest_update_fused(*args, cfg)):
+        for name, a, b in zip(OUT_NAMES, out,
+                              (st.regs, st.last_ts, st.keys, st.active,
+                               st.collisions)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                          err_msg=name)
+
+
+@pytest.mark.parametrize("E,event_tile", [(1, 64), (7, 64), (100, 32),
+                                          (100, 7), (300, 256),
+                                          (256, 256)])
+def test_non_pow2_event_counts_vs_tile(rng, E, event_tile):
+    """E that doesn't divide event_tile: pad rows ride the sentinel slot
+    and must not perturb any register."""
+    cfg = dataclasses.replace(get_dfa_config(reduced=True),
+                              event_tile=event_tile)
+    ev = make_events(rng, E, n_keys=max(1, E // 4), invalid_frac=0.2)
+    run_all_four(make_state(rng, cfg), ev, cfg)
+
+
+def test_in_block_duplicate_install_corner(rng):
+    """Two NEW flows hashing to one empty slot in one block: the fused
+    paths must agree with the (fixed) first-come oracle on which key is
+    installed and that the loser counts as a collision."""
+    cfg = dataclasses.replace(get_dfa_config(reduced=True),
+                              flows_per_shard=8)
+    ev = make_events(rng, 48, n_keys=24)
+    ref = run_all_four(R.init_state(cfg), ev, cfg)
+    assert int(ref[4]) > 0                   # 24 keys over 8 slots race
+
+
+def test_reporter_ingest_routes_fused_bitwise(rng):
+    """reporter.ingest(backend='interpret') — the full state-level entry
+    the pipeline uses — must be bitwise-identical to the ref path."""
+    cfg = get_dfa_config(reduced=True)
+    ev = make_events(rng, 96, n_keys=9, invalid_frac=0.1)
+    st = make_state(rng, cfg, occupancy=0.4)
+    a = R.ingest(st, ev, cfg, backend="ref")
+    b = R.ingest(st, ev, cfg, backend="interpret")
+    for name in ("regs", "last_ts", "keys", "active", "collisions",
+                 "last_report", "seq"):
+        np.testing.assert_array_equal(np.asarray(getattr(a, name)),
+                                      np.asarray(getattr(b, name)),
+                                      err_msg=name)
+
+
+def test_hash_slot_pow2_mask_fast_path(rng):
+    """The mask fast path must be bit-identical to the generic modulo
+    for power-of-two tables (and the modulo path must still serve
+    non-power-of-two sizes)."""
+    tuples = J(rng.integers(0, 2**32, size=(512, 5),
+                            dtype=np.uint64).astype(np.uint32))
+
+    def hash_mod(five_tuple, n_slots):     # the pre-fast-path definition
+        h = jnp.full(five_tuple.shape[:-1], 0x811C9DC5, jnp.uint32)
+        for i in range(5):
+            h = (h ^ five_tuple[..., i].astype(jnp.uint32)) * jnp.uint32(
+                0x01000193)
+        return (h % jnp.uint32(n_slots)).astype(jnp.int32)
+
+    for n_slots in (1, 2, 256, 1 << 17):
+        np.testing.assert_array_equal(
+            np.asarray(R.hash_slot(tuples, n_slots)),
+            np.asarray(hash_mod(tuples, n_slots)), err_msg=str(n_slots))
+    got = np.asarray(R.hash_slot(tuples, 100))      # non-pow2: % path
+    assert got.min() >= 0 and got.max() < 100
+
+
+def test_streaming_drivers_bitwise_unchanged_under_fused(monkeypatch):
+    """Acceptance: run_periods AND run_periods_overlapped produce
+    bitwise-identical reporter state and metrics whether ingest runs the
+    multipass ref path or the fused kernels (REPRO_KERNEL_BACKEND=
+    interpret) — the same fixed-seed trace the T=4 golden pins."""
+    import jax
+
+    from repro.compat import make_mesh
+    from repro.core.pipeline import DFASystem
+    from repro.data import packets as PK
+
+    cfg = get_dfa_config(reduced=True)
+    system = DFASystem(cfg, make_mesh((1, 1), ("data", "model")))
+    events, nows = PK.period_batches(system.n_shards, 2, 128, n_flows=10,
+                                     flow_seed=3)
+    monkeypatch.delenv(dispatch.GATHER_ENV_VAR, raising=False)
+    monkeypatch.delenv(dispatch.INGEST_ENV_VAR, raising=False)
+
+    def run(backend, overlapped):
+        monkeypatch.setenv(dispatch.ENV_VAR, backend)
+        fn = (system.run_periods_overlapped if overlapped
+              else system.run_periods)
+        with system.mesh:
+            st, _, fid, em, met = jax.jit(fn)(system.init_state(),
+                                              events, nows)
+        return st.reporter, fid, em, met
+
+    for overlapped in (False, True):
+        rep_r, fid_r, em_r, met_r = run("ref", overlapped)
+        rep_i, fid_i, em_i, met_i = run("interpret", overlapped)
+        for name in ("regs", "last_ts", "keys", "active", "collisions"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(rep_r, name)),
+                np.asarray(getattr(rep_i, name)),
+                err_msg=f"overlapped={overlapped} {name}")
+        np.testing.assert_array_equal(np.asarray(fid_r),
+                                      np.asarray(fid_i))
+        np.testing.assert_array_equal(np.asarray(em_r), np.asarray(em_i))
+        for k in met_r:
+            np.testing.assert_array_equal(np.asarray(met_r[k]),
+                                          np.asarray(met_i[k]), err_msg=k)
+
+
+# -- variant resolution -------------------------------------------------------
+
+def test_ingest_variant_precedence(monkeypatch):
+    cfg = get_dfa_config(reduced=True)
+    monkeypatch.delenv(dispatch.INGEST_ENV_VAR, raising=False)
+    # auto on the reduced config: the sorted stream fits VMEM -> block
+    assert dispatch.resolve_ingest_variant(None, cfg, 128, 64) == "block"
+    # config field beats auto
+    cfg_h = dataclasses.replace(cfg, ingest_variant="hbm")
+    assert dispatch.resolve_ingest_variant(None, cfg_h, 128, 64) == "hbm"
+    # env beats config
+    monkeypatch.setenv(dispatch.INGEST_ENV_VAR, "block")
+    assert dispatch.resolve_ingest_variant(None, cfg_h, 128, 64) == "block"
+    # explicit argument beats env
+    assert dispatch.resolve_ingest_variant("hbm", cfg_h, 128, 64) == "hbm"
+    # malformed env raises even under an explicit argument
+    monkeypatch.setenv(dispatch.INGEST_ENV_VAR, "sram")
+    for explicit in (None, "auto", "block", "hbm"):
+        with pytest.raises(ValueError) as ei:
+            dispatch.resolve_ingest_variant(explicit, cfg, 128, 64)
+        assert dispatch.INGEST_ENV_VAR in str(ei.value)
+        assert "hbm" in str(ei.value)
+
+
+def test_ingest_variant_vmem_budget_heuristic(monkeypatch):
+    monkeypatch.delenv(dispatch.INGEST_ENV_VAR, raising=False)
+    cfg = get_dfa_config(reduced=True)
+    # a 2^10-event block fits any sane budget; 2^20 events (the scaling
+    # target) exceed 16 MB of staged stream -> hbm
+    assert dispatch.resolve_ingest_variant(None, cfg, 1 << 10,
+                                           256) == "block"
+    assert dispatch.resolve_ingest_variant(None, cfg, 1 << 20,
+                                           256) == "hbm"
+    # the hbm working set is E-independent
+    assert dispatch.ingest_vmem_bytes(
+        "hbm", 1 << 20, 256) == dispatch.ingest_vmem_bytes(
+        "hbm", 1 << 10, 256)
+    tiny = dataclasses.replace(cfg, vmem_budget_mb=0)
+    assert dispatch.resolve_ingest_variant(None, tiny, 128, 64) == "hbm"
+    with pytest.raises(ValueError):
+        dispatch.ingest_vmem_bytes("sram", 128, 64)
+
+
+# -- randomized sweep (hypothesis; deterministic tests above still run
+#    when hypothesis is absent) ----------------------------------------------
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:       # pragma: no cover - exercised on bare containers
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=12, deadline=None)
+    @given(
+        seed=st.integers(0, 2**31 - 1),
+        E=st.integers(1, 220),
+        F=st.sampled_from([8, 64, 256]),
+        event_tile=st.sampled_from([8, 32, 64, 256]),
+        n_keys=st.integers(1, 48),
+        invalid_frac=st.sampled_from([0.0, 0.3, 1.1]),
+        occupancy=st.sampled_from([0.0, 0.4, 1.0]),
+        ts_base=st.sampled_from([0, (1 << 32) - 40_000]),
+    )
+    def test_equivalence_randomized(seed, E, F, event_tile, n_keys,
+                                    invalid_frac, occupancy, ts_base):
+        cfg = dataclasses.replace(get_dfa_config(reduced=True),
+                                  flows_per_shard=F,
+                                  event_tile=event_tile)
+        rng = np.random.default_rng(seed)
+        ev = make_events(rng, E, n_keys=n_keys,
+                         invalid_frac=invalid_frac, ts_base=ts_base)
+        run_all_four(make_state(rng, cfg, occupancy=occupancy), ev, cfg)

@@ -220,6 +220,73 @@ def test_due_flows_zero_period_edge(rng):
     assert got == {int(s) for s in np.nonzero(np.asarray(st.active))[0]}
 
 
+def _colliding_keys(rng, cfg, want=2):
+    """Search random five-tuples for ``want`` distinct keys sharing one
+    hash slot (birthday-certain over a few hundred samples at F=256)."""
+    keys = rng.integers(1, 2**31, size=(2048, 5)).astype(np.uint32)
+    slots = np.asarray(R.hash_slot(jnp.asarray(keys),
+                                   cfg.flows_per_shard))
+    for s in np.unique(slots):
+        hit = np.nonzero(slots == s)[0]
+        if len(hit) >= want:
+            return int(s), [keys[i] for i in hit[:want]]
+    pytest.skip("no hash collision in sample")
+
+
+def test_in_block_duplicate_install_first_come_wins(rng):
+    """Regression (documented 'first-come key install'): two NEW flows
+    hashing to the same empty slot in one block used to race through a
+    duplicate-index ``.at[].set`` (last-write-wins, nondeterministic).
+    The first event in arrival order must install its key; the loser is
+    a collision and its stats are attributed to the resident flow."""
+    cfg = get_dfa_config(reduced=True)
+    slot, (key_a, key_b) = _colliding_keys(rng, cfg)
+
+    def block(first_key, second_key):
+        return {"ts": jnp.asarray([10, 20], jnp.uint32),
+                "size": jnp.asarray([100, 200], jnp.uint32),
+                "five_tuple": jnp.stack([jnp.asarray(first_key),
+                                         jnp.asarray(second_key)]),
+                "valid": jnp.ones(2, bool)}
+
+    st = R.ingest(R.init_state(cfg), block(key_a, key_b), cfg)
+    np.testing.assert_array_equal(np.asarray(st.keys[slot]), key_a)
+    assert int(st.collisions) == 1          # the loser, counted
+    assert bool(st.active[slot])
+    # both events still accumulate into the resident slot (count = 2)
+    assert int(st.regs[slot, R.COL_COUNT]) == 2
+    assert int(st.last_ts[slot]) == 20
+    # arrival order decides, not key value: reversed block installs B
+    st2 = R.ingest(R.init_state(cfg), block(key_b, key_a), cfg)
+    np.testing.assert_array_equal(np.asarray(st2.keys[slot]), key_b)
+    assert int(st2.collisions) == 1
+    # same key twice is a plain duplicate, never a collision
+    st3 = R.ingest(R.init_state(cfg), block(key_a, key_a), cfg)
+    assert int(st3.collisions) == 0
+    assert int(st3.regs[slot, R.COL_COUNT]) == 2
+
+
+def test_due_flows_capacity_at_and_beyond_table_size(rng):
+    """Regression: ``capacity > F`` used to crash (top_k over a smaller
+    axis). The clamp keeps the fixed-size (capacity,) SPMD contract with
+    pad rows masked out; ``capacity == F`` selects the whole table."""
+    cfg = get_dfa_config(reduced=True)
+    F = cfg.flows_per_shard
+    ev = make_events(rng, cfg, n_flows=6, E=48)
+    st = R.ingest(R.init_state(cfg),
+                  {k: jnp.asarray(v) for k, v in ev.items()}, cfg)
+    n_active = int(np.asarray(st.active).sum())
+    now = jnp.uint32(cfg.monitoring_period_us + 10_000)
+    for capacity in (F, F + 1, F + 177):
+        slots, mask = R.due_flows(st, now, cfg, capacity=capacity)
+        assert slots.shape == (capacity,) and mask.shape == (capacity,)
+        assert int(mask.sum()) == n_active
+        got = {int(s) for s, m in zip(np.asarray(slots),
+                                      np.asarray(mask)) if m}
+        assert got == {int(s) for s
+                       in np.nonzero(np.asarray(st.active))[0]}
+
+
 def test_collision_counting(rng):
     cfg = get_dfa_config(reduced=True)
     # two different keys forced into the same slot via crafted search
