@@ -12,6 +12,15 @@ strategies (interpret backend, full-block VMEM vs HBM-tiled DMA) so the
 bench-smoke artifact records what the Tofino-scale memory strategy costs
 inside the full pipeline, not just at kernel level (gather_scaling.py).
 
+Multi-pod rows: one fixed 4-port trace streams through the 2D
+(pod, shard) mesh fabric (flow_home="hash": per-port tables, hash homes,
+two-stage exchange). ``streaming_multipod_ports4`` (a (1,1)-pod mesh
+hosting all 4 ports) always runs and is the row the nightly
+regression-gate matches; ``streaming_multipod_pods{2,4}`` join when the
+host exposes enough devices — standalone, ``--pods N`` forces N host
+devices before jax initializes:
+``python benchmarks/streaming_periods.py --tiny --pods 4``.
+
 TPU projection: the per-period byte budget is identical to dfa_throughput;
 streaming changes the *dispatch* overhead, so the derived column reports
 host-side us/period for both drivers plus the scan and overlap speedups.
@@ -32,12 +41,32 @@ if __package__ in (None, ""):           # executed as a script: mirror
     sys.path.insert(0, _root)
     if "--tiny" in sys.argv:            # before benchmarks.common binds TINY
         os.environ["REPRO_BENCH_TINY"] = "1"
+    _n = 0                              # before jax initializes: force
+    for _i, _a in enumerate(sys.argv):  # both --pods N and --pods=N
+        try:
+            if _a == "--pods":
+                _n = int(sys.argv[_i + 1])
+            elif _a.startswith("--pods="):
+                _n = int(_a.split("=", 1)[1])
+        except (IndexError, ValueError):
+            _n = 0                      # argparse reports the usage error
+    _flags = os.environ.get("XLA_FLAGS", "")
+    if _n > 1 and "xla_force_host_platform_device_count" not in _flags:
+        os.environ["XLA_FLAGS"] = (
+            f"--xla_force_host_platform_device_count={_n} "
+            + _flags).strip()
+
+import jax
+import jax.numpy as jnp
 
 from benchmarks.common import TINY, csv, time_loop
 from repro.compat import make_mesh
 from repro.configs import get_dfa_config
+from repro.configs.dfa import REDUCED_MULTIPOD
 from repro.core.pipeline import DFASystem
 from repro.data import packets as PK
+from repro.data import scenarios as SC
+from repro.launch.mesh import make_dfa_mesh
 
 T = 4 if TINY else 16
 
@@ -113,6 +142,51 @@ def run():
             f"periods={T};events_per_s={T * E / t_v:.3e};"
             f"backend=interpret;variant={variant}")
 
+    run_pod_sweep()
+
+
+def _pod_row(name, pods, shards, total_ports, events_per_port):
+    """One (pods, shards) mesh streaming row over the same fixed port
+    set: the us/period delta against the single-pod row IS the cross-pod
+    routing overhead the nightly regression gate watches."""
+    ndev = pods * shards
+    mesh = make_dfa_mesh(pods, shards, devices=jax.devices()[:ndev])
+    cfg = dataclasses.replace(
+        REDUCED_MULTIPOD, pods=pods,
+        ports_per_pod=total_ports // pods,
+        reporter_slots=128,
+        flows_per_shard=512 // ndev,
+        port_report_capacity=32)
+    system = DFASystem(cfg, mesh)
+    ev, nows = SC.build("cross_pod_mix", total_ports, events_per_port, T)
+    events = {k: jnp.asarray(v) for k, v in ev.items()}
+    t = time_loop(system.jit_stream(donate=True),
+                  system.init_sharded_state(), events, jnp.asarray(nows))
+    E_tot = total_ports * events_per_port
+    csv(name, t / T * 1e6,
+        f"periods={T};pods={pods};shards={shards};ports={total_ports};"
+        f"events_per_s={T * E_tot / t:.3e};flow_home=hash")
+    return t
+
+
+def run_pod_sweep():
+    """Multi-pod (pod, shard) mesh rows over one fixed 4-port traffic
+    trace. The 1-device (1,1)-pod mesh row always runs (it is the row CI
+    bench-smoke emits and the regression gate matches night over night);
+    wider meshes join the sweep when the host exposes enough devices
+    (standalone: ``--pods N`` forces N host devices before jax init)."""
+    total_ports, events_per_port = 4, 64 if TINY else 256
+    t1 = _pod_row("streaming_multipod_ports4", 1, 1, total_ports,
+                  events_per_port)
+    for pods in (2, 4):
+        if jax.device_count() < pods:
+            continue
+        tp = _pod_row(f"streaming_multipod_pods{pods}", pods, 1,
+                      total_ports, events_per_port)
+        csv(f"streaming_crosspod_overhead_pods{pods}", 0.0,
+            f"x={tp / t1:.2f};vs=streaming_multipod_ports4;"
+            "same_port_set=true")
+
 
 def _main():
     import argparse
@@ -122,6 +196,9 @@ def _main():
                     help="bench-smoke mode (already applied pre-import)")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write rows as a JSON artifact")
+    ap.add_argument("--pods", type=int, default=None, metavar="N",
+                    help="force N host devices (applied pre-import) so "
+                         "the pod sweep includes real (N, 1) meshes")
     args = ap.parse_args()
     from benchmarks import common
     print("name,us_per_call,derived")

@@ -193,6 +193,41 @@ class DFAConfig:
     inference_head: str = "none"
     inference_classes: int = 8         # verdict classes the head emits
     inference_hidden: int = 64         # mlp hidden width (linear ignores)
+    # -- multi-pod (pod, shard) mesh streaming ---------------------------
+    # how a flow's home collector ring is chosen:
+    #   "ingest" — legacy 1D scheme: flow ids are minted from the ingest
+    #              shard's range (shard * flows_per_shard + slot), so every
+    #              report's home IS its ingest shard (the all_to_all is an
+    #              identity permutation);
+    #   "hash"   — mesh-shape-independent scheme: flow id = FNV-1a hash of
+    #              the stored five-tuple into the GLOBAL ring keyspace
+    #              (n_devices * flows_per_shard), home device = range shard
+    #              of that id (pod-major), delivery is two-stage
+    #              (intra-pod all_to_all over shard, then a cross-pod
+    #              exchange over pod). A flow observed on ANY port lands in
+    #              exactly one ring, which is what makes the (pod, shard)
+    #              factorization of the mesh invisible in the merged state.
+    flow_home: str = "ingest"
+    # pod axis size ``launch.mesh.make_dfa_mesh`` builds the mesh with
+    # (the mesh, not this field, is authoritative inside DFASystem)
+    pods: int = 1
+    # reporter ports per pod; 0 = one port per shard device (legacy).
+    # total_ports = mesh_pods * ports_per_pod must be a multiple of the
+    # device count — each device hosts total_ports / n_devices independent
+    # per-port Marina tables, so the merged reporter state depends only on
+    # the port set, never on how ports pack onto devices.
+    ports_per_pod: int = 0
+    # per-PORT Marina classification-table size; 0 = flows_per_shard.
+    # Splitting this from flows_per_shard lets the collector ring space
+    # (flows_per_shard per device) shrink as the mesh grows while every
+    # port's table — and therefore its report stream — stays fixed.
+    reporter_slots: int = 0
+    # per-PORT due-report capacity; 0 = report_capacity // total_ports
+    port_report_capacity: int = 0
+
+    def reporter_table_slots(self) -> int:
+        """Per-port Marina table size (falls back to flows_per_shard)."""
+        return self.reporter_slots or self.flows_per_shard
 
     def ring_region_bytes(self) -> int:
         """Shard-local collector ring region footprint (entries+validity)."""

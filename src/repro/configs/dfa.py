@@ -50,3 +50,20 @@ REDUCED_OVERLAP = dataclasses.replace(REDUCED, overlap_periods=True)
 REDUCED_INFER = dataclasses.replace(REDUCED, overlap_periods=True,
                                     inference_head="linear",
                                     inference_classes=8)
+
+# REDUCED scaled to the 2D (pod, shard) mesh: flow homes are hashed into
+# the global ring keyspace (flow_home="hash"), each pod owns a disjoint
+# set of reporter ports (2 per pod here), and report delivery is the
+# two-stage intra-pod/cross-pod exchange. Pair with
+# launch.mesh.make_dfa_mesh(pods=2, ...); reporter tables are pinned to
+# 128 slots per port so the merged reporter state is independent of how
+# the mesh factors the same port set.
+REDUCED_MULTIPOD = dataclasses.replace(
+    REDUCED,
+    flow_home="hash",
+    pods=2,
+    ports_per_pod=2,
+    reporter_slots=128,
+    flows_per_shard=128,
+    port_report_capacity=32,
+)

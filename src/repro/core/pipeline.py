@@ -45,9 +45,22 @@ Per-period ``metrics`` are all deltas: ``collisions`` / ``bad_checksum`` /
 ``seq_anomalies`` report what THIS period added (the cumulative counters
 stay in the state), matching ``reports_sent`` / ``reports_recv`` /
 ``bucket_drops`` which were always per-period.
+
+Multi-pod (2D mesh) streaming: with ``cfg.flow_home == "hash"`` the same
+drivers run on a ``(pod, shard)`` mesh (``launch.mesh.make_dfa_mesh``).
+Each pod owns a disjoint set of reporter PORTS (independent per-port
+Marina tables, ``cfg.ports_per_pod``), a flow's home ring is the range
+shard of its hashed key in the GLOBAL keyspace (``translator
+.home_flow_ids``), and delivery is two-stage: intra-pod ``all_to_all``
+over the shard fabric, then a cross-pod exchange over the pod axis for
+flows whose home pod differs from their ingest pod. The home translator
+canonically re-orders arrivals, which makes the merged end state bitwise
+independent of how the same port set factors into pods — the property
+``tests/test_multipod_equiv.py`` pins scenario by scenario.
 """
 from __future__ import annotations
 
+import dataclasses
 import math
 from typing import Any, Dict, NamedTuple, Optional, Tuple
 
@@ -98,6 +111,7 @@ class DFASystem:
         self.mesh = mesh
         self.axes = tuple(mesh.axis_names)
         self.n_shards = int(math.prod(mesh.devices.shape))
+        self._derive_topology()
         self.infer_params: Optional[Tree] = None
         if infer_fn is None and cfg.inference_head != "none":
             from repro.models.registry import get_flow_head  # lazy: heavy
@@ -106,21 +120,106 @@ class DFASystem:
             infer_fn = lambda feats: head(params, feats)  # noqa: E731
         self.infer_fn = infer_fn
 
+    def _derive_topology(self) -> None:
+        """(pod, shard) mesh factorization + port placement.
+
+        The MESH is authoritative: ``pods`` is the size of the axis named
+        "pod" when present (1 otherwise) and the remaining axes form the
+        intra-pod shard fabric. ``cfg.flow_home`` picks the routing
+        scheme; "hash" additionally activates per-port reporter tables
+        (``cfg.ports_per_pod`` ports per pod, hosted
+        ``total_ports / n_devices`` per device in pod-major order, so pods
+        own disjoint contiguous port ranges)."""
+        cfg = self.cfg
+        sizes = dict(zip(self.axes, self.mesh.devices.shape))
+        self.pod_axis = "pod" if "pod" in self.axes else None
+        if self.pod_axis and self.axes[0] != "pod":
+            raise ValueError(
+                f"the 'pod' axis must be the leading mesh axis (pod-major "
+                f"device order); got axes {self.axes}")
+        self.shard_axes = tuple(a for a in self.axes if a != "pod")
+        self.mesh_pods = int(sizes.get("pod", 1))
+        self.shards_per_pod = self.n_shards // self.mesh_pods
+        self.total_flows = self.n_shards * cfg.flows_per_shard
+        if cfg.flow_home not in ("ingest", "hash"):
+            raise ValueError(
+                f"flow_home must be 'ingest' or 'hash', got "
+                f"{cfg.flow_home!r}")
+        self.multipod = cfg.flow_home == "hash"
+        if not self.multipod:
+            if self.mesh_pods > 1:
+                raise ValueError(
+                    "a multi-pod mesh needs flow_home='hash': the legacy "
+                    "'ingest' scheme homes every flow on its ingest shard "
+                    "and would never exercise the cross-pod exchange")
+            if cfg.ports_per_pod and cfg.ports_per_pod != self.n_shards:
+                raise ValueError(
+                    "flow_home='ingest' supports exactly one port per "
+                    f"shard ({self.n_shards}), got ports_per_pod="
+                    f"{cfg.ports_per_pod}")
+            if cfg.reporter_slots and (cfg.reporter_slots
+                                       != cfg.flows_per_shard):
+                raise ValueError(
+                    "flow_home='ingest' mints flow ids from the shard "
+                    "range, so reporter_slots must equal flows_per_shard")
+            self.total_ports = self.n_shards
+            self.ports_per_device = 1
+            self.rep_cfg = cfg
+            self.port_capacity = 0
+            return
+        if cfg.pods != self.mesh_pods:
+            raise ValueError(
+                f"cfg.pods={cfg.pods} does not match the mesh's pod "
+                f"axis ({self.mesh_pods}): total_ports = mesh_pods x "
+                "ports_per_pod, so a silent mismatch would change the "
+                "port set (and every per-port table) out from under the "
+                "config")
+        total_ports = (self.mesh_pods * cfg.ports_per_pod
+                       if cfg.ports_per_pod else self.n_shards)
+        if total_ports % self.n_shards:
+            raise ValueError(
+                f"total ports ({self.mesh_pods} pods x "
+                f"{cfg.ports_per_pod}/pod = {total_ports}) must be a "
+                f"multiple of the device count {self.n_shards}")
+        if total_ports > COLL.N_REPORTERS:
+            # the wire format's reporter id is 8-bit (paper Fig 2); with
+            # more ports than ids, two ports alias one reporter id and
+            # the home-side canonical (flow, reporter, seq) order — and
+            # with it the pod-count-invariance contract — stops being
+            # deterministic. Fail loud instead of silently degrading;
+            # >256 ports needs a wire-format widening first (ROADMAP).
+            raise ValueError(
+                f"total ports {total_ports} exceeds the 8-bit reporter "
+                f"id space ({COLL.N_REPORTERS}); canonical report "
+                "ordering requires a unique (flow, reporter) pair per "
+                "period")
+        self.total_ports = total_ports
+        self.ports_per_device = total_ports // self.n_shards
+        self.rep_cfg = (dataclasses.replace(
+            cfg, flows_per_shard=cfg.reporter_table_slots())
+            if cfg.reporter_slots else cfg)
+        self.port_capacity = cfg.port_report_capacity or max(
+            1, cfg.report_capacity // total_ports)
+
     # -- state ------------------------------------------------------------
     def init_state(self) -> DFAState:
-        """Global state arrays (leading dim = n_shards * per-shard size)."""
-        n = self.n_shards
+        """Global state arrays. Translator/collector tables have leading
+        dim = n_shards * per-shard size; the reporter side tiles one
+        per-PORT table per port (total_ports == n_shards with one port per
+        device, i.e. always in legacy mode)."""
 
-        def rep_tile(make):
-            st = make(self.cfg)
+        def tile(st, count):
             return jax.tree.map(
-                lambda a: jnp.tile(a[None], (n,) + (1,) * a.ndim).reshape(
-                    (n * a.shape[0],) + a.shape[1:]) if a.ndim >= 1 else
-                jnp.tile(a[None], (n,)), st)
+                lambda a: jnp.tile(a[None], (count,) + (1,) * a.ndim
+                                   ).reshape((count * a.shape[0],)
+                                             + a.shape[1:])
+                if a.ndim >= 1 else jnp.tile(a[None], (count,)), st)
 
-        return DFAState(rep_tile(REP.init_state),
-                        rep_tile(TRANS.init_state),
-                        rep_tile(COLL.init_state))
+        n = self.n_shards
+        return DFAState(tile(REP.init_state(self.rep_cfg),
+                             self.total_ports),
+                        tile(TRANS.init_state(self.cfg), n),
+                        tile(COLL.init_state(self.cfg), n))
 
     def state_specs(self) -> DFAState:
         """PartitionSpecs: every leading dim sharded over the whole mesh."""
@@ -162,7 +261,13 @@ class DFASystem:
         or a period later), ``metrics`` are all PER-PERIOD deltas — the
         cumulative collision/checksum/sequence counters live in the state;
         here each period reports only what it added.
+
+        With ``cfg.flow_home == "hash"`` the body is the 2D (pod, shard)
+        mesh variant: per-port reporter tables, hash-home flow ids, and
+        the two-stage intra-pod/cross-pod exchange.
         """
+        if self.multipod:
+            return self._ingest_half_mesh2d(state, events, now)
         cfg = self.cfg
         n = self.n_shards
         cap_out = max(1, cfg.report_capacity // n)
@@ -228,6 +333,187 @@ class DFASystem:
         specs = self.state_specs()
         ev_specs = (P(ax), P(ax), P(ax, None), P(ax))
         out_state_specs = (specs.reporter, specs.translator, specs.collector)
+        fn = shard_map(
+            local, mesh=self.mesh,
+            in_specs=(specs.reporter, specs.translator, specs.collector)
+            + ev_specs + (P(),),
+            out_specs=out_state_specs
+            + (P(ax), P(ax), P(ax),
+               {k: P() for k in self._METRIC_KEYS}),
+            check=False)
+        rep_st, tr_st, coll_st, local_flow, flow_id, rmask, metrics = fn(
+            state.reporter, state.translator, state.collector,
+            events["ts"], events["size"], events["five_tuple"],
+            events["valid"], now)
+        return (DFAState(rep_st, tr_st, coll_st),
+                RoutedBatch(local_flow, flow_id, rmask), metrics)
+
+    def _ingest_half_mesh2d(self, state: DFAState,
+                            events: Dict[str, jax.Array], now: jax.Array
+                            ) -> Tuple[DFAState, RoutedBatch,
+                                       Dict[str, jax.Array]]:
+        """The 2D (pod, shard) mesh ingest half (``flow_home == "hash"``).
+
+        Per device (pod p, shard s):
+
+          1. each hosted reporter PORT ingests its own event slice into
+             its own Marina table (ports_per_device independent tables —
+             the merged reporter state depends only on the port set, not
+             on the mesh factorization);
+          2. due flows per port -> DTA reports whose flow id is the
+             HASH-HOME global id (translator.home_flow_ids of the stored
+             key), reporter id = global port index;
+          3. stage 1: bucket by home SHARD, all_to_all over the intra-pod
+             shard fabric (reports now sit in their home pod-column);
+          4. stage 2: bucket by home POD, exchange over the pod axis —
+             only flows whose home pod differs from the ingest pod
+             actually cross pods;
+          5. the home translator canonically re-orders the received batch
+             by (flow, reporter, seq) — making history-index assignment
+             and ring placement independent of the exchange interleaving
+             — then computes addresses and places payloads as in the 1D
+             path.
+
+        Stage capacities are sized to the worst case (every report to one
+        bucket), so ``bucket_drops`` is structurally zero here; the
+        per-stage drop accounting still feeds the metric so capacity
+        experiments (smaller buckets = DTA's lossy trade) surface
+        immediately.
+        """
+        cfg = self.cfg
+        ax = self.axes
+        P_l = self.ports_per_device
+        Rs = self.rep_cfg.flows_per_shard       # per-port table slots
+        S = self.shards_per_pod
+        pods = self.mesh_pods
+        R_p = self.port_capacity
+        cap1 = max(1, P_l * R_p)                # stage-1 bucket capacity
+        cap2 = S * cap1                         # stage-2 bucket capacity
+        fps = cfg.flows_per_shard               # rings per device
+        G = self.total_flows
+
+        def local(rep_st, tr_st, coll_st, ev_ts, ev_sz, ev_tu, ev_va,
+                  now_):
+            if self.pod_axis is not None:
+                pod = jax.lax.axis_index(self.pod_axis)
+            else:
+                pod = jnp.zeros((), jnp.int32)
+            sp = jnp.zeros((), jnp.int32)
+            for a in self.shard_axes:
+                sp = sp * axis_size(a) + jax.lax.axis_index(a)
+            dev = pod * S + sp
+            flow_base = dev * fps
+            # cumulative counters BEFORE this period (for metric deltas)
+            collisions0 = jnp.sum(rep_st.collisions)
+            bad_csum0 = jnp.sum(coll_st.bad_checksum)
+            seq_anom0 = jnp.sum(coll_st.seq_anomalies)
+            # per-port views of this device's reporter slice
+            regs = rep_st.regs.reshape(P_l, Rs, REP.N_REG)
+            last_ts = rep_st.last_ts.reshape(P_l, Rs)
+            last_report = rep_st.last_report.reshape(P_l, Rs)
+            keys = rep_st.keys.reshape(P_l, Rs, 5)
+            active = rep_st.active.reshape(P_l, Rs)
+            if ev_ts.shape[0] % P_l:
+                raise ValueError(
+                    f"per-device event count {ev_ts.shape[0]} must "
+                    f"divide across {P_l} hosted ports — a truncated "
+                    "split would silently drop trailing events and "
+                    "shift every port's slice off the port-major trace "
+                    "layout")
+            E_p = ev_ts.shape[0] // P_l
+            # explicit unrolled loop rather than a vmap over the port
+            # axis: the ingest path can resolve to the scalar-prefetch
+            # HBM pallas variant, which has no batching rule, and P_l is
+            # small (total_ports/n_devices — bounded by the 8-bit
+            # reporter id space / mesh size, single digits in practice)
+            sts, reports_l, masks_l = [], [], []
+            for p in range(P_l):
+                pst = REP.ReporterState(
+                    regs[p], last_ts[p], last_report[p], keys[p],
+                    active[p], rep_st.seq[p], rep_st.collisions[p])
+                sl = slice(p * E_p, (p + 1) * E_p)
+                pst = REP.ingest(pst, {"ts": ev_ts[sl], "size": ev_sz[sl],
+                                       "five_tuple": ev_tu[sl],
+                                       "valid": ev_va[sl]}, self.rep_cfg)
+                slots, mask = REP.due_flows(pst, now_, self.rep_cfg, R_p)
+                # global port id IS the reporter identity (mod the 8-bit
+                # wire field) — stable across mesh factorizations
+                gid = dev * P_l + p
+                rid = (gid % COLL.N_REPORTERS).astype(jnp.uint32)
+                fids = TRANS.home_flow_ids(pst.keys[slots], G)
+                pst, reports = REP.make_reports(
+                    pst, slots, mask, now_, rid, 0, self.rep_cfg,
+                    flow_ids=fids)
+                sts.append(pst)
+                reports_l.append(reports)
+                masks_l.append(mask)
+            rep_st = REP.ReporterState(
+                regs=jnp.stack([s.regs for s in sts]).reshape(
+                    P_l * Rs, REP.N_REG),
+                last_ts=jnp.stack([s.last_ts for s in sts]).reshape(
+                    P_l * Rs),
+                last_report=jnp.stack(
+                    [s.last_report for s in sts]).reshape(P_l * Rs),
+                keys=jnp.stack([s.keys for s in sts]).reshape(
+                    P_l * Rs, 5),
+                active=jnp.stack([s.active for s in sts]).reshape(
+                    P_l * Rs),
+                seq=jnp.stack([s.seq for s in sts]),
+                collisions=jnp.stack([s.collisions for s in sts]))
+            reports = jnp.concatenate(reports_l)      # (P_l*R_p, 14)
+            mask = jnp.concatenate(masks_l)
+            sent = jnp.sum(mask)
+            # stage 1: intra-pod all_to_all by home shard
+            _, hshard, _ = TRANS.home_coords(reports[:, 0], fps, S,
+                                             self.n_shards)
+            b1, m1 = TRANS.route_by_dest(reports, mask, hshard, S, cap1)
+            drop1 = sent - jnp.sum(m1)
+            if self.shard_axes:
+                b1 = jax.lax.all_to_all(b1, self.shard_axes, 0, 0,
+                                        tiled=True)
+                m1 = jax.lax.all_to_all(
+                    m1.astype(jnp.uint32), self.shard_axes, 0, 0,
+                    tiled=True).astype(bool)
+            r1 = b1.reshape(S * cap1, PROTO.REPORT_WORDS)
+            m1 = m1.reshape(S * cap1)
+            # stage 2: cross-pod exchange by home pod
+            hpod, _, _ = TRANS.home_coords(r1[:, 0], fps, S,
+                                           self.n_shards)
+            b2, m2 = TRANS.route_by_dest(r1, m1, hpod, pods, cap2)
+            drop2 = jnp.sum(m1) - jnp.sum(m2)
+            if self.pod_axis is not None:
+                b2 = jax.lax.all_to_all(b2, self.pod_axis, 0, 0,
+                                        tiled=True)
+                m2 = jax.lax.all_to_all(
+                    m2.astype(jnp.uint32), self.pod_axis, 0, 0,
+                    tiled=True).astype(bool)
+            routed = b2.reshape(pods * cap2, PROTO.REPORT_WORDS)
+            rmask = m2.reshape(pods * cap2)
+            # home-side canonical arrival order (mesh-shape independent)
+            routed, rmask = TRANS.canonical_order(routed, rmask)
+            # owner-side translator + ring placement, as in the 1D path
+            tr_st, payloads, coords = TRANS.translate(
+                tr_st, routed, rmask, flow_base, cfg)
+            coll_st = COLL.ingest(coll_st, payloads, rmask, flow_base,
+                                  cfg)
+            metrics = {
+                "reports_sent": jax.lax.psum(sent, ax),
+                "reports_recv": jax.lax.psum(jnp.sum(rmask), ax),
+                "bucket_drops": jax.lax.psum(drop1 + drop2, ax),
+                "collisions": jax.lax.psum(
+                    jnp.sum(rep_st.collisions) - collisions0, ax),
+                "bad_checksum": jax.lax.psum(
+                    jnp.sum(coll_st.bad_checksum) - bad_csum0, ax),
+                "seq_anomalies": jax.lax.psum(
+                    jnp.sum(coll_st.seq_anomalies) - seq_anom0, ax),
+            }
+            return (rep_st, tr_st, coll_st, coords["local_flow"],
+                    routed[:, 0], rmask, metrics)
+
+        specs = self.state_specs()
+        ev_specs = (P(ax), P(ax), P(ax, None), P(ax))
+        out_state_specs = (specs.reporter, specs.translator,
+                           specs.collector)
         fn = shard_map(
             local, mesh=self.mesh,
             in_specs=(specs.reporter, specs.translator, specs.collector)
@@ -383,9 +669,13 @@ class DFASystem:
         from repro.kernels.ingest_update.kernel import clamp_tile
         cfg = self.cfg
         backend = dispatch.resolve_backend(None, cfg)
-        # mirror dfa_step: each shard enriches n_shards * cap_out routed
-        # rows, and ops.gather_enrich tiles that R by flow_tile
-        R = self.n_shards * max(1, cfg.report_capacity // self.n_shards)
+        # mirror the ingest half: each shard enriches R routed rows, and
+        # ops.gather_enrich tiles that R by flow_tile
+        if self.multipod:
+            R = self.total_ports * self.port_capacity
+        else:
+            R = self.n_shards * max(1, cfg.report_capacity
+                                    // self.n_shards)
         tile = min(cfg.flow_tile, R)
         variant = ("ref" if backend == "ref" else
                    dispatch.resolve_gather_variant(
@@ -412,6 +702,13 @@ class DFASystem:
                 cfg.flows_per_shard, cfg.history, tile, cfg.derived_dim,
                 words=cfg.payload_words),
             "n_shards": self.n_shards,
+            "flow_home": cfg.flow_home,
+            "pods": self.mesh_pods,
+            "shards_per_pod": self.shards_per_pod,
+            "total_ports": self.total_ports,
+            "ports_per_device": self.ports_per_device,
+            "reporter_slots": self.rep_cfg.flows_per_shard,
+            "port_report_capacity": self.port_capacity,
             "overlap_periods": cfg.overlap_periods,
             "inference_head": ("custom" if (self.infer_fn is not None
                                             and self.infer_params is None)

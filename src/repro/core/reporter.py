@@ -276,16 +276,25 @@ def due_flows(state: ReporterState, now: jax.Array, cfg: DFAConfig,
 
 def make_reports(state: ReporterState, slots: jax.Array, mask: jax.Array,
                  now: jax.Array, reporter_id: int, shard_flow_base,
-                 cfg: DFAConfig) -> Tuple[ReporterState, jax.Array]:
+                 cfg: DFAConfig, flow_ids=None
+                 ) -> Tuple[ReporterState, jax.Array]:
     """Clone-and-truncate analogue: emit DTA reports for the given slots.
 
     Returns (state', reports (capacity, REPORT_WORDS) u32); masked-out rows
     are zero. Sequence numbers increment per report (sec VI-B).
+
+    ``flow_ids`` (optional, (R,) u32) overrides the legacy range identity
+    ``shard_flow_base + slot`` — the multi-pod mesh passes the hash-home
+    global ids (translator.home_flow_ids of each slot's stored key) so a
+    flow's reports name the same home ring from every ingest port.
     """
     R = slots.shape[0]
     stats = state.regs[slots]                     # (R, 7)
     tuples = state.keys[slots]
-    flow_ids = (shard_flow_base + slots).astype(jnp.uint32)
+    if flow_ids is None:
+        flow_ids = (shard_flow_base + slots).astype(jnp.uint32)
+    else:
+        flow_ids = flow_ids.astype(jnp.uint32)
     seqs = state.seq + jnp.cumsum(mask.astype(jnp.uint32)) - 1
     reports = PROTO.pack_dta_report(
         flow_ids, jnp.full((R,), reporter_id, jnp.uint32),

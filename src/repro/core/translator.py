@@ -81,32 +81,87 @@ def translate(state: TranslatorState, reports: jax.Array, mask: jax.Array,
                             "mask": mask}
 
 
+def route_by_dest(reports: jax.Array, mask: jax.Array, dest: jax.Array,
+                  n_buckets: int, capacity_out: int
+                  ) -> Tuple[jax.Array, jax.Array]:
+    """Bucket reports by a caller-computed destination index for a
+    fixed-capacity exchange. reports: (R, W) u32, dest: (R,) i32 in
+    [0, n_buckets) -> ((n_buckets, capacity_out, W), bucket mask).
+
+    Masked-out rows never enter a bucket (padding cannot leak across an
+    exchange stage); overflowing a destination bucket drops the report
+    (counted by caller via the returned mask sums) — the lossy-telemetry
+    trade DTA makes too.
+    """
+    R, W = reports.shape
+    dest = jnp.where(mask, jnp.clip(dest, 0, n_buckets - 1), n_buckets)
+    order = jnp.argsort(dest, stable=True)
+    d_sorted = dest[order]
+    start = jnp.searchsorted(d_sorted, jnp.arange(n_buckets), side="left")
+    rank = jnp.arange(R) - start[jnp.clip(d_sorted, 0, n_buckets - 1)]
+    ok = (d_sorted < n_buckets) & (rank < capacity_out)
+    slot = jnp.where(ok, d_sorted * capacity_out + rank,
+                     n_buckets * capacity_out)
+    out = jnp.zeros((n_buckets * capacity_out + 1, W), jnp.uint32)
+    out = out.at[slot].set(reports[order], mode="drop")
+    out_mask = jnp.zeros((n_buckets * capacity_out + 1,), bool
+                         ).at[slot].set(ok, mode="drop")
+    return (out[:-1].reshape(n_buckets, capacity_out, W),
+            out_mask[:-1].reshape(n_buckets, capacity_out))
+
+
 def route_reports(reports: jax.Array, mask: jax.Array, n_shards: int,
                   flows_per_shard: int, capacity_out: int
                   ) -> Tuple[jax.Array, jax.Array]:
-    """Bucket reports by owning collector shard for a fixed-capacity
-    all_to_all. reports: (R, W) u32 -> (n_shards, capacity_out, W).
-
-    Overflowing a destination bucket drops the report (counted by caller
-    via the returned mask sums) — the lossy-telemetry trade DTA makes too.
-    """
-    R, W = reports.shape
+    """Bucket reports by owning collector shard (legacy 1D range scheme)
+    for a fixed-capacity all_to_all: dest = flow_id // flows_per_shard."""
     flow_id = reports[:, 0].astype(jnp.int32)
     dest = jnp.clip(flow_id // flows_per_shard, 0, n_shards - 1)
-    dest = jnp.where(mask, dest, n_shards)
-    order = jnp.argsort(dest, stable=True)
-    d_sorted = dest[order]
-    start = jnp.searchsorted(d_sorted, jnp.arange(n_shards), side="left")
-    rank = jnp.arange(R) - start[jnp.clip(d_sorted, 0, n_shards - 1)]
-    ok = (d_sorted < n_shards) & (rank < capacity_out)
-    slot = jnp.where(ok, d_sorted * capacity_out + rank,
-                     n_shards * capacity_out)
-    out = jnp.zeros((n_shards * capacity_out + 1, W), jnp.uint32)
-    out = out.at[slot].set(reports[order], mode="drop")
-    out_mask = jnp.zeros((n_shards * capacity_out + 1,), bool
-                         ).at[slot].set(ok, mode="drop")
-    return (out[:-1].reshape(n_shards, capacity_out, W),
-            out_mask[:-1].reshape(n_shards, capacity_out))
+    return route_by_dest(reports, mask, dest, n_shards, capacity_out)
+
+
+def home_flow_ids(keys: jax.Array, total_flows: int) -> jax.Array:
+    """Mesh-shape-independent flow identity: FNV-1a hash of the stored
+    five-tuple into the GLOBAL ring keyspace [0, total_flows).
+
+    A flow observed on any port/pod maps to the same global id, so it has
+    exactly one home ring regardless of where it was ingested."""
+    from repro.core.reporter import hash_slot
+    return hash_slot(keys, total_flows).astype(jnp.uint32)
+
+
+def home_coords(flow_id: jax.Array, flows_per_shard: int,
+                shards_per_pod: int, n_devices: int
+                ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Global flow id -> (home_pod, home_shard, home_device) under the
+    pod-major range sharding of the global keyspace: device
+    d = pod * shards_per_pod + shard owns flows
+    [d * flows_per_shard, (d+1) * flows_per_shard)."""
+    dev = jnp.clip(flow_id.astype(jnp.int32) // flows_per_shard, 0,
+                   n_devices - 1)
+    return dev // shards_per_pod, dev % shards_per_pod, dev
+
+
+def canonical_order(reports: jax.Array, mask: jax.Array
+                    ) -> Tuple[jax.Array, jax.Array]:
+    """Arrival-order canonicalization at the home translator: sort the
+    received batch by (flow_id, reporter_id, seq), padding rows last.
+
+    Reports for one flow reach its home ring from many ingest ports, and
+    the interleaving the exchange produces depends on the mesh
+    factorization (bucket packing order). History-index assignment and
+    ring placement are order-sensitive, so the home shard re-establishes
+    a total order that only depends on WHAT arrived — this is what makes
+    the merged collector state pod-count invariant. The (flow, reporter)
+    pair is unique within a batch (a port reports a flow at most once per
+    period), so the order is deterministic; word 1 already packs
+    (reporter_id << 24 | seq << 16), making it the ready-made secondary
+    sort key."""
+    f = jnp.where(mask, reports[:, 0], jnp.uint32(0xFFFFFFFF))
+    meta = jnp.where(mask, reports[:, 1], jnp.uint32(0xFFFFFFFF))
+    o1 = jnp.argsort(meta, stable=True)
+    order = o1[jnp.argsort(f[o1], stable=True)]
+    return reports[order], mask[order]
 
 
 def batch_payloads(payloads: jax.Array, mask: jax.Array, batch: int

@@ -50,22 +50,41 @@ class StepMonitor:
 
 @dataclass
 class Heartbeat:
+    """Per-process liveness file; ``pod`` records which pod of the 2D
+    (pod, shard) mesh the process serves, so the coordinator can tell a
+    single straggler from a whole pod losing its ICI/power domain (the
+    multi-pod stream can drain and re-home a pod's port set; a lone dead
+    process is a restart)."""
     directory: str
     process_index: int = 0
     stale_after_s: float = 60.0
+    pod: int = 0
 
     def beat(self, step: int):
         os.makedirs(self.directory, exist_ok=True)
         path = os.path.join(self.directory, f"hb_{self.process_index}.json")
         tmp = path + ".tmp"
         with open(tmp, "w") as f:
-            json.dump({"step": step, "t": time.time()}, f)
+            json.dump({"step": step, "t": time.time(), "pod": self.pod}, f)
         os.replace(tmp, path)
 
     def dead_peers(self) -> Dict[int, float]:
         """-> {process_index: seconds_since_last_beat} for stale peers."""
+        return {idx: age for idx, (age, _pod)
+                in self._stale().items()}
+
+    def dead_peers_by_pod(self) -> Dict[int, Dict[int, float]]:
+        """-> {pod: {process_index: seconds_since_last_beat}} for stale
+        peers, grouped by the pod each peer recorded in its last beat
+        (heartbeat files from before the pod field default to pod 0)."""
+        out: Dict[int, Dict[int, float]] = {}
+        for idx, (age, pod) in self._stale().items():
+            out.setdefault(pod, {})[idx] = age
+        return out
+
+    def _stale(self) -> Dict[int, tuple]:
         now = time.time()
-        out = {}
+        out: Dict[int, tuple] = {}
         if not os.path.isdir(self.directory):
             return out
         for name in os.listdir(self.directory):
@@ -76,7 +95,7 @@ class Heartbeat:
                     d = json.load(f)
                 age = now - d["t"]
                 if age > self.stale_after_s:
-                    out[int(name[3:-5])] = age
+                    out[int(name[3:-5])] = (age, int(d.get("pod", 0)))
             except (json.JSONDecodeError, OSError, ValueError):
                 continue
         return out

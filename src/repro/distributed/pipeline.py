@@ -35,6 +35,12 @@ def pipeline_apply(stage_fn: Callable[[Tree, jax.Array, jax.Array],
     stage_fn(params, x, stage_idx) -> x.
     """
     sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    if axis not in sizes:
+        raise ValueError(
+            f"pipeline stage axis {axis!r} is not in mesh axes "
+            f"{tuple(mesh.axis_names)}; the 2D DFA meshes name their pod "
+            "axis 'pod' (launch.mesh.make_dfa_mesh / "
+            "make_production_mesh(multi_pod=True))")
     S = sizes[axis]
     B = x.shape[0]
     assert B % num_micro == 0, (B, num_micro)

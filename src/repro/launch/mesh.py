@@ -25,6 +25,34 @@ def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
     return _mk(shape, axes, devices)
 
 
+def make_dfa_mesh(pods: int = 1, shards_per_pod: int = 0,
+                  devices=None) -> Mesh:
+    """2D ``(pod, shard)`` mesh for the multi-pod DFA stream
+    (``DFAConfig.flow_home == "hash"``). The pod axis MUST lead so the
+    pod-major device order matches the range sharding of the global flow
+    keyspace (pipeline._derive_topology asserts this).
+
+    ``shards_per_pod`` defaults to spreading every available device; pass
+    ``devices`` to build on a prefix (how the differential suite puts a
+    (1, S), (2, S) and (4, S//2) mesh on one host). Raises with the
+    factorization spelled out when the device count doesn't divide —
+    callers that want a skip instead (pytest) check first.
+    """
+    devs = list(devices) if devices is not None else list(jax.devices())
+    if shards_per_pod <= 0:
+        if len(devs) % pods:
+            raise ValueError(
+                f"{len(devs)} devices do not factor into {pods} pods "
+                f"(need a multiple of {pods})")
+        shards_per_pod = len(devs) // pods
+    need = pods * shards_per_pod
+    if len(devs) < need:
+        raise ValueError(
+            f"mesh ({pods}, {shards_per_pod}) needs {need} devices, "
+            f"have {len(devs)}")
+    return _mk((pods, shards_per_pod), ("pod", "shard"), devs[:need])
+
+
 def make_local_mesh() -> Mesh:
     """Single-host mesh over whatever devices exist (tests/examples)."""
     n = len(jax.devices())

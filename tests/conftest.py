@@ -31,6 +31,25 @@ def pytest_collection_modifyitems(config, items):
             item.add_marker(skip)
 
 
+def pod_mesh_or_skip(pods: int, shards: int):
+    """(pods, shards) 2D mesh on a prefix of the forced host devices.
+
+    The 8 forced devices factor as (1,8)/(2,4)/(4,2)/(8,1) — and any
+    smaller product such as (1,2)/(2,2)/(4,1) — WITHOUT interfering with
+    other factorizations requested in the same process (each mesh takes
+    its own device prefix, so there is no skip cascade between tests
+    using different shapes). A request that doesn't fit the available
+    device count skips with the arithmetic spelled out instead of letting
+    mesh construction raise."""
+    need = pods * shards
+    have = jax.device_count()
+    if have < need:
+        pytest.skip(f"mesh ({pods}, {shards}) needs {need} forced host "
+                    f"devices, have {have}")
+    return compat.make_mesh((pods, shards), ("pod", "shard"),
+                            devices=jax.devices()[:need])
+
+
 @pytest.fixture(scope="session")
 def mesh():
     return compat.make_mesh((1, 1), ("data", "model"))

@@ -42,3 +42,16 @@ def test_exact_threshold_boundary_passes():
     cur = _rows(a=115.0)          # exactly +15%: not a regression
     reg, *_ = compare(base, cur, 0.15)
     assert reg == []
+
+
+def test_multipod_row_is_gated():
+    """The pod-sweep rows streaming_periods emits are MATCHED rows: a
+    cross-pod routing slowdown must trip the gate while the derived-only
+    overhead-ratio row (us=0) stays informational."""
+    base = _rows(**{"streaming_multipod_ports4": 100.0,
+                    "streaming_crosspod_overhead_pods2": 0.0})
+    cur = _rows(**{"streaming_multipod_ports4": 140.0,
+                   "streaming_crosspod_overhead_pods2": 0.0})
+    reg, _, skipped, _ = compare(base, cur, 0.15)
+    assert [r[0] for r in reg] == ["streaming_multipod_ports4"]
+    assert {s[0] for s in skipped} == {"streaming_crosspod_overhead_pods2"}

@@ -1,0 +1,47 @@
+"""Fault-tolerance monitor pieces that back the multi-pod stream:
+pod-aware heartbeat grouping (whole-pod failure vs lone straggler) and
+the stage-axis guard of the pod-axis pipeline."""
+import time
+
+import pytest
+
+from repro.compat import make_mesh
+from repro.distributed.monitor import Heartbeat
+
+
+def test_dead_peers_grouped_by_pod(tmp_path):
+    d = str(tmp_path)
+    beats = [Heartbeat(d, process_index=i, stale_after_s=0.05,
+                       pod=i // 2) for i in range(4)]
+    for hb in beats:
+        hb.beat(step=7)
+    time.sleep(0.1)
+    # pod 1 (procs 2, 3) stays dead; pod 0 refreshes
+    beats[0].beat(step=8)
+    beats[1].beat(step=8)
+    by_pod = beats[0].dead_peers_by_pod()
+    assert sorted(by_pod) == [1]
+    assert sorted(by_pod[1]) == [2, 3]
+    assert all(age > 0.05 for age in by_pod[1].values())
+    # the flat view still reports the same peers
+    assert sorted(beats[0].dead_peers()) == [2, 3]
+
+
+def test_heartbeat_pre_pod_files_default_to_pod_zero(tmp_path):
+    """Old heartbeat files (no pod field) group under pod 0 instead of
+    being dropped."""
+    d = str(tmp_path)
+    import json
+    import os
+    with open(os.path.join(d, "hb_5.json"), "w") as f:
+        json.dump({"step": 1, "t": time.time() - 999}, f)
+    hb = Heartbeat(d, process_index=0, stale_after_s=60.0)
+    assert sorted(hb.dead_peers_by_pod()) == [0]
+    assert 5 in hb.dead_peers_by_pod()[0]
+
+
+def test_pipeline_apply_names_missing_axis():
+    from repro.distributed.pipeline import pipeline_apply
+    mesh = make_mesh((1, 1), ("data", "model"))
+    with pytest.raises(ValueError, match="pod"):
+        pipeline_apply(lambda p, x, s: x, {}, None, mesh, axis="pod")

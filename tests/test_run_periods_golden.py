@@ -1,53 +1,59 @@
-"""Golden regression for the streaming driver: a fixed-seed T=4
-``run_periods`` run is checked against a committed JSON fingerprint, so
-streaming/kernel refactors can't silently change enrichment output.
+"""Golden regressions for the streaming drivers: fixed-seed runs are
+checked against committed JSON fingerprints, so streaming/kernel/routing
+refactors can't silently change enrichment output.
 
-The fingerprint holds the integer metrics bit-exactly and float summaries
-of the enriched features to 1e-4 (ref backend — pure jnp — so the values
+Two goldens are pinned:
+
+* ``run_periods_t4``          — the original single-shard (1,1) T=4 run
+                                (legacy flow_home="ingest" path);
+* ``run_periods_multipod_t4`` — a (2,2)-pod mesh T=4 run of the
+                                REDUCED_MULTIPOD config over the
+                                cross_pod_mix scenario (hash homes,
+                                two-stage exchange; needs 4 forced host
+                                devices, skipped otherwise).
+
+Fingerprints hold the integer metrics bit-exactly and float summaries of
+the enriched features to 1e-4 (ref backend — pure jnp — so the values
 are platform-stable on CPU CI).
 
 Regenerate after an INTENTIONAL semantics change with:
 
     REPRO_REGEN_GOLDENS=1 python -m pytest -q tests/test_run_periods_golden.py
 
-and include the refreshed tests/goldens/run_periods_t4.json in the same
-commit as the change that moved it.
+The regen path refreshes ALL registered golden files in one run —
+whichever golden test executes first rewrites every file, so a refactor
+can't ship with one fingerprint refreshed and its sibling stale.
+Include the refreshed tests/goldens/*.json in the same commit as the
+change that moved them.
 """
 import dataclasses
 import json
 import os
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
+from conftest import pod_mesh_or_skip
 from repro.compat import make_mesh
 from repro.configs import get_dfa_config
+from repro.configs.dfa import REDUCED_MULTIPOD
 from repro.core.pipeline import DFASystem
 from repro.data import packets as PK
+from repro.data import scenarios as SC
 from repro.kernels import dispatch
 
-GOLDEN = os.path.join(os.path.dirname(__file__), "goldens",
-                      "run_periods_t4.json")
+GOLDEN_DIR = os.path.join(os.path.dirname(__file__), "goldens")
 T = 4
 EVENTS_PER_SHARD = 128
 
 
-def _run(monkeypatch):
+def _clear_env(monkeypatch):
     monkeypatch.delenv(dispatch.ENV_VAR, raising=False)
     monkeypatch.delenv(dispatch.GATHER_ENV_VAR, raising=False)
-    cfg = dataclasses.replace(get_dfa_config(reduced=True),
-                              kernel_backend="ref")
-    system = DFASystem(cfg, make_mesh((1, 1), ("data", "model")))
-    events, nows = PK.period_batches(system.n_shards, T,
-                                     EVENTS_PER_SHARD, n_flows=10,
-                                     flow_seed=3)
-    with system.mesh:
-        state, enr, fid, em, met = jax.jit(system.run_periods)(
-            system.init_state(), events, nows)
-    return state, np.asarray(enr), np.asarray(fid), np.asarray(em), met
 
 
-def _fingerprint(state, enr, fid, em, met):
+def _fingerprint(state, enr, fid, em, met, extra=None):
     periods = []
     for t in range(T):
         rows = em[t]
@@ -61,17 +67,81 @@ def _fingerprint(state, enr, fid, em, met):
                                np.sort(e, axis=0)[0][:8]] if e.size else [],
             "metrics": {k: int(np.asarray(met[k])[t]) for k in sorted(met)},
         })
-    return {
+    fp = {
         "schema": "run-periods-golden-v1",
         "T": T,
         "events_per_shard": EVENTS_PER_SHARD,
-        "collector_received": int(np.asarray(state.collector.received)[0]),
+        "collector_received": int(np.asarray(
+            state.collector.received).astype(np.uint64).sum()),
         "entry_valid_count": int(np.asarray(
             state.collector.entry_valid).sum()),
         "regs_checksum": int(np.bitwise_xor.reduce(
             np.asarray(state.reporter.regs).reshape(-1).view(np.uint32))),
         "periods": periods,
     }
+    fp.update(extra or {})
+    return fp
+
+
+def _build_single_shard():
+    cfg = dataclasses.replace(get_dfa_config(reduced=True),
+                              kernel_backend="ref")
+    system = DFASystem(cfg, make_mesh((1, 1), ("data", "model")))
+    events, nows = PK.period_batches(system.n_shards, T,
+                                     EVENTS_PER_SHARD, n_flows=10,
+                                     flow_seed=3)
+    with system.mesh:
+        state, enr, fid, em, met = jax.jit(system.run_periods)(
+            system.init_state(), events, nows)
+    return _fingerprint(state, np.asarray(enr), np.asarray(fid),
+                        np.asarray(em), met)
+
+
+def _build_multipod():
+    mesh = pod_mesh_or_skip(2, 2)
+    cfg = dataclasses.replace(REDUCED_MULTIPOD, kernel_backend="ref")
+    system = DFASystem(cfg, mesh)
+    ev, nows = SC.build("cross_pod_mix", system.total_ports,
+                        EVENTS_PER_SHARD // system.total_ports, T,
+                        seed=3)
+    events = {k: jnp.asarray(v) for k, v in ev.items()}
+    with system.mesh:
+        state, enr, fid, em, met = jax.jit(system.run_periods)(
+            system.init_state(), events, jnp.asarray(nows))
+    return _fingerprint(
+        state, np.asarray(enr), np.asarray(fid), np.asarray(em), met,
+        extra={"mesh": [2, 2], "total_ports": system.total_ports,
+               "flow_home": "hash"})
+
+
+# name -> builder; the file is tests/goldens/<name>.json
+GOLDENS = {
+    "run_periods_t4": _build_single_shard,
+    "run_periods_multipod_t4": _build_multipod,
+}
+
+_regenerated = False
+
+
+def _regen_all():
+    """Refresh EVERY registered golden in one pass (regen mode)."""
+    import pytest
+    global _regenerated
+    if _regenerated:
+        return
+    os.makedirs(GOLDEN_DIR, exist_ok=True)
+    for name, builder in GOLDENS.items():
+        try:
+            fp = builder()
+        except pytest.skip.Exception as e:
+            # e.g. the multipod golden on a <4-device host: regenerate
+            # what we can, surface what we couldn't
+            print(f"[goldens] NOT regenerated {name}: {e}")
+            continue
+        with open(os.path.join(GOLDEN_DIR, f"{name}.json"), "w") as f:
+            json.dump(fp, f, indent=1, sort_keys=True)
+        print(f"[goldens] regenerated {name}")
+    _regenerated = True
 
 
 def _assert_matches(got, want):
@@ -93,16 +163,23 @@ def _assert_matches(got, want):
                                    atol=1e-6, err_msg=f"period {t}")
 
 
-def test_run_periods_matches_golden(monkeypatch):
-    got = _fingerprint(*_run(monkeypatch))
+def _check(name, monkeypatch):
+    _clear_env(monkeypatch)
     if os.environ.get("REPRO_REGEN_GOLDENS"):
-        os.makedirs(os.path.dirname(GOLDEN), exist_ok=True)
-        with open(GOLDEN, "w") as f:
-            json.dump(got, f, indent=1, sort_keys=True)
+        _regen_all()
         return
-    assert os.path.exists(GOLDEN), (
-        f"missing {GOLDEN}; run REPRO_REGEN_GOLDENS=1 pytest "
+    path = os.path.join(GOLDEN_DIR, f"{name}.json")
+    assert os.path.exists(path), (
+        f"missing {path}; run REPRO_REGEN_GOLDENS=1 pytest "
         "tests/test_run_periods_golden.py")
-    with open(GOLDEN) as f:
+    with open(path) as f:
         want = json.load(f)
-    _assert_matches(got, want)
+    _assert_matches(GOLDENS[name](), want)
+
+
+def test_run_periods_matches_golden(monkeypatch):
+    _check("run_periods_t4", monkeypatch)
+
+
+def test_multipod_run_periods_matches_golden(monkeypatch):
+    _check("run_periods_multipod_t4", monkeypatch)
