@@ -7,11 +7,12 @@ reports against the paper's NIC-bound measurements.
 """
 from __future__ import annotations
 
-import os
 import time
 
 import jax
 import numpy as np
+
+from repro.configs import env as ENV
 
 PEAK_FLOPS = 197e12
 HBM_BW = 819e9
@@ -19,7 +20,7 @@ ICI_BW = 50e9
 
 # bench-smoke mode (CI): shrink problem sizes and iteration counts so the
 # whole sweep finishes in minutes on a shared runner. Set by run.py --tiny.
-TINY = os.environ.get("REPRO_BENCH_TINY", "") not in ("", "0")
+TINY = ENV.read_flag(ENV.BENCH_TINY.name)
 
 # every csv() row, for run.py --json artifact emission
 ROWS: list = []
@@ -50,8 +51,11 @@ def time_loop(fn, state, *args, warmup=2, iters=6):
     """Median wall seconds for state-carrying fn(state, *args) -> (state, ...)
     chains (donation-safe: the carry threads through)."""
     def next_state(out):
-        # NamedTuple (e.g. CollectorState) IS the state; plain tuple means
-        # (state, ...extras)
+        # StepOutputs-style records carry the state under .state; a
+        # NamedTuple without one (e.g. CollectorState) IS the state; a
+        # plain tuple means (state, ...extras)
+        if hasattr(out, "state"):
+            return out.state
         if isinstance(out, tuple) and not hasattr(out, "_fields"):
             return out[0]
         return out

@@ -34,10 +34,11 @@ def main() -> None:
     from benchmarks import (common, dfa_throughput, fig6_resources,
                             fig8_message_rate, fig9_gdr_vs_staged,
                             gather_scaling, ingest_scaling, roofline,
-                            streaming_periods, table1_logstar)
+                            serving_latency, streaming_periods,
+                            table1_logstar)
     mods = [fig6_resources, table1_logstar, fig8_message_rate,
             fig9_gdr_vs_staged, dfa_throughput, streaming_periods,
-            gather_scaling, ingest_scaling, roofline]
+            serving_latency, gather_scaling, ingest_scaling, roofline]
     if args.only:
         keep = {m.strip() for m in args.only.split(",")}
         known = {m.__name__.split(".")[-1] for m in mods}

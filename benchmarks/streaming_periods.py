@@ -97,9 +97,9 @@ def run():
         out = None
         for t in range(T):
             ev_t = {k: v[t] for k, v in events_.items()}
-            state, *rest = step(state, ev_t, nows_[t])
-            out = rest
-        return (state, *out)
+            out = step(state, ev_t, nows_[t])
+            state = out.state
+        return out
 
     t_seq = time_loop(sequential, system.init_sharded_state(), events, nows)
 

@@ -34,10 +34,11 @@ def main():
             ev = PK.events_for_shards(flows, period, system.n_shards, 512,
                                       window_us=cfg.monitoring_period_us)
             now = jnp.uint32((period + 1) * cfg.monitoring_period_us * 2)
-            state, enriched, flow_ids, emask, metrics = step(
+            out = step(
                 state, {k: jnp.asarray(v) for k, v in ev.items()}, now)
-            got = int(np.asarray(emask).sum())
-            en = np.asarray(enriched)[np.asarray(emask)]
+            state, metrics = out.state, out.metrics
+            got = int(np.asarray(out.mask).sum())
+            en = np.asarray(out.enriched)[np.asarray(out.mask)]
             print(f"period {period}: {int(metrics['reports_sent'])} reports"
                   f" -> {got} feature vectors "
                   f"(mean pkts/flow {en[:, 0].mean():.1f}, "

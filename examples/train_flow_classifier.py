@@ -51,11 +51,11 @@ def collect_features(system, periods=6, n_flows=32, seed=0):
               "five_tuple": jnp.asarray(np.concatenate(
                   [e[2] for e in evs]).astype(np.uint32)[order]),
               "valid": jnp.ones(len(ts), bool)}
-        state, enriched, flow_ids, emask, _ = step(
-            state, ev, jnp.uint32((period + 1) * 100_000))
-        em = np.asarray(emask)
-        en = np.asarray(enriched)[em]
-        fid = np.asarray(flow_ids)[em]
+        out = step(state, ev, jnp.uint32((period + 1) * 100_000))
+        state = out.state
+        em = np.asarray(out.mask)
+        en = np.asarray(out.enriched)[em]
+        fid = np.asarray(out.flow_ids)[em]
         for j in range(len(fid)):
             sl = int(fid[j]) % cfg.flows_per_shard
             if sl in slot2lab:

@@ -224,6 +224,28 @@ class DFAConfig:
     reporter_slots: int = 0
     # per-PORT due-report capacity; 0 = report_capacity // total_ports
     port_report_capacity: int = 0
+    # -- continuous online serving (launch.serving) ----------------------
+    # offered event rate the trace-replay source feeds the serving loop,
+    # in events/second across the whole mesh; 0 = line rate (exactly one
+    # full event batch per period, no queueing)
+    serve_offered_eps: float = 0.0
+    # per-period latency budget (the SLO) in µs; 0 = monitoring_period_us
+    serve_budget_us: int = 0
+    # host-side ingest queue capacity in events, on top of the in-flight
+    # period batch; 0 = no carry-over queue (arrivals beyond one batch
+    # are dropped the period they arrive — per-period drop accounting is
+    # then exact by construction)
+    serve_queue_events: int = 0
+    # which events to shed when arrivals overflow the host queue:
+    #   "newest" — tail drop: the just-arrived events are discarded
+    #   "oldest" — head drop: evict the oldest queued events to admit
+    #              the new ones (freshness-biased telemetry)
+    drop_policy: str = "newest"
+
+    def serve_budget_resolved_us(self) -> int:
+        """The serving loop's per-period SLO (falls back to the paper's
+        monitoring period)."""
+        return self.serve_budget_us or self.monitoring_period_us
 
     def reporter_table_slots(self) -> int:
         """Per-port Marina table size (falls back to flows_per_shard)."""

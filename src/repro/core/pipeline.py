@@ -62,6 +62,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import warnings
 from typing import Any, Dict, NamedTuple, Optional, Tuple
 
 import jax
@@ -94,6 +95,35 @@ class RoutedBatch(NamedTuple):
     local_flow: jax.Array   # (R,) i32 — owner-shard-local flow coords
     flow_id: jax.Array      # (R,) u32 — global flow ids (report word 0)
     mask: jax.Array         # (R,) bool — routed-report validity
+
+
+class StepOutputs(NamedTuple):
+    """The structured return of every driver (``dfa_step``,
+    ``run_periods``, ``run_periods_overlapped``, ``stream``).
+
+    Field arity is FIXED: ``preds`` is always present and is ``None``
+    unless an inference head is armed — unlike the historical variadic
+    5-or-6-tuple, whose length depended on ``cfg.inference_head`` and
+    forced every continuous caller to branch on arity. Streaming drivers
+    stack each per-period field under a leading (T,) dim.
+
+    Unpack by name (``out.state``, ``out.enriched`` ...); the legacy
+    positional shape is available via :meth:`as_tuple` and the deprecated
+    ``*_tuple`` driver shims, both removed after one release.
+    """
+    state: DFAState                     # post-period system state
+    enriched: jax.Array                 # ([T,] R, derived_dim) f32
+    flow_ids: jax.Array                 # ([T,] R) u32 (0xFFFFFFFF = pad)
+    mask: jax.Array                     # ([T,] R) bool validity
+    metrics: Dict[str, jax.Array]       # per-period delta counters
+    preds: Optional[jax.Array] = None   # ([T,] R, C) when a head is armed
+
+    def as_tuple(self):
+        """The pre-redesign variadic return: a 5-tuple, or a 6-tuple when
+        an inference head is armed. For migration only."""
+        base = (self.state, self.enriched, self.flow_ids, self.mask,
+                self.metrics)
+        return base if self.preds is None else base + (self.preds,)
 
 
 class DFASystem:
@@ -566,36 +596,29 @@ class DFASystem:
         return enriched, flow_ids, emask, preds
 
     def dfa_step(self, state: DFAState, events: Dict[str, jax.Array],
-                 now: jax.Array):
+                 now: jax.Array) -> StepOutputs:
         """One full monitoring period = ingest_half ∘ enrich_half.
 
         events (global): ts/size (n_shards*E,), five_tuple (…,5),
-        valid (…,). Returns (state', enriched, flow_ids, emask, metrics)
-        — plus trailing ``preds`` when an inference head is armed."""
+        valid (…,). Returns :class:`StepOutputs` (``preds`` is ``None``
+        unless an inference head is armed — the arity never changes)."""
         state, routed, metrics = self.ingest_half(state, events, now)
         enriched, flow_ids, emask, preds = self.enrich_half(state, routed)
-        if preds is None:
-            return state, enriched, flow_ids, emask, metrics
-        return state, enriched, flow_ids, emask, metrics, preds
+        return StepOutputs(state, enriched, flow_ids, emask, metrics,
+                           preds)
 
     # -- multi-period streaming -------------------------------------------
-    def _stream_returns(self, state, enriched, flow_ids, emask, metrics,
-                        preds):
-        if preds is None:
-            return state, enriched, flow_ids, emask, metrics
-        return state, enriched, flow_ids, emask, metrics, preds
-
     def run_periods(self, state: DFAState, events: Dict[str, jax.Array],
-                    nows: jax.Array):
+                    nows: jax.Array) -> StepOutputs:
         """Stream T monitoring periods, each a full ingest+enrich chain,
         as one ``lax.scan`` (state is the carry, so with donation the ring
         memory is updated in place across the whole scan — the GDR
         analogue held for an entire trace window).
 
         events: dict of (T, n_shards*E, …) arrays; nows: (T,) u32.
-        Returns (state', enriched (T, R, D), flow_ids (T, R),
-        emask (T, R), metrics dict of (T,) PER-PERIOD arrays) — plus
-        trailing preds (T, R, C) when an inference head is armed.
+        Returns :class:`StepOutputs` with the per-period fields stacked
+        under a leading (T,) dim (metrics values are (T,) PER-PERIOD
+        arrays; ``preds`` is (T, R, C) or ``None``).
         """
 
         def body(st, xs):
@@ -606,12 +629,12 @@ class DFASystem:
 
         state, (enriched, flow_ids, emask, metrics, preds) = jax.lax.scan(
             body, state, (events, nows))
-        return self._stream_returns(state, enriched, flow_ids, emask,
-                                    metrics, preds)
+        return StepOutputs(state, enriched, flow_ids, emask, metrics,
+                           preds)
 
     def run_periods_overlapped(self, state: DFAState,
                                events: Dict[str, jax.Array],
-                               nows: jax.Array):
+                               nows: jax.Array) -> StepOutputs:
         """Software-pipelined stream: period t's enrich(+inference) half
         runs in the same scan body as period t+1's ingest half, so
         enrichment latency overlaps the next period's line-rate work
@@ -658,8 +681,33 @@ class DFASystem:
         metrics = jax.tree.map(
             lambda m0, m: jnp.concatenate([m0[None], m], axis=0),
             metrics0, metrics)
-        return self._stream_returns(state, enriched, flow_ids, emask,
-                                    metrics, preds)
+        return StepOutputs(state, enriched, flow_ids, emask, metrics,
+                           preds)
+
+    # -- deprecated variadic-tuple shims (one release, then gone) ---------
+    def _tuple_shim(self, name: str):
+        warnings.warn(
+            f"DFASystem.{name}_tuple is deprecated: drivers return the "
+            "structured StepOutputs NamedTuple now (fixed arity; unpack "
+            f"by name). Call {name}() directly.",
+            DeprecationWarning, stacklevel=3)
+
+    def dfa_step_tuple(self, state, events, now):
+        """Deprecated: ``dfa_step`` with the historical 5/6-tuple."""
+        self._tuple_shim("dfa_step")
+        return self.dfa_step(state, events, now).as_tuple()
+
+    def run_periods_tuple(self, state, events, nows):
+        """Deprecated: ``run_periods`` with the historical 5/6-tuple."""
+        self._tuple_shim("run_periods")
+        return self.run_periods(state, events, nows).as_tuple()
+
+    def run_periods_overlapped_tuple(self, state, events, nows):
+        """Deprecated: ``run_periods_overlapped`` with the historical
+        5/6-tuple."""
+        self._tuple_shim("run_periods_overlapped")
+        return self.run_periods_overlapped(state, events,
+                                           nows).as_tuple()
 
     # -- convenience ------------------------------------------------------
     def describe(self) -> Dict[str, Any]:
@@ -713,11 +761,23 @@ class DFASystem:
             "inference_head": ("custom" if (self.infer_fn is not None
                                             and self.infer_params is None)
                                else cfg.inference_head),
+            # serving knobs (launch.serving reads the same fields)
+            "serve_offered_eps": cfg.serve_offered_eps,
+            "serve_budget_us": cfg.serve_budget_resolved_us(),
+            "serve_queue_events": cfg.serve_queue_events,
+            "drop_policy": cfg.drop_policy,
         }
 
     def jit_step(self, donate: bool = True):
-        return jax.jit(self.dfa_step,
-                       donate_argnums=(0,) if donate else ())
+        """jit'd single-period step, cached per donate flag (the serving
+        loop warms up and then serves through the SAME compiled step)."""
+        cache = getattr(self, "_step_jits", None)
+        if cache is None:
+            cache = self._step_jits = {}
+        if bool(donate) not in cache:
+            cache[bool(donate)] = jax.jit(
+                self.dfa_step, donate_argnums=(0,) if donate else ())
+        return cache[bool(donate)]
 
     def jit_stream(self, donate: bool = True,
                    overlapped: Optional[bool] = None):
@@ -725,12 +785,36 @@ class DFASystem:
 
         ``overlapped`` defaults to ``cfg.overlap_periods``; the two
         drivers are output-identical, so callers pick purely on latency
-        shape."""
+        shape. The jitted callable is cached per (overlapped, donate), so
+        repeated lookups share one trace."""
         if overlapped is None:
             overlapped = self.cfg.overlap_periods
-        fn = (self.run_periods_overlapped if overlapped
-              else self.run_periods)
-        return jax.jit(fn, donate_argnums=(0,) if donate else ())
+        key = (bool(overlapped), bool(donate))
+        cache = getattr(self, "_stream_jits", None)
+        if cache is None:
+            cache = self._stream_jits = {}
+        if key not in cache:
+            fn = (self.run_periods_overlapped if overlapped
+                  else self.run_periods)
+            cache[key] = jax.jit(fn,
+                                 donate_argnums=(0,) if donate else ())
+        return cache[key]
+
+    def stream(self, state: DFAState, events: Dict[str, jax.Array],
+               nows: jax.Array, overlapped: Optional[bool] = None,
+               donate: bool = False) -> StepOutputs:
+        """THE streaming entry point: run T monitoring periods and return
+        :class:`StepOutputs`, dispatching between the sequential and the
+        software-pipelined driver (``overlapped`` defaults to
+        ``cfg.overlap_periods`` — the two are output-identical, so the
+        knob is purely a latency-shape choice).
+
+        Subsumes the jit_stream/run_periods* juggling at call sites: one
+        call, one structured return, jit caches shared across calls.
+        ``donate=True`` donates the state carry (the caller must not
+        reuse the passed-in state afterwards — streaming-loop shape)."""
+        return self.jit_stream(donate=donate, overlapped=overlapped)(
+            state, events, nows)
 
     def event_specs(self, events_per_shard: int, periods: int = 0):
         """ShapeDtypeStructs + shardings for the global event batch; with

@@ -1,0 +1,199 @@
+"""Trace-replay source for the continuous serving loop.
+
+``launch.serving`` consumes fixed-shape period batches (the pipeline's
+event arrays are static: ``n_shards * events_per_shard`` rows every
+period), but a live tap does not arrive in tidy period-sized chunks.
+:class:`TraceReplaySource` bridges the two: it flattens a pre-built trace
+(any ``data.packets.period_batches`` / ``data.scenarios.build`` output)
+into one endless host-side event stream and re-offers it at a
+configurable rate, with the host-queue semantics a real ingest boundary
+has — a bounded carry-over queue, a drop policy when arrivals outrun the
+queue, and *exact* per-period accounting.
+
+Arrival pacing is virtual-time: every serving period is assumed to take
+exactly one period budget, so ``offered_eps`` events/second translate to
+``offered_eps * budget_us / 1e6`` arrivals per period (fractional
+remainders carry, so the long-run rate is exact). This keeps replay fully
+deterministic — the forced-overrun tests and the nightly latency bench
+replay the identical arrival sequence on every run — while still
+exercising real backpressure: offering faster than the batch-capacity
+rate ``batch_events / budget_us`` grows the queue and forces drops,
+which is precisely "ingest outruns the 20 ms budget".
+
+Accounting contract (tested in tests/test_serving.py):
+
+* every period: ``offered == admitted_to_queue + dropped`` and the queue
+  never exceeds ``queue_events``;
+* with ``queue_events == 0`` there is no carry-over, so per period
+  ``offered == processed + dropped`` exactly;
+* cumulatively, ``offered == processed + dropped + queued``, and after
+  :meth:`begin_drain` + draining batches, ``offered == processed +
+  dropped``.
+
+Drop policies: ``"newest"`` tail-drops the just-arrived events (classic
+NIC ring overflow); ``"oldest"`` evicts queued events to admit the new
+ones (freshness-biased telemetry — stale periods are worthless to a
+sub-RTT monitor).
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import numpy as np
+
+DROP_POLICIES = ("newest", "oldest")
+
+
+class PeriodAccounting(NamedTuple):
+    """Exact event bookkeeping for one serving period."""
+
+    offered: int        # events that arrived this period
+    processed: int      # valid events placed into this period's batch
+    dropped: int        # events shed by the drop policy this period
+    queued: int         # events still waiting in the host queue after
+
+
+class TraceReplaySource:
+    """Replays a stacked trace as a paced, queued host event stream.
+
+    Parameters
+    ----------
+    events, nows:
+        A ``period_batches``-shaped trace: dict of ``(T, N, ...)`` arrays
+        (keys ts/size/five_tuple/valid) — device or numpy. ``nows`` is
+        unused beyond validation; serving re-times events onto its own
+        period clock so the stream can run forever (the trace is cycled).
+    batch_events:
+        N — the fixed event-batch size the pipeline consumes per period.
+    offered_eps:
+        Offered rate in events/second. 0 (default) means line rate:
+        exactly one full batch arrives per period, no queueing, no drops.
+    budget_us:
+        The period budget used for virtual-time pacing (and re-timing).
+    queue_events:
+        Host carry-over queue capacity, on top of the in-flight batch.
+    drop_policy:
+        ``"newest"`` | ``"oldest"`` (see module docstring).
+    """
+
+    def __init__(self, events: Dict, nows=None, *, batch_events: int,
+                 offered_eps: float = 0.0, budget_us: int = 20_000,
+                 queue_events: int = 0, drop_policy: str = "newest"):
+        if drop_policy not in DROP_POLICIES:
+            raise ValueError(f"unknown drop_policy {drop_policy!r}; "
+                             f"known: {list(DROP_POLICIES)}")
+        if batch_events <= 0:
+            raise ValueError("batch_events must be positive")
+        if offered_eps < 0:
+            raise ValueError("offered_eps must be >= 0")
+        ts = np.asarray(events["ts"])
+        if ts.ndim != 2:
+            raise ValueError(
+                f"expected a stacked (T, N, ...) trace, got ts shape "
+                f"{ts.shape}")
+        valid = np.asarray(events["valid"]).reshape(-1)
+        # flatten to one host stream of real events, trace order
+        self._five = np.asarray(events["five_tuple"]).reshape(
+            -1, 5)[valid].astype(np.uint32)
+        self._size = np.asarray(events["size"]).reshape(
+            -1)[valid].astype(np.uint32)
+        if len(self._size) == 0:
+            raise ValueError("trace has no valid events to replay")
+        self.batch_events = int(batch_events)
+        self.offered_eps = float(offered_eps)
+        self.budget_us = int(budget_us)
+        self.queue_events = int(queue_events)
+        self.drop_policy = drop_policy
+        self._cursor = 0                 # position in the cyclic stream
+        self._acc = 0.0                  # fractional-arrival carry
+        self._queue: list = []           # [(five_row, size)] FIFO
+        self._period = 0
+        self._draining = False
+        self.total = PeriodAccounting(0, 0, 0, 0)
+
+    # -- the paced stream --------------------------------------------------
+
+    def _arrivals_this_period(self) -> int:
+        if self._draining:
+            return 0
+        if self.offered_eps == 0.0:      # line rate: one batch, no queue
+            return self.batch_events
+        self._acc += self.offered_eps * self.budget_us / 1e6
+        n = int(self._acc)
+        self._acc -= n
+        return n
+
+    def _take_stream(self, n: int):
+        """Next n events of the cyclic flattened trace."""
+        idx = (self._cursor + np.arange(n)) % len(self._size)
+        self._cursor = int((self._cursor + n) % len(self._size))
+        return list(zip(self._five[idx], self._size[idx]))
+
+    def next_batch(self) -> Tuple[Dict[str, np.ndarray], np.uint32,
+                                  PeriodAccounting]:
+        """One serving period: admit arrivals, apply the drop policy,
+        dequeue up to ``batch_events`` into a fixed-shape batch (short
+        periods pad with ``valid=False`` rows), and account exactly."""
+        offered = self._arrivals_this_period()
+        arrivals = self._take_stream(offered)
+        dropped = 0
+        if self.offered_eps == 0.0 and not self._draining:
+            # line rate bypasses the queue entirely: batch == arrivals
+            pending = arrivals
+        else:
+            # room = carry-over queue + the one in-flight batch
+            room = self.queue_events + self.batch_events
+            self._queue.extend(arrivals)
+            excess = len(self._queue) - room
+            if excess > 0:
+                dropped = excess
+                if self.drop_policy == "newest":
+                    del self._queue[-excess:]
+                else:                    # "oldest": evict the head
+                    del self._queue[:excess]
+            pending = self._queue[:self.batch_events]
+            del self._queue[:self.batch_events]
+        processed = len(pending)
+        batch = self._assemble(pending)
+        now = np.uint32(((self._period + 1) * self.budget_us)
+                        & 0xFFFFFFFF)
+        self._period += 1
+        acct = PeriodAccounting(offered, processed, dropped,
+                                len(self._queue))
+        self.total = PeriodAccounting(
+            self.total.offered + offered,
+            self.total.processed + processed,
+            self.total.dropped + dropped,
+            len(self._queue))
+        return batch, now, acct
+
+    def _assemble(self, pending) -> Dict[str, np.ndarray]:
+        N = self.batch_events
+        t0 = (self._period * self.budget_us) & 0xFFFFFFFF
+        n = len(pending)
+        five = np.zeros((N, 5), np.uint32)
+        size = np.zeros(N, np.uint32)
+        valid = np.zeros(N, bool)
+        if n:
+            five[:n] = np.stack([p[0] for p in pending])
+            size[:n] = [p[1] for p in pending]
+            valid[:n] = True
+        # re-time onto the serving period window, evenly spaced in
+        # arrival order (the reporter contract: sorted within a period)
+        ts = ((t0 + (np.arange(N, dtype=np.uint64) * self.budget_us)
+               // N) & 0xFFFFFFFF).astype(np.uint32)
+        return {"ts": ts, "size": size, "five_tuple": five,
+                "valid": valid}
+
+    # -- graceful shutdown -------------------------------------------------
+
+    def begin_drain(self) -> None:
+        """Stop offering new arrivals; subsequent batches flush the
+        queue. After :attr:`pending` hits 0,
+        ``total.offered == total.processed + total.dropped`` exactly."""
+        self._draining = True
+
+    @property
+    def pending(self) -> int:
+        """Events still queued on the host (0 once drained)."""
+        return len(self._queue)

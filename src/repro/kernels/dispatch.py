@@ -46,19 +46,20 @@ until re-traced (jit caches are keyed on shapes, not on this env var).
 """
 from __future__ import annotations
 
-import os
 import warnings
 from typing import Callable, Dict, List, Optional, Tuple
 
 import jax
 
-BACKENDS = ("ref", "pallas", "interpret")
-ENV_VAR = "REPRO_KERNEL_BACKEND"
+from repro.configs import env as ENV
 
-GATHER_VARIANTS = ("full", "hbm")
-GATHER_ENV_VAR = "REPRO_GATHER_VARIANT"
-INGEST_VARIANTS = ("block", "hbm")
-INGEST_ENV_VAR = "REPRO_INGEST_VARIANT"
+BACKENDS = ENV.KERNEL_BACKEND.choices
+ENV_VAR = ENV.KERNEL_BACKEND.name
+
+GATHER_VARIANTS = ENV.GATHER_VARIANT.choices
+GATHER_ENV_VAR = ENV.GATHER_VARIANT.name
+INGEST_VARIANTS = ENV.INGEST_VARIANT.choices
+INGEST_ENV_VAR = ENV.INGEST_VARIANT.name
 WORDS = 16               # collector entry words (64 B RoCEv2 payload)
 EVENT_WORDS = 5          # sorted-event-stream words: slot/ts/ps/base_ts/first
 VMEM_BYTES_PER_MB = 1 << 20
@@ -119,17 +120,16 @@ def _resolve_choice(explicit: Optional[str], cfg, *, env_var: str,
     """The one selection-precedence ladder every knob shares: explicit
     argument > ``env_var`` > ``DFAConfig.<cfg_attr>`` > ``heuristic()``.
 
-    A malformed env value raises even when a stronger setting (explicit
+    The env var is read through the ``repro.configs.env`` registry, so a
+    malformed value raises even when a stronger setting (explicit
     argument) would win: a typo'd env var silently losing the precedence
     fight is indistinguishable from it working.
     """
-    env = os.environ.get(env_var, "").strip().lower()
-    if env not in ("", "auto"):
-        _check_choice(env, choices, f"env var {env_var}")
+    env = ENV.read_choice(env_var)       # fail-loud registry validation
     if explicit in (None, "auto", ""):
         cfg_value = (getattr(cfg, cfg_attr, "auto")
                      if cfg is not None else "auto") or "auto"
-        if env not in ("", "auto"):
+        if env is not None:
             explicit = env
         elif cfg_value != "auto":
             _check_choice(cfg_value, choices, f"DFAConfig.{cfg_attr}")

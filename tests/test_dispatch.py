@@ -252,10 +252,10 @@ def _one_step(system, env_backend, monkeypatch):
     state = system.init_state()
     with system.mesh:
         # fresh jit per backend: resolution happens at trace time
-        state, enriched, fids, emask, metrics = jax.jit(system.dfa_step)(
+        out = jax.jit(system.dfa_step)(
             state, {k: jnp.asarray(v) for k, v in ev.items()},
             jnp.uint32(90_000))
-    return state, enriched, emask, metrics
+    return out.state, out.enriched, out.mask, out.metrics
 
 
 def test_env_override_interpret_matches_ref_end_to_end(monkeypatch):
@@ -301,10 +301,14 @@ def test_run_periods_matches_sequential_steps():
         outs = []
         for t in range(T):
             ev_t = {k: v[t] for k, v in events.items()}
-            st_seq, enr, fid, em, met = step(st_seq, ev_t, nows[t])
-            outs.append((enr, fid, em, met))
-        st_str, enr_s, fid_s, em_s, met_s = jax.jit(system.run_periods)(
+            o = step(st_seq, ev_t, nows[t])
+            st_seq = o.state
+            outs.append((o.enriched, o.flow_ids, o.mask, o.metrics))
+        streamed = jax.jit(system.run_periods)(
             system.init_state(), events, nows)
+        st_str, enr_s, fid_s, em_s, met_s = (
+            streamed.state, streamed.enriched, streamed.flow_ids,
+            streamed.mask, streamed.metrics)
     for a, b in zip(jax.tree.leaves(st_seq), jax.tree.leaves(st_str)):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
     for t in range(T):
@@ -330,9 +334,10 @@ def test_run_periods_donated_stream():
     with system.mesh:
         stream = system.jit_stream(donate=True)
         state = system.init_state()
-        state, enr, fid, em, met = stream(state, events, nows)
+        out = stream(state, events, nows)
+        enr = out.enriched
         # carry is reusable across invocations (streaming loop shape)
-        state, *_ = stream(state, events, nows)
+        state = stream(out.state, events, nows).state
     assert enr.shape[0] == T
     assert np.isfinite(np.asarray(enr)).all()
 
@@ -346,8 +351,9 @@ def test_run_periods_multi_shard():
     T = 2
     events, nows = _period_batches(system, T, events_per_shard=64)
     with system.mesh:
-        state, enr, fid, em, met = jax.jit(system.run_periods)(
+        out = jax.jit(system.run_periods)(
             system.init_state(), events, nows)
+        fid, em, met = out.flow_ids, out.mask, out.metrics
     sent = int(np.asarray(met["reports_sent"]).sum())
     recv = int(np.asarray(met["reports_recv"]).sum())
     drop = int(np.asarray(met["bucket_drops"]).sum())

@@ -122,9 +122,10 @@ ev = PK.events_for_shards(flows, 0, sysm.n_shards, 128)
 state = sysm.init_state()
 with mesh:
     step = jax.jit(sysm.dfa_step)
-    state, enriched, flow_ids, emask, metrics = step(
+    out = step(
         state, {k: jnp.asarray(v) for k, v in ev.items()},
         jnp.uint32(60_000))
+flow_ids, emask, metrics = out.flow_ids, out.mask, out.metrics
 sent = int(np.asarray(metrics["reports_sent"]).flat[0])
 recv = int(np.asarray(metrics["reports_recv"]).flat[0])
 drop = int(np.asarray(metrics["bucket_drops"]).flat[0])

@@ -252,9 +252,9 @@ def test_streaming_drivers_bitwise_unchanged_under_fused(monkeypatch):
         fn = (system.run_periods_overlapped if overlapped
               else system.run_periods)
         with system.mesh:
-            st, _, fid, em, met = jax.jit(fn)(system.init_state(),
-                                              events, nows)
-        return st.reporter, fid, em, met
+            out = jax.jit(fn)(system.init_state(), events, nows)
+        return (out.state.reporter, out.flow_ids, out.mask,
+                out.metrics)
 
     for overlapped in (False, True):
         rep_r, fid_r, em_r, met_r = run("ref", overlapped)

@@ -127,11 +127,11 @@ def _run(pods, shards, head, overlapped, scenario,
     with sysm.mesh:
         out = (ovl if overlapped else seq)(sysm.init_state(), events,
                                            nows)
-    state, enr, fid, em, met = out[:5]
-    preds = out[5] if head != "none" else None
-    return (_merged_state(sysm, state),
-            _canon_periods(enr, fid, em, preds),
-            {k: np.asarray(v) for k, v in met.items()})
+    assert (out.preds is None) == (head == "none")
+    return (_merged_state(sysm, out.state),
+            _canon_periods(out.enriched, out.flow_ids, out.mask,
+                           out.preds),
+            {k: np.asarray(v) for k, v in out.metrics.items()})
 
 
 def _assert_same(ref, got, ctx):
@@ -217,7 +217,7 @@ def test_pod22_stream_smoke():
         seq = jax.jit(sysm.run_periods)(sysm.init_state(), events, nows)
         ovl = jax.jit(sysm.run_periods_overlapped)(sysm.init_state(),
                                                    events, nows)
-    st, enr, fid, em, met = seq
+    fid, em, met = seq.flow_ids, seq.mask, seq.metrics
     assert int(np.asarray(met["reports_recv"]).sum()) > 0
     # cross-pod delivery really happened: some flow ingested by a pod-0
     # port is homed on pod 1 (or vice versa) — with hash homes over a
@@ -250,9 +250,10 @@ def test_single_device_multiport_mesh():
     assert sysm.ports_per_device == 4
     ev, nows = SC.build("elephants_mice", 4, 32, T)
     with sysm.mesh:
-        st, enr, fid, em, met = jax.jit(sysm.run_periods)(
+        out = jax.jit(sysm.run_periods)(
             sysm.init_state(), {k: jnp.asarray(v) for k, v in ev.items()},
             jnp.asarray(nows))
+    fid, em, met = out.flow_ids, out.mask, out.metrics
     assert int(np.asarray(met["reports_recv"]).sum()) > 0
     assert int(np.asarray(met["bucket_drops"]).sum()) == 0
     # every routed flow id is a hash home inside the global keyspace
@@ -304,7 +305,8 @@ def test_home_assignment_matches_translator():
     sysm, seq, _ = _system(2, 2, "none")
     events, nows = _trace("port_local")
     with sysm.mesh:
-        state, enr, fid, em, met = seq(sysm.init_state(), events, nows)
+        out = seq(sysm.init_state(), events, nows)
+    state, fid, em = out.state, out.flow_ids, out.mask
     # reconstruct home ids for every ACTIVE reporter key, then check all
     # routed flow ids are in that set
     keys = np.asarray(state.reporter.keys)[np.asarray(

@@ -28,22 +28,25 @@ def _period_batches(system, T, events_per_shard=128, seed=7):
 
 
 def _assert_streams_equal(seq, ovl, with_preds=False):
-    (st_a, enr_a, fid_a, em_a, met_a), extra_a = seq[:5], seq[5:]
-    (st_b, enr_b, fid_b, em_b, met_b), extra_b = ovl[:5], ovl[5:]
-    np.testing.assert_allclose(np.asarray(enr_a), np.asarray(enr_b),
+    np.testing.assert_allclose(np.asarray(seq.enriched),
+                               np.asarray(ovl.enriched),
                                rtol=1e-6, atol=1e-6)
-    np.testing.assert_array_equal(np.asarray(fid_a), np.asarray(fid_b))
-    np.testing.assert_array_equal(np.asarray(em_a), np.asarray(em_b))
-    assert sorted(met_a) == sorted(met_b)
-    for k in met_a:
-        np.testing.assert_array_equal(np.asarray(met_a[k]),
-                                      np.asarray(met_b[k]), err_msg=k)
-    for a, b in zip(jax.tree.leaves(st_a), jax.tree.leaves(st_b)):
+    np.testing.assert_array_equal(np.asarray(seq.flow_ids),
+                                  np.asarray(ovl.flow_ids))
+    np.testing.assert_array_equal(np.asarray(seq.mask),
+                                  np.asarray(ovl.mask))
+    assert sorted(seq.metrics) == sorted(ovl.metrics)
+    for k in seq.metrics:
+        np.testing.assert_array_equal(np.asarray(seq.metrics[k]),
+                                      np.asarray(ovl.metrics[k]),
+                                      err_msg=k)
+    for a, b in zip(jax.tree.leaves(seq.state),
+                    jax.tree.leaves(ovl.state)):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
-    assert len(extra_a) == len(extra_b) == (1 if with_preds else 0)
+    assert (seq.preds is None) == (ovl.preds is None) == (not with_preds)
     if with_preds:
-        np.testing.assert_allclose(np.asarray(extra_a[0]),
-                                   np.asarray(extra_b[0]),
+        np.testing.assert_allclose(np.asarray(seq.preds),
+                                   np.asarray(ovl.preds),
                                    rtol=1e-6, atol=1e-6)
 
 
@@ -70,7 +73,7 @@ def test_overlapped_t1_degenerate():
                                           nows)
         ovl = jax.jit(system.run_periods_overlapped)(system.init_state(),
                                                      events, nows)
-    assert ovl[1].shape[0] == 1
+    assert ovl.enriched.shape[0] == 1
     _assert_streams_equal(seq, ovl)
 
 
@@ -88,7 +91,7 @@ def test_overlapped_equals_sequential_multi_shard():
                                           nows)
         ovl = jax.jit(system.run_periods_overlapped)(system.init_state(),
                                                      events, nows)
-    assert int(np.asarray(seq[4]["reports_recv"]).sum()) > 0
+    assert int(np.asarray(seq.metrics["reports_recv"]).sum()) > 0
     _assert_streams_equal(seq, ovl)
 
 
@@ -107,7 +110,7 @@ def test_overlapped_with_inference_head():
         ovl = jax.jit(system.run_periods_overlapped)(system.init_state(),
                                                      events, nows)
     _assert_streams_equal(seq, ovl, with_preds=True)
-    preds, em = np.asarray(ovl[5]), np.asarray(ovl[3])
+    preds, em = np.asarray(ovl.preds), np.asarray(ovl.mask)
     assert preds.shape == em.shape + (4,)
     assert (preds[~em] == 0.0).all()
     assert np.abs(preds[em]).sum() > 0
@@ -121,8 +124,12 @@ def test_dfa_step_is_half_step_composition():
     events, nows = _period_batches(system, T=1)
     ev0 = {k: v[0] for k, v in events.items()}
     with system.mesh:
-        st_a, enr_a, fid_a, em_a, met_a = jax.jit(system.dfa_step)(
+        out_a = jax.jit(system.dfa_step)(
             system.init_state(), ev0, nows[0])
+        st_a, enr_a, fid_a, em_a, met_a = (out_a.state, out_a.enriched,
+                                           out_a.flow_ids, out_a.mask,
+                                           out_a.metrics)
+        assert out_a.preds is None
         st_b, routed, met_b = jax.jit(system.ingest_half)(
             system.init_state(), ev0, nows[0])
         enr_b, fid_b, em_b, preds = jax.jit(system.enrich_half)(st_b,
@@ -154,8 +161,9 @@ def test_per_period_metrics_are_deltas():
                                      events_per_shard=256, n_flows=200,
                                      flow_seed=7)
     with system.mesh:
-        state, _, _, _, met = jax.jit(system.run_periods)(
+        out = jax.jit(system.run_periods)(
             system.init_state(), events, nows)
+        state, met = out.state, out.metrics
     coll = np.asarray(met["collisions"]).astype(np.int64)
     cum = int(np.asarray(state.reporter.collisions).sum())
     assert cum > 0 and (coll > 0).sum() >= 2, \

@@ -26,9 +26,11 @@ def test_end_to_end_counts(system, rng):
     state = system.init_state()
     with system.mesh:
         step = jax.jit(system.dfa_step)
-        state, enriched, flow_ids, emask, metrics = step(
+        out = step(
             state, {k: jnp.asarray(v) for k, v in ev.items()},
             jnp.uint32(100_000))
+        enriched, flow_ids, emask, metrics = (out.enriched, out.flow_ids,
+                                              out.mask, out.metrics)
     # ground truth: per-flow packet counts
     slots = np.asarray(__import__("repro.core.reporter",
                                   fromlist=["hash_slot"]).hash_slot(
@@ -56,9 +58,9 @@ def test_memory_entries_verbatim_payloads(system, rng):
     ev = PK.events_for_shards(flows, 0, system.n_shards, 128)
     state = system.init_state()
     with system.mesh:
-        state, *_ = jax.jit(system.dfa_step)(
+        state = jax.jit(system.dfa_step)(
             state, {k: jnp.asarray(v) for k, v in ev.items()},
-            jnp.uint32(50_000))
+            jnp.uint32(50_000)).state
     mem = np.asarray(state.collector.memory)
     ev_valid = np.asarray(state.collector.entry_valid)
     rows = mem[ev_valid]
@@ -81,9 +83,10 @@ def test_history_accumulates_over_periods(system):
         step = jax.jit(system.dfa_step)
         for i in range(3):
             ev = PK.events_for_shards(flows, i, system.n_shards, 128)
-            state, *_ , metrics = step(
+            out = step(
                 state, {k: jnp.asarray(v) for k, v in ev.items()},
                 jnp.uint32((i + 1) * 100_000))
+            state, metrics = out.state, out.metrics
     ev_valid = np.asarray(state.collector.entry_valid)
     per_flow = ev_valid.sum(axis=1)
     assert per_flow.max() == 3        # 3 monitoring periods -> 3 entries
@@ -94,9 +97,10 @@ def test_metrics_are_conserved(system):
     ev = PK.events_for_shards(flows, 0, system.n_shards, 256)
     state = system.init_state()
     with system.mesh:
-        state, _, _, emask, metrics = jax.jit(system.dfa_step)(
+        out = jax.jit(system.dfa_step)(
             state, {k: jnp.asarray(v) for k, v in ev.items()},
             jnp.uint32(60_000))
+        emask, metrics = out.mask, out.metrics
     sent = int(metrics["reports_sent"])
     recv = int(metrics["reports_recv"])
     drop = int(metrics["bucket_drops"])

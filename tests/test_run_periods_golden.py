@@ -91,10 +91,11 @@ def _build_single_shard():
                                      EVENTS_PER_SHARD, n_flows=10,
                                      flow_seed=3)
     with system.mesh:
-        state, enr, fid, em, met = jax.jit(system.run_periods)(
+        out = jax.jit(system.run_periods)(
             system.init_state(), events, nows)
-    return _fingerprint(state, np.asarray(enr), np.asarray(fid),
-                        np.asarray(em), met)
+    return _fingerprint(out.state, np.asarray(out.enriched),
+                        np.asarray(out.flow_ids), np.asarray(out.mask),
+                        out.metrics)
 
 
 def _build_multipod():
@@ -106,10 +107,11 @@ def _build_multipod():
                         seed=3)
     events = {k: jnp.asarray(v) for k, v in ev.items()}
     with system.mesh:
-        state, enr, fid, em, met = jax.jit(system.run_periods)(
+        out = jax.jit(system.run_periods)(
             system.init_state(), events, jnp.asarray(nows))
     return _fingerprint(
-        state, np.asarray(enr), np.asarray(fid), np.asarray(em), met,
+        out.state, np.asarray(out.enriched), np.asarray(out.flow_ids),
+        np.asarray(out.mask), out.metrics,
         extra={"mesh": [2, 2], "total_ports": system.total_ports,
                "flow_home": "hash"})
 

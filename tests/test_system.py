@@ -46,11 +46,11 @@ def test_telemetry_to_inference(mesh1):
                   "five_tuple": jnp.asarray(np.concatenate(
                       [e[2] for e in evs]).astype(np.uint32)[order]),
                   "valid": jnp.ones(len(ts), bool)}
-            state, enriched, flow_ids, emask, _ = step(
-                state, ev, jnp.uint32((period + 1) * 100_000))
-            em = np.asarray(emask)
-            en = np.asarray(enriched)[em]
-            fid = np.asarray(flow_ids)[em]
+            out = step(state, ev, jnp.uint32((period + 1) * 100_000))
+            state = out.state
+            em = np.asarray(out.mask)
+            en = np.asarray(out.enriched)[em]
+            fid = np.asarray(out.flow_ids)[em]
             from repro.core.reporter import hash_slot
             slot_of = {int(np.asarray(hash_slot(
                 jnp.asarray(keys[i]), cfg.flows_per_shard))): lab[i]
@@ -79,14 +79,14 @@ def test_monitoring_period_enforced(mesh1):
     with mesh1:
         step = jax.jit(system.dfa_step)
         ev = PK.events_for_shards(flows, 0, 1, 128)
-        state, _, _, _, m1 = step(state, {k: jnp.asarray(v) for k, v
-                                          in ev.items()},
-                                  jnp.uint32(50_000))
-        first = int(m1["reports_recv"])
+        out1 = step(state, {k: jnp.asarray(v) for k, v
+                            in ev.items()},
+                    jnp.uint32(50_000))
+        first = int(out1.metrics["reports_recv"])
         ev2 = PK.events_for_shards(flows, 1, 1, 64, window_us=1000)
         ev2["ts"] = (ev2["ts"] * 0 + 50_500).astype(np.uint32)
-        state, _, _, _, m2 = step(state, {k: jnp.asarray(v) for k, v
-                                          in ev2.items()},
-                                  jnp.uint32(51_000))
-        assert int(m2["reports_recv"]) == 0
+        out2 = step(out1.state, {k: jnp.asarray(v) for k, v
+                                 in ev2.items()},
+                    jnp.uint32(51_000))
+        assert int(out2.metrics["reports_recv"]) == 0
         assert first > 0
