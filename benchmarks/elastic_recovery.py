@@ -1,0 +1,146 @@
+"""Elastic operations cost: snapshot overhead per period + recovery time.
+
+Two rows the nightly ``compare_bench.py`` gate watches:
+
+* ``elastic_snapshot_overhead`` — extra wall µs per streamed period when
+  the snapshot-chunked ``DFASystem.stream()`` path checkpoints the full
+  DFAState every ``snapshot_every_periods`` (vs the plain stream on the
+  same trace). This is the continuous price of survivability; the chunked
+  path is bitwise-identical in outputs (tests/test_elastic_equiv.py), so
+  the only thing allowed to change night-over-night is this number.
+* ``elastic_recovery_us`` — wall time of one full
+  ``recover_from_snapshot`` cycle: restore the newest snapshot, build the
+  survivor (pods-1, shard) system, HRW-re-home the dead pod's flows,
+  device_put onto the survivor mesh. Needs >= 4 devices for the (2,2)
+  mesh; on smaller runners (the 1-device CI bench-smoke) the row is
+  skipped with a note so the artifact stays honest about coverage.
+
+CPU wall numbers are relative only (no TPU in this container).
+
+Standalone: ``python benchmarks/elastic_recovery.py --tiny --json out.json``
+(also wired into benchmarks/run.py for the CI bench-smoke artifact).
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+if __package__ in (None, ""):           # executed as a script: mirror
+    _root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    sys.path.insert(0, os.path.join(_root, "src"))   # run.py's sys.path
+    sys.path.insert(0, _root)
+    if "--tiny" in sys.argv:            # before benchmarks.common binds TINY
+        os.environ["REPRO_BENCH_TINY"] = "1"
+
+import dataclasses
+import shutil
+import tempfile
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import TINY, csv
+from repro.configs import get_dfa_config
+from repro.core.pipeline import DFASystem
+from repro.data import scenarios as SC
+from repro.launch import elastic as EL
+from repro.launch.mesh import make_dfa_mesh
+
+TOTAL_PORTS = 4
+EVENTS_PER_PORT = 32 if TINY else 128
+T = 8
+SNAP_EVERY = 2
+ITERS = 2 if TINY else 5
+
+
+def _cfg(pods, shards):
+    return dataclasses.replace(
+        get_dfa_config(reduced=True),
+        flow_home="rendezvous", pods=pods,
+        ports_per_pod=TOTAL_PORTS // pods,
+        reporter_slots=64, flows_per_shard=256 if TINY else 512,
+        port_report_capacity=16,
+        snapshot_every_periods=SNAP_EVERY)
+
+
+def _stream_wall(system, events, nows, snapshot_dir=None):
+    t0 = time.perf_counter()
+    out = system.stream(system.init_state(), events, nows,
+                        snapshot_dir=snapshot_dir)
+    jax.block_until_ready(out.state)
+    return time.perf_counter() - t0
+
+
+def run():
+    devs = jax.devices()
+    ev, nows_np = SC.build("cross_pod_mix", TOTAL_PORTS,
+                           EVENTS_PER_PORT, T)
+    events = {k: jnp.asarray(v) for k, v in ev.items()}
+    nows = jnp.asarray(nows_np)
+
+    # -- snapshot overhead per period (single device: always runs) ------
+    system = DFASystem(_cfg(1, 1), make_dfa_mesh(1, 1, devs[:1]))
+    snap_dir = tempfile.mkdtemp(prefix="dfa_snap_bench_")
+    try:
+        with system.mesh:
+            _stream_wall(system, events, nows)               # compile
+            _stream_wall(system, events, nows,
+                         snapshot_dir=snap_dir)              # compile
+            plain = min(_stream_wall(system, events, nows)
+                        for _ in range(ITERS))
+            snap = min(_stream_wall(system, events, nows,
+                                    snapshot_dir=snap_dir)
+                       for _ in range(ITERS))
+        over_us = max(0.0, (snap - plain) / T * 1e6)
+        csv("elastic_snapshot_overhead", over_us,
+            f"per_period;T={T};every={SNAP_EVERY};"
+            f"plain_us={plain * 1e6:.0f};snap_us={snap * 1e6:.0f};"
+            f"snapshots={T // SNAP_EVERY + (T % SNAP_EVERY > 0)}")
+    finally:
+        shutil.rmtree(snap_dir, ignore_errors=True)
+
+    # -- recovery time: (2,2) -> kill pod 0 -> (1,2) --------------------
+    if len(devs) < 4:
+        csv("elastic_recovery_us", float("nan"),
+            f"skipped;need=4_devices;have={len(devs)}")
+        return
+    full = DFASystem(_cfg(2, 2), make_dfa_mesh(2, 2, devs[:4]))
+    snap_dir = tempfile.mkdtemp(prefix="dfa_snap_bench_")
+    try:
+        with full.mesh:
+            full.stream(full.init_state(), events, nows,
+                        snapshot_dir=snap_dir)
+        t0 = time.perf_counter()
+        new_sys, new_state, period = EL.recover_from_snapshot(
+            full, snap_dir, 0, devices=devs[:2])
+        jax.block_until_ready(new_state)
+        rec_us = (time.perf_counter() - t0) * 1e6
+        moved = int(np.asarray(new_state.collector.entry_valid)
+                    .any(axis=1).sum())
+        csv("elastic_recovery_us", rec_us,
+            f"mesh=(2,2)->(1,2);period={period};replay_window<="
+            f"{SNAP_EVERY};occupied_rows={moved}")
+    finally:
+        shutil.rmtree(snap_dir, ignore_errors=True)
+
+
+def _main():
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--tiny", action="store_true",
+                    help="bench-smoke mode (already applied pre-import)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write rows as a JSON artifact")
+    args = ap.parse_args()
+    from benchmarks import common
+    print("name,us_per_call,derived")
+    run()
+    if args.json:
+        common.write_artifact(args.json, tag="elastic_recovery")
+
+
+if __name__ == "__main__":
+    _main()

@@ -31,14 +31,15 @@ def main() -> None:
     root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
     sys.path.insert(0, os.path.join(root, "src"))
     sys.path.insert(0, root)       # `import benchmarks` as a namespace pkg
-    from benchmarks import (common, dfa_throughput, fig6_resources,
-                            fig8_message_rate, fig9_gdr_vs_staged,
-                            gather_scaling, ingest_scaling, roofline,
-                            serving_latency, streaming_periods,
-                            table1_logstar)
+    from benchmarks import (common, dfa_throughput, elastic_recovery,
+                            fig6_resources, fig8_message_rate,
+                            fig9_gdr_vs_staged, gather_scaling,
+                            ingest_scaling, roofline, serving_latency,
+                            streaming_periods, table1_logstar)
     mods = [fig6_resources, table1_logstar, fig8_message_rate,
             fig9_gdr_vs_staged, dfa_throughput, streaming_periods,
-            serving_latency, gather_scaling, ingest_scaling, roofline]
+            serving_latency, elastic_recovery, gather_scaling,
+            ingest_scaling, roofline]
     if args.only:
         keep = {m.strip() for m in args.only.split(",")}
         known = {m.__name__.split(".")[-1] for m in mods}

@@ -11,16 +11,26 @@ Layout:  <dir>/step_<N>/
 * Elastic restore: the manifest stores GLOBAL shapes, restore re-shards to
   whatever mesh/sharding the caller provides — a checkpoint from a 256-chip
   run restores onto 512 chips (tested in tests/test_checkpoint.py).
+* NamedTuple-faithful: restored trees rebuild the registered NamedTuple
+  classes (DFAState & friends), so ``state.reporter.regs`` works after a
+  round-trip; unknown classes rebuild as a dynamic namedtuple of the same
+  name/fields rather than silently degrading to a plain tuple.
 * keep-last-k garbage collection; SIGTERM-safe (train.py checkpoints on
   signal before exiting).
+
+Concurrency: all directory mutation (rename + GC) and manifest/shard reads
+happen under a module lock, so overlapping async saves and a restore racing
+a save's GC are serialized instead of corrupting each other.
 """
 from __future__ import annotations
 
+import collections
+import importlib
 import os
 import re
 import shutil
 import threading
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Optional, Tuple, Type
 
 import jax
 import jax.numpy as jnp
@@ -29,6 +39,52 @@ import numpy as np
 
 Tree = Any
 _SEP = "/"
+
+# serializes directory mutation (tmp->final rename, GC) and reads against
+# each other; held only around IO, never around device_get/serialization
+_IO_LOCK = threading.Lock()
+
+# NamedTuple classes restorable by name. Populated lazily with the DFA
+# state classes; extend via register_namedtuple for user trees.
+_NT_REGISTRY: Dict[str, Type] = {}
+_BUILTIN_NT = (
+    ("repro.core.pipeline", ("DFAState", "RoutedBatch", "StepOutputs")),
+    ("repro.core.reporter", ("ReporterState",)),
+    ("repro.core.translator", ("TranslatorState",)),
+    ("repro.core.collector", ("CollectorState",)),
+)
+
+
+def register_namedtuple(cls: Type) -> Type:
+    """Register a NamedTuple class so restore rebuilds it by name.
+
+    Usable as a decorator; returns ``cls`` unchanged.
+    """
+    _NT_REGISTRY[cls.__name__] = cls
+    return cls
+
+
+def _resolve_namedtuple(name: str, fields: List[str]) -> Type:
+    cls = _NT_REGISTRY.get(name)
+    if cls is None:
+        # lazy import: checkpoint must not import the core modules at module
+        # load (they import jax-heavy deps and would cycle through train.py)
+        for mod, names in _BUILTIN_NT:
+            if name not in names:
+                continue
+            try:
+                m = importlib.import_module(mod)
+            except ImportError:
+                continue
+            found = getattr(m, name, None)
+            if found is not None:
+                _NT_REGISTRY[name] = found
+                cls = found
+    if cls is not None and list(getattr(cls, "_fields", ())) == list(fields):
+        return cls
+    # unknown class, or its fields drifted since the save: a dynamic
+    # namedtuple keeps attribute access working (a plain tuple would not)
+    return collections.namedtuple(name, fields)  # type: ignore[misc]
 
 
 def _flatten(tree: Tree, prefix="") -> Dict[str, Any]:
@@ -39,8 +95,6 @@ def _flatten(tree: Tree, prefix="") -> Dict[str, Any]:
     elif isinstance(tree, (list, tuple)):
         for i, v in enumerate(tree):
             out.update(_flatten(v, f"{prefix}{i}{_SEP}"))
-        if hasattr(tree, "_fields"):                  # NamedTuple
-            pass
     elif tree is None:
         pass
     else:
@@ -66,13 +120,18 @@ def _tree_structure(tree: Tree):
 
 def _rebuild(struct, leaves: Dict[str, Any], prefix="") -> Tree:
     k = struct["__kind__"]
-    if k == "dict":
-        return {key: _rebuild(v, leaves, f"{prefix}{key}{_SEP}")
-                for key, v in struct["items"].items()}
     if k in ("list", "tuple", "namedtuple"):
         items = [_rebuild(v, leaves, f"{prefix}{i}{_SEP}")
                  for i, v in enumerate(struct["items"])]
-        return items if k == "list" else tuple(items)
+        if k == "list":
+            return items
+        if k == "namedtuple":
+            cls = _resolve_namedtuple(struct["cls"], struct["fields"])
+            return cls(*items)
+        return tuple(items)
+    if k == "dict":
+        return {key: _rebuild(v, leaves, f"{prefix}{key}{_SEP}")
+                for key, v in struct["items"].items()}
     if k == "none":
         return None
     return leaves[prefix[:-1]]
@@ -89,13 +148,13 @@ def save(tree: Tree, directory: str, step: int, keep: int = 3,
     for k, v in flat.items():
         arr = np.asarray(jax.device_get(v))
         dtype_name = str(arr.dtype)
-        if arr.dtype.kind == "V" or dtype_name == "bfloat16":
-            # numpy can't serialize ml_dtypes (bf16/f8): store raw bits
+        if arr.dtype.type.__module__ == "ml_dtypes":
+            # numpy can't serialize extension dtypes (bf16 is void-kind,
+            # float8_e5m2 even claims kind 'f' but np.load rejects '<f1'):
+            # store raw bits, remember the true name once — restore views
+            # the bits back through ml_dtypes
             arr = arr.view(np.uint16 if arr.dtype.itemsize == 2
                            else np.uint8)
-            dtype_name = "bfloat16" if arr.dtype.itemsize == 2 else \
-                "float8_e4m3fn"
-            dtype_name = str(np.asarray(jax.device_get(v)).dtype)
         host[k] = arr
         meta[k] = {"shape": list(arr.shape), "dtype": dtype_name}
 
@@ -108,10 +167,11 @@ def save(tree: Tree, directory: str, step: int, keep: int = 3,
                                    "meta": meta}))
         np.savez(os.path.join(tmp, "shard_0.npz"),
                  **{k.replace(_SEP, "__"): v for k, v in host.items()})
-        if os.path.exists(final):
-            shutil.rmtree(final)
-        os.rename(tmp, final)
-        _gc(directory, keep)
+        with _IO_LOCK:
+            if os.path.exists(final):
+                shutil.rmtree(final)
+            os.rename(tmp, final)
+            _gc(directory, keep)
 
     if async_:
         t = threading.Thread(target=write, daemon=True)
@@ -122,8 +182,10 @@ def save(tree: Tree, directory: str, step: int, keep: int = 3,
 
 
 def _gc(directory: str, keep: int):
+    # caller holds _IO_LOCK
     steps = list_steps(directory)
-    for s in steps[:-keep]:
+    doomed = steps if keep <= 0 else steps[:-keep]
+    for s in doomed:
         shutil.rmtree(os.path.join(directory, f"step_{s}"),
                       ignore_errors=True)
 
@@ -149,23 +211,24 @@ def restore(directory: str, step: Optional[int] = None,
             shardings: Optional[Tree] = None) -> Tuple[Tree, int]:
     """Restore; if ``shardings`` (a matching pytree of NamedSharding) is
     given, arrays are device_put with it — elastic across mesh changes."""
-    if step is None:
-        step = latest_step(directory)
-        if step is None:
-            raise FileNotFoundError(f"no checkpoints in {directory}")
-    d = os.path.join(directory, f"step_{step}")
-    with open(os.path.join(d, "manifest.msgpack"), "rb") as f:
-        man = msgpack.unpackb(f.read())
-    z = np.load(os.path.join(d, "shard_0.npz"))
     import ml_dtypes
-    leaves = {}
-    for k in z.files:
-        path = k.replace("__", _SEP)
-        arr = z[k]
-        want = man["meta"][path]["dtype"]
-        if str(arr.dtype) != want:
-            arr = arr.view(np.dtype(getattr(ml_dtypes, want, want)))
-        leaves[path] = arr
+    with _IO_LOCK:
+        if step is None:
+            step = latest_step(directory)
+            if step is None:
+                raise FileNotFoundError(f"no checkpoints in {directory}")
+        d = os.path.join(directory, f"step_{step}")
+        with open(os.path.join(d, "manifest.msgpack"), "rb") as f:
+            man = msgpack.unpackb(f.read())
+        z = np.load(os.path.join(d, "shard_0.npz"))
+        leaves = {}
+        for k in z.files:
+            path = k.replace("__", _SEP)
+            arr = z[k]
+            want = man["meta"][path]["dtype"]
+            if str(arr.dtype) != want:
+                arr = arr.view(np.dtype(getattr(ml_dtypes, want, want)))
+            leaves[path] = arr
     tree = _rebuild(man["structure"], leaves)
     if shardings is not None:
         flat_s = _flatten(shardings)

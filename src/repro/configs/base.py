@@ -207,6 +207,12 @@ class DFAConfig:
     #              exchange over pod). A flow observed on ANY port lands in
     #              exactly one ring, which is what makes the (pod, shard)
     #              factorization of the mesh invisible in the merged state.
+    #   "rendezvous" — elastic scheme: highest-random-weight hashing over
+    #              the ``home_nodes`` roster; flow id = node_id *
+    #              flows_per_shard + slot hash. A pod join/leave re-homes
+    #              only the affected node's ~1/pods of flows (HRW
+    #              restriction property) instead of reshuffling the whole
+    #              range-sharded keyspace.
     flow_home: str = "ingest"
     # pod axis size ``launch.mesh.make_dfa_mesh`` builds the mesh with
     # (the mesh, not this field, is authoritative inside DFASystem)
@@ -224,6 +230,20 @@ class DFAConfig:
     reporter_slots: int = 0
     # per-PORT due-report capacity; 0 = report_capacity // total_ports
     port_report_capacity: int = 0
+    # -- elastic operations (launch.elastic) -----------------------------
+    # logical node roster for flow_home="rendezvous": one stable node id
+    # per mesh device (pod-major, strictly increasing); () = 0..n_devices-1.
+    # HRW homes flows onto node IDS, so removing a pod shrinks the roster
+    # without renumbering survivors — their flows (and ring state) stay put.
+    home_nodes: Tuple[int, ...] = ()
+    # snapshot the full DFAState every N completed periods (0 = never);
+    # the replay window after a pod loss is at most this many periods
+    snapshot_every_periods: int = 0
+    # where stream()/ServingLoop write snapshots ("" = caller must pass
+    # a directory explicitly to enable snapshotting)
+    snapshot_dir: str = ""
+    # keep-last-k snapshot GC (checkpoint.save's ``keep``)
+    snapshot_keep: int = 3
     # -- continuous online serving (launch.serving) ----------------------
     # offered event rate the trace-replay source feeds the serving loop,
     # in events/second across the whole mesh; 0 = line rate (exactly one

@@ -171,11 +171,27 @@ class DFASystem:
         self.mesh_pods = int(sizes.get("pod", 1))
         self.shards_per_pod = self.n_shards // self.mesh_pods
         self.total_flows = self.n_shards * cfg.flows_per_shard
-        if cfg.flow_home not in ("ingest", "hash"):
+        if cfg.flow_home not in ("ingest", "hash", "rendezvous"):
             raise ValueError(
-                f"flow_home must be 'ingest' or 'hash', got "
+                f"flow_home must be 'ingest', 'hash' or 'rendezvous', got "
                 f"{cfg.flow_home!r}")
-        self.multipod = cfg.flow_home == "hash"
+        self.multipod = cfg.flow_home in ("hash", "rendezvous")
+        if cfg.flow_home == "rendezvous":
+            nodes = tuple(cfg.home_nodes) or tuple(range(self.n_shards))
+            if len(nodes) != self.n_shards:
+                raise ValueError(
+                    f"home_nodes has {len(nodes)} entries for a "
+                    f"{self.n_shards}-device mesh: one logical node id "
+                    "per device (pod-major), so the rendezvous winner "
+                    "set and the mesh agree on who owns what")
+            if any(b <= a for a, b in zip(nodes, nodes[1:])) or nodes[0] < 0:
+                raise ValueError(
+                    f"home_nodes must be strictly increasing non-negative "
+                    f"ids, got {nodes}: sorted order is what keeps HRW "
+                    "tie-breaking and node_position lookups mesh-invariant")
+            self.home_nodes: Tuple[int, ...] = nodes
+        else:
+            self.home_nodes = tuple(range(self.n_shards))
         if not self.multipod:
             if self.mesh_pods > 1:
                 raise ValueError(
@@ -421,6 +437,10 @@ class DFASystem:
         cap2 = S * cap1                         # stage-2 bucket capacity
         fps = cfg.flows_per_shard               # rings per device
         G = self.total_flows
+        hrw = cfg.flow_home == "rendezvous"
+        # logical node roster (pod-major positions -> stable node ids);
+        # replicated constant inside the shard_map closure
+        nodes_arr = jnp.asarray(self.home_nodes, jnp.uint32)
 
         def local(rep_st, tr_st, coll_st, ev_ts, ev_sz, ev_tu, ev_va,
                   now_):
@@ -432,7 +452,12 @@ class DFASystem:
             for a in self.shard_axes:
                 sp = sp * axis_size(a) + jax.lax.axis_index(a)
             dev = pod * S + sp
-            flow_base = dev * fps
+            if hrw:
+                # flow ids encode the stable node id, not the position
+                flow_base = (nodes_arr[dev]
+                             * jnp.uint32(fps)).astype(jnp.int32)
+            else:
+                flow_base = dev * fps
             # cumulative counters BEFORE this period (for metric deltas)
             collisions0 = jnp.sum(rep_st.collisions)
             bad_csum0 = jnp.sum(coll_st.bad_checksum)
@@ -470,7 +495,11 @@ class DFASystem:
                 # wire field) — stable across mesh factorizations
                 gid = dev * P_l + p
                 rid = (gid % COLL.N_REPORTERS).astype(jnp.uint32)
-                fids = TRANS.home_flow_ids(pst.keys[slots], G)
+                if hrw:
+                    fids = TRANS.rendezvous_flow_ids(
+                        pst.keys[slots], nodes_arr, fps)
+                else:
+                    fids = TRANS.home_flow_ids(pst.keys[slots], G)
                 pst, reports = REP.make_reports(
                     pst, slots, mask, now_, rid, 0, self.rep_cfg,
                     flow_ids=fids)
@@ -494,8 +523,13 @@ class DFASystem:
             mask = jnp.concatenate(masks_l)
             sent = jnp.sum(mask)
             # stage 1: intra-pod all_to_all by home shard
-            _, hshard, _ = TRANS.home_coords(reports[:, 0], fps, S,
-                                             self.n_shards)
+            if hrw:
+                pos1 = TRANS.node_position(
+                    reports[:, 0] // jnp.uint32(fps), nodes_arr)
+                hshard = pos1 % S
+            else:
+                _, hshard, _ = TRANS.home_coords(reports[:, 0], fps, S,
+                                                 self.n_shards)
             b1, m1 = TRANS.route_by_dest(reports, mask, hshard, S, cap1)
             drop1 = sent - jnp.sum(m1)
             if self.shard_axes:
@@ -507,8 +541,12 @@ class DFASystem:
             r1 = b1.reshape(S * cap1, PROTO.REPORT_WORDS)
             m1 = m1.reshape(S * cap1)
             # stage 2: cross-pod exchange by home pod
-            hpod, _, _ = TRANS.home_coords(r1[:, 0], fps, S,
-                                           self.n_shards)
+            if hrw:
+                hpod = TRANS.node_position(
+                    r1[:, 0] // jnp.uint32(fps), nodes_arr) // S
+            else:
+                hpod, _, _ = TRANS.home_coords(r1[:, 0], fps, S,
+                                               self.n_shards)
             b2, m2 = TRANS.route_by_dest(r1, m1, hpod, pods, cap2)
             drop2 = jnp.sum(m1) - jnp.sum(m2)
             if self.pod_axis is not None:
@@ -757,6 +795,9 @@ class DFASystem:
             "ports_per_device": self.ports_per_device,
             "reporter_slots": self.rep_cfg.flows_per_shard,
             "port_report_capacity": self.port_capacity,
+            # elastic knobs (launch.elastic reads the same fields)
+            "home_nodes": self.home_nodes,
+            "snapshot_every_periods": cfg.snapshot_every_periods,
             "overlap_periods": cfg.overlap_periods,
             "inference_head": ("custom" if (self.infer_fn is not None
                                             and self.infer_params is None)
@@ -802,7 +843,9 @@ class DFASystem:
 
     def stream(self, state: DFAState, events: Dict[str, jax.Array],
                nows: jax.Array, overlapped: Optional[bool] = None,
-               donate: bool = False) -> StepOutputs:
+               donate: bool = False,
+               snapshot_dir: Optional[str] = None,
+               snapshot_start: int = 0) -> StepOutputs:
         """THE streaming entry point: run T monitoring periods and return
         :class:`StepOutputs`, dispatching between the sequential and the
         software-pipelined driver (``overlapped`` defaults to
@@ -812,9 +855,62 @@ class DFASystem:
         Subsumes the jit_stream/run_periods* juggling at call sites: one
         call, one structured return, jit caches shared across calls.
         ``donate=True`` donates the state carry (the caller must not
-        reuse the passed-in state afterwards — streaming-loop shape)."""
-        return self.jit_stream(donate=donate, overlapped=overlapped)(
-            state, events, nows)
+        reuse the passed-in state afterwards — streaming-loop shape).
+
+        With ``cfg.snapshot_every_periods > 0`` and a snapshot directory
+        (``snapshot_dir`` argument, else ``cfg.snapshot_dir``), the trace
+        runs in chunks of that many periods with an async full-DFAState
+        checkpoint at each chunk boundary AND after the final (possibly
+        partial) chunk — so the on-disk replay window is at most
+        ``snapshot_every_periods``. Checkpoint steps are GLOBAL period
+        indices, offset by ``snapshot_start`` (pass the restored period
+        when resuming after a recovery). The chunked run is bitwise
+        identical to the unchunked one (pinned in tests): snapshotting is
+        pure observation, ``checkpoint.save`` copies to host before the
+        next chunk touches the carry."""
+        every = int(self.cfg.snapshot_every_periods)
+        sdir = snapshot_dir if snapshot_dir is not None \
+            else (self.cfg.snapshot_dir or None)
+        if every <= 0 or sdir is None:
+            return self.jit_stream(donate=donate, overlapped=overlapped)(
+                state, events, nows)
+        return self._stream_snapshotted(state, events, nows, overlapped,
+                                        donate, sdir, every,
+                                        int(snapshot_start))
+
+    def _stream_snapshotted(self, state, events, nows, overlapped,
+                            donate, sdir, every, start):
+        from repro.checkpoint import checkpoint as CKPT
+        T = int(nows.shape[0])
+        outs = []
+        threads = []
+        for lo in range(0, T, every):
+            hi = min(lo + every, T)
+            ev = {k: v[lo:hi] for k, v in events.items()}
+            # chunk 0 honors the caller's donate contract; the internal
+            # carry is always ours to donate
+            out = self.jit_stream(donate=donate if lo == 0 else True,
+                                  overlapped=overlapped)(
+                state, ev, nows[lo:hi])
+            state = out.state
+            # async snapshot: save() device_gets synchronously (the carry
+            # is safe to donate to the next chunk), only the file IO rides
+            # the background thread
+            t = CKPT.save(state, sdir, step=start + hi,
+                          keep=self.cfg.snapshot_keep, async_=True)
+            if t is not None:
+                threads.append(t)
+            outs.append(out)
+        for t in threads:
+            t.join()
+        if len(outs) == 1:
+            return outs[0]
+        stacked = jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0),
+                               *[o._replace(state=None, preds=None)
+                                 for o in outs])
+        preds = (None if outs[0].preds is None else
+                 jnp.concatenate([o.preds for o in outs], axis=0))
+        return stacked._replace(state=state, preds=preds)
 
     def event_specs(self, events_per_shard: int, periods: int = 0):
         """ShapeDtypeStructs + shardings for the global event batch; with

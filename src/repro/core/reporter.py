@@ -57,12 +57,22 @@ def init_state(cfg: DFAConfig) -> ReporterState:
     )
 
 
-def hash_slot(five_tuple: jax.Array, n_slots: int) -> jax.Array:
-    """FNV-1a style hash of the 5 identity words -> slot index."""
+def hash_u32(five_tuple: jax.Array) -> jax.Array:
+    """Raw FNV-1a u32 hash of the 5 identity words (no table reduction).
+
+    The full-width hash is the shared key identity both homing schemes
+    derive from: ``hash_slot`` masks it into a table, the rendezvous
+    scheme mixes it per-node (translator.rendezvous_flow_ids)."""
     h = jnp.full(five_tuple.shape[:-1], 0x811C9DC5, jnp.uint32)
     for i in range(5):
         h = (h ^ five_tuple[..., i].astype(jnp.uint32)) * jnp.uint32(
             0x01000193)
+    return h
+
+
+def hash_slot(five_tuple: jax.Array, n_slots: int) -> jax.Array:
+    """FNV-1a style hash of the 5 identity words -> slot index."""
+    h = hash_u32(five_tuple)
     if n_slots & (n_slots - 1) == 0:
         # power-of-two table (every shipped config): the modulo is a
         # mask — bit-identical to ``h % n_slots``, no division per event

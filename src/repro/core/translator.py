@@ -142,6 +142,70 @@ def home_coords(flow_id: jax.Array, flows_per_shard: int,
     return dev // shards_per_pod, dev % shards_per_pod, dev
 
 
+def _mix32(x: jax.Array) -> jax.Array:
+    """Finalizer-style u32 bijection (xor-shift-multiply avalanche); keeps
+    the per-node rendezvous scores independent of the raw FNV structure."""
+    x = x.astype(jnp.uint32)
+    x = x ^ (x >> 16)
+    x = x * jnp.uint32(0x7FEB352D)
+    x = x ^ (x >> 15)
+    x = x * jnp.uint32(0x846CA68B)
+    x = x ^ (x >> 16)
+    return x
+
+
+# decorrelates the ring-slot hash from the per-node rendezvous scores
+_HRW_SLOT_SALT = 0x9E3779B9
+
+
+def rendezvous_position(key_hash: jax.Array, node_ids: jax.Array
+                        ) -> jax.Array:
+    """Highest-random-weight (HRW) winner for each key over ``node_ids``.
+
+    Scores depend only on (key_hash, node id) — NOT on the node's position
+    in the mesh — so removing a node leaves every other key's winner
+    unchanged (the HRW restriction property). Returns the winner's
+    POSITION in ``node_ids`` (i32); ties (~2^-32 per pair) break toward
+    the lower position, which is mesh-invariant because ``node_ids`` is
+    kept sorted.
+    """
+    nid = node_ids.astype(jnp.uint32)
+    salt = _mix32(nid * jnp.uint32(0x9E3779B9) + jnp.uint32(1))
+    scores = _mix32(key_hash.astype(jnp.uint32)[..., None] ^ salt)
+    return jnp.argmax(scores, axis=-1).astype(jnp.int32)
+
+
+def rendezvous_flow_ids(keys: jax.Array, node_ids: jax.Array,
+                        flows_per_shard: int) -> jax.Array:
+    """Elastic flow identity: ``flow_id = node_id * fps + slot`` where
+    ``node_id`` is the key's HRW winner over the *logical* node set and
+    ``slot`` is an independent hash into the node's ring.
+
+    Encoding the stable node id (not the mesh position) into the flow id
+    is what lets surviving nodes' ring state move between meshes bitwise:
+    their flows keep the same ids, only dead-node flows re-home."""
+    from repro.core.reporter import hash_u32
+    kh = hash_u32(keys)
+    pos = rendezvous_position(kh, node_ids)
+    slot = _mix32(kh ^ jnp.uint32(_HRW_SLOT_SALT))
+    fps = int(flows_per_shard)
+    if fps & (fps - 1) == 0:
+        slot = slot & jnp.uint32(fps - 1)
+    else:
+        slot = slot % jnp.uint32(fps)
+    return (node_ids.astype(jnp.uint32)[pos] * jnp.uint32(fps)
+            + slot).astype(jnp.uint32)
+
+
+def node_position(node: jax.Array, node_ids: jax.Array) -> jax.Array:
+    """Stable node id -> its position in the sorted ``node_ids`` roster
+    (= mesh device index, pod-major). Ids not in the roster clip to the
+    nearest position; callers guarantee membership."""
+    pos = jnp.searchsorted(node_ids.astype(jnp.uint32),
+                           node.astype(jnp.uint32))
+    return jnp.clip(pos, 0, node_ids.shape[0] - 1).astype(jnp.int32)
+
+
 def canonical_order(reports: jax.Array, mask: jax.Array
                     ) -> Tuple[jax.Array, jax.Array]:
     """Arrival-order canonicalization at the home translator: sort the

@@ -15,7 +15,7 @@ import json
 import os
 import time
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, Optional
+from typing import Any, Callable, Dict, Iterable, Optional, Union
 
 
 @dataclass
@@ -54,11 +54,19 @@ class Heartbeat:
     (pod, shard) mesh the process serves, so the coordinator can tell a
     single straggler from a whole pod losing its ICI/power domain (the
     multi-pod stream can drain and re-home a pod's port set; a lone dead
-    process is a restart)."""
+    process is a restart).
+
+    ``expected_peers`` registers the roster up front — either a mapping
+    {process_index: pod} or an iterable of process indices (pod 0). A
+    registered peer that has *never* written a beat file (died before its
+    first beat, or its file is unreadable) is reported dead with
+    ``age=inf``; without a roster such a process is invisible, which is
+    fatal for the elastic pod-loss trigger."""
     directory: str
     process_index: int = 0
     stale_after_s: float = 60.0
     pod: int = 0
+    expected_peers: Optional[Union[Dict[int, int], Iterable[int]]] = None
 
     def beat(self, step: int):
         os.makedirs(self.directory, exist_ok=True)
@@ -82,22 +90,36 @@ class Heartbeat:
             out.setdefault(pod, {})[idx] = age
         return out
 
+    def _expected(self) -> Dict[int, int]:
+        if self.expected_peers is None:
+            return {}
+        if isinstance(self.expected_peers, dict):
+            return {int(k): int(v) for k, v in self.expected_peers.items()}
+        return {int(i): 0 for i in self.expected_peers}
+
     def _stale(self) -> Dict[int, tuple]:
         now = time.time()
         out: Dict[int, tuple] = {}
-        if not os.path.isdir(self.directory):
-            return out
-        for name in os.listdir(self.directory):
-            if not name.startswith("hb_") or not name.endswith(".json"):
-                continue
-            try:
-                with open(os.path.join(self.directory, name)) as f:
-                    d = json.load(f)
-                age = now - d["t"]
+        seen: set = set()
+        if os.path.isdir(self.directory):
+            for name in os.listdir(self.directory):
+                if not name.startswith("hb_") or not name.endswith(".json"):
+                    continue
+                try:
+                    idx = int(name[3:-5])
+                    with open(os.path.join(self.directory, name)) as f:
+                        d = json.load(f)
+                    age = now - d["t"]
+                except (json.JSONDecodeError, OSError, ValueError,
+                        KeyError, TypeError):
+                    # unparsable beat counts as never-beaten, not healthy
+                    continue
+                seen.add(idx)
                 if age > self.stale_after_s:
-                    out[int(name[3:-5])] = (age, int(d.get("pod", 0)))
-            except (json.JSONDecodeError, OSError, ValueError):
-                continue
+                    out[idx] = (age, int(d.get("pod", 0)))
+        for idx, pod in self._expected().items():
+            if idx not in seen:
+                out[idx] = (float("inf"), pod)
         return out
 
 
@@ -109,9 +131,17 @@ def run_with_restart(step_fn: Callable[[Any, int], Any], state: Any,
                      max_restarts: int = 3,
                      monitor: Optional[StepMonitor] = None,
                      on_metrics: Optional[Callable] = None):
-    """Crash-tolerant training loop driver."""
+    """Crash-tolerant training loop driver.
+
+    Restore falls back to the caller's ``(state, start_step)`` when no
+    checkpoint exists yet (a crash before the first save must count
+    against ``max_restarts``, not escape as FileNotFoundError), and the
+    final state is always saved on loop exit, so the tail
+    ``num_steps % checkpoint_every`` steps survive a later process death.
+    """
     restarts = 0
     step = start_step
+    initial = (state, start_step)
     while step < num_steps:
         try:
             if monitor:
@@ -124,11 +154,15 @@ def run_with_restart(step_fn: Callable[[Any, int], Any], state: Any,
             step += 1
             if step % checkpoint_every == 0:
                 save_fn(state, step)
-        except (RuntimeError, ValueError, FloatingPointError) as e:
+        except (RuntimeError, ValueError, FloatingPointError):
             restarts += 1
             if restarts > max_restarts:
                 raise
-            state, step = restore_fn()
+            try:
+                state, step = restore_fn()
+            except FileNotFoundError:
+                state, step = initial
             if monitor:
                 monitor.consecutive_slow = 0
+    save_fn(state, step)
     return state, step

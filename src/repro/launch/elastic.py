@@ -1,0 +1,256 @@
+"""Elastic pod failure recovery: snapshot → survivor mesh → minimal re-home.
+
+The operable-service half of the multi-pod stream (ROADMAP "Elastic
+multi-pod operations"). A pod dies mid-stream; this module rebuilds the
+system on the surviving ``(pods-1, shards_per_pod)`` mesh from the last
+snapshot and moves ONLY the dead pod's state:
+
+    Heartbeat.dead_peers_by_pod() fires (whole pod stale / never beat)
+        │
+        ▼
+    checkpoint.restore(snapshot_dir)      — last full DFAState + period
+        │
+        ▼
+    survivor_config / survivor_system     — pods-1, same total port set,
+        │                                   home_nodes minus the dead
+        │                                   pod's node ids
+        ▼
+    rehome_state                          — survivors' blocks move bitwise
+        │                                   (flow ids encode stable node
+        │                                   ids); dead-node ring entries
+        │                                   re-home by HRW over survivors
+        ▼
+    device_put on the new mesh → resume stream() from the restored period
+
+Why this can be *bitwise* correct (modulo the replay window, pinned in
+tests/test_elastic_equiv.py):
+
+* ``flow_home="rendezvous"`` homes each key on an HRW winner over the
+  ``home_nodes`` roster. HRW's restriction property: removing nodes never
+  changes the winner among the survivors — so every surviving flow keeps
+  its node, its flow id, its ring row, its history counter. Only the dead
+  node's ~1/pods of flows move.
+* Reporter state is per-PORT and port-major-global (PR 5): the survivor
+  mesh hosts the same total port set (more ports per device), so the
+  reporter arrays transfer unchanged — the report streams and per-port
+  seq numbering replay identically.
+* Ring payloads store the five-tuple (words 8-12), so a dead flow's new
+  home is recomputable from the entry itself; word 0 is rewritten to the
+  new ``node_id * fps + slot`` id and the rotate-xor checksum (word 14)
+  is refolded. The slot hash does not depend on the node set, so the
+  ring ROW index (slot) is preserved — only the node block changes.
+
+What cannot move bitwise: nothing in the happy path; slot collisions
+involving a dead-node flow (a second key sharing the same ring slot and
+landing on the same survivor node) interleave two flows' entries and a
+shared history counter that cannot be split — probability ~#flows/ring
+capacity per dead flow, and the differential test's traces are
+collision-free for their fixed seeds.
+
+Replay window: work since the last snapshot is lost and must be re-fed
+(at most ``cfg.snapshot_every_periods`` periods); the differential test
+replays it and requires exact equality with a clean run.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import checkpoint as CKPT
+from repro.core import collector as COLL
+from repro.core import protocol as PROTO
+from repro.core import reporter as REP
+from repro.core import translator as TRANS
+from repro.core.pipeline import DFAState, DFASystem
+from repro.distributed.monitor import Heartbeat
+from repro.launch.mesh import make_dfa_mesh
+
+
+def survivor_config(system: DFASystem, dead_pod: int):
+    """The dead-pod-removed config: pods-1, SAME total port set (the
+    survivor mesh absorbs the dead pod's ports), home_nodes minus the
+    dead pod's node ids."""
+    cfg = system.cfg
+    if cfg.flow_home != "rendezvous":
+        raise ValueError(
+            f"elastic recovery needs flow_home='rendezvous', got "
+            f"{cfg.flow_home!r}: the range-sharded 'hash' scheme renumbers "
+            "every flow when the device count changes, so a pod loss would "
+            "reshuffle the whole keyspace instead of ~1/pods of it")
+    pods, S = system.mesh_pods, system.shards_per_pod
+    if pods < 2:
+        raise ValueError("cannot remove a pod from a single-pod mesh")
+    if not 0 <= dead_pod < pods:
+        raise ValueError(f"dead_pod={dead_pod} not in [0, {pods})")
+    if system.total_ports % (pods - 1):
+        raise ValueError(
+            f"total ports {system.total_ports} do not spread over "
+            f"{pods - 1} surviving pods")
+    survivors = (system.home_nodes[:dead_pod * S]
+                 + system.home_nodes[(dead_pod + 1) * S:])
+    return dataclasses.replace(
+        cfg, pods=pods - 1,
+        ports_per_pod=system.total_ports // (pods - 1),
+        home_nodes=survivors)
+
+
+def survivor_system(system: DFASystem, dead_pod: int,
+                    devices=None) -> DFASystem:
+    """A DFASystem on the ``(pods-1, shards_per_pod)`` mesh (by default on
+    a prefix of ``jax.devices()`` — single-host simulation; pass the
+    surviving processes' devices on a real fleet)."""
+    cfg = survivor_config(system, dead_pod)
+    mesh = make_dfa_mesh(cfg.pods, system.shards_per_pod, devices=devices)
+    return DFASystem(cfg, mesh, infer_fn=system.infer_fn)
+
+
+def _np_tree(tree):
+    return jax.tree.map(lambda a: np.asarray(jax.device_get(a)), tree)
+
+
+def _refold_checksum(payload: np.ndarray) -> np.ndarray:
+    """Recompute word 14 after a word-0 rewrite (host-side, tiny)."""
+    covered = jnp.asarray(payload[..., list(PROTO.CSUM_COVERED)])
+    pos = jnp.asarray(PROTO.CSUM_COVERED, jnp.uint32)
+    out = payload.copy()
+    out[..., PROTO.CSUM_WORD] = np.asarray(
+        PROTO.xor_checksum(covered, pos))
+    return out
+
+
+def rehome_state(state: DFAState, old_system: DFASystem,
+                 new_system: DFASystem, dead_pod: int) -> DFAState:
+    """Move a full-mesh DFAState onto the survivor roster (host-side).
+
+    Survivor node blocks copy bitwise to their new pod-major positions;
+    the dead pod's ring entries re-home per entry via HRW over the
+    survivor roster (the stored five-tuple is the key), with flow-id
+    word 0 rewritten and the checksum refolded. Per-device merge-only
+    stats (last_seq, scalar counters) fold the dead devices' values into
+    survivor device 0 — the merged view (elementwise max / sum) is what
+    the pod-count-invariance contract defines, and it is preserved.
+    """
+    st = _np_tree(state)
+    S = old_system.shards_per_pod
+    fps = old_system.cfg.flows_per_shard
+    H = old_system.cfg.history
+    old_nodes = list(old_system.home_nodes)
+    new_nodes = list(new_system.home_nodes)
+    dead_pos = list(range(dead_pod * S, (dead_pod + 1) * S))
+    surv_pos = [i for i in range(len(old_nodes)) if i not in dead_pos]
+    n_new = len(new_nodes)
+    assert [old_nodes[i] for i in surv_pos] == new_nodes
+
+    # reporter: port-major global arrays — the survivor mesh hosts the
+    # same total port set, so they transfer unchanged
+    rep = st.reporter
+
+    # translator + collector: per-node blocks move to new positions
+    hist = np.zeros((n_new * fps,), st.translator.hist_counter.dtype)
+    mem = np.zeros((n_new * fps,) + st.collector.memory.shape[1:],
+                   st.collector.memory.dtype)
+    valid = np.zeros((n_new * fps, H), st.collector.entry_valid.dtype)
+    nseq = np.zeros((n_new, COLL.N_REPORTERS), st.collector.last_seq.dtype)
+    old_seq = st.collector.last_seq.reshape(len(old_nodes),
+                                            COLL.N_REPORTERS)
+    scalars = {k: np.zeros((n_new,), getattr(st.collector, k).dtype)
+               for k in ("bad_checksum", "seq_anomalies", "received")}
+    for new_i, old_i in enumerate(surv_pos):
+        src = slice(old_i * fps, (old_i + 1) * fps)
+        dst = slice(new_i * fps, (new_i + 1) * fps)
+        hist[dst] = st.translator.hist_counter[src]
+        mem[dst] = st.collector.memory[src]
+        valid[dst] = st.collector.entry_valid[src]
+        nseq[new_i] = old_seq[old_i]
+        for k in scalars:
+            scalars[k][new_i] = getattr(st.collector, k)[old_i]
+
+    # dead pod: re-home each ring row by the stored five-tuple
+    nodes_arr = jnp.asarray(new_nodes, jnp.uint32)
+    moved_rows = 0
+    for old_i in dead_pos:
+        base = old_i * fps
+        rows = np.nonzero(st.collector.entry_valid[base:base + fps]
+                          .any(axis=1))[0]
+        for r in rows:
+            ev = st.collector.entry_valid[base + r]
+            h0 = int(np.nonzero(ev)[0][0])
+            key = st.collector.memory[base + r, h0, 8:13]
+            kh = REP.hash_u32(jnp.asarray(key))
+            pos = int(TRANS.rendezvous_position(kh[None], nodes_arr)[0])
+            node = new_nodes[pos]
+            dst = pos * fps + r             # slot hash is roster-free
+            pay = st.collector.memory[base + r].copy()
+            live = ev.astype(bool)
+            pay[live, 0] = np.uint32(node * fps + r)
+            pay[live] = _refold_checksum(pay[live])
+            mem[dst, live] = pay[live]
+            valid[dst] |= ev
+            # the history counter travels with the flow (all entries of a
+            # collision-free row share one key → one destination)
+            hist[dst] = st.translator.hist_counter[base + r]
+            moved_rows += 1
+        # merge-only per-device stats fold into survivor 0
+        nseq[0] = np.maximum(nseq[0], old_seq[old_i])
+        for k in scalars:
+            scalars[k][0] += getattr(st.collector, k)[old_i]
+
+    coll = COLL.CollectorState(
+        memory=mem, entry_valid=valid, last_seq=nseq.reshape(-1),
+        bad_checksum=scalars["bad_checksum"],
+        seq_anomalies=scalars["seq_anomalies"],
+        received=scalars["received"])
+    return DFAState(rep, TRANS.TranslatorState(hist), coll)
+
+
+def recover_from_snapshot(system: DFASystem, snapshot_dir: str,
+                          dead_pod: int, devices=None,
+                          step: Optional[int] = None
+                          ) -> Tuple[DFASystem, DFAState, int]:
+    """Full recovery: restore the last snapshot, rebuild on the survivor
+    mesh, re-home the dead pod's flows, place on-device.
+
+    Returns ``(new_system, new_state, period)`` — resume by re-feeding
+    the trace from ``period`` (the replay window), e.g.
+    ``new_system.stream(new_state, events[period:], nows[period:],
+    snapshot_start=period)``.
+    """
+    restored, period = CKPT.restore(snapshot_dir, step=step)
+    new_system = survivor_system(system, dead_pod, devices=devices)
+    rehomed = rehome_state(restored, system, new_system, dead_pod)
+    placed = jax.tree.map(
+        lambda a, s: jax.device_put(jnp.asarray(a), s),
+        rehomed, new_system.state_shardings())
+    return new_system, placed, int(period)
+
+
+def whole_dead_pods(hb: Heartbeat) -> List[int]:
+    """Pods whose EVERY registered process is stale or never beat.
+
+    Requires ``hb.expected_peers`` (the roster is what makes a process
+    that died before its first beat visible at all — monitor satellite)."""
+    expected = hb._expected()
+    if not expected:
+        return []
+    stale = hb.dead_peers()
+    per_pod: Dict[int, List[int]] = {}
+    for idx, pod in expected.items():
+        per_pod.setdefault(pod, []).append(idx)
+    return sorted(pod for pod, procs in per_pod.items()
+                  if all(i in stale for i in procs))
+
+
+def maybe_recover(hb: Heartbeat, system: DFASystem, snapshot_dir: str,
+                  devices=None
+                  ) -> Optional[Tuple[DFASystem, DFAState, int]]:
+    """The pod-loss trigger: if a whole pod is dead per the heartbeat
+    roster, recover onto the survivor mesh; None when all pods live."""
+    dead = whole_dead_pods(hb)
+    if not dead:
+        return None
+    return recover_from_snapshot(system, snapshot_dir, dead[0],
+                                 devices=devices)

@@ -99,6 +99,7 @@ class ServingReport:
     latency_us: List[float]           # one sample per period (incl drain)
     per_period: List[PeriodAccounting]
     last: object = dataclasses.field(default=None, repr=False)
+    snapshots: int = 0                # async DFAState checkpoints written
 
     @property
     def latency(self) -> Dict[str, float]:
@@ -142,7 +143,8 @@ class ServingLoop:
     either processed or accounted as dropped — never lost in flight."""
 
     def __init__(self, system, source: TraceReplaySource,
-                 budget_us: Optional[int] = None):
+                 budget_us: Optional[int] = None,
+                 snapshot_dir: Optional[str] = None):
         if source.batch_events % system.n_shards:
             raise ValueError(
                 f"batch_events={source.batch_events} must divide across "
@@ -154,6 +156,14 @@ class ServingLoop:
         self.ring = HostIngestRing(
             system, source.batch_events // system.n_shards)
         self._step = system.jit_step(donate=True)
+        # elastic: snapshot the full DFAState every N completed periods
+        # (cfg.snapshot_every_periods; 0 disables). The save's device_get
+        # happens after block_until_ready and BEFORE the next donated
+        # dispatch consumes the state, so only the file IO rides the
+        # background thread — the double-buffered upload never stalls.
+        self.snapshot_dir = (snapshot_dir if snapshot_dir is not None
+                             else (system.cfg.snapshot_dir or None))
+        self.snapshot_every = int(system.cfg.snapshot_every_periods)
 
     def run(self, periods: int, drain: bool = True,
             state=None) -> ServingReport:
@@ -167,6 +177,11 @@ class ServingLoop:
         violations = 0
         drained = 0
         out = None
+        snapshots = 0
+        snap_threads: List = []
+        snap_on = self.snapshot_every > 0 and self.snapshot_dir is not None
+        if snap_on:
+            from repro.checkpoint import checkpoint as CKPT
 
         batch, now, acct = source.next_batch()      # period 0, staged
         staged = self.ring.stage(batch, now)        # before the loop
@@ -192,16 +207,30 @@ class ServingLoop:
             latencies.append(lat_us)
             if lat_us > self.budget_us:
                 violations += 1
+            if snap_on and (t % self.snapshot_every == 0 or not has_next):
+                # out.state is fully materialized (block_until_ready just
+                # returned) and the next donated dispatch hasn't happened
+                # yet: save() copies to host synchronously here, then the
+                # writer thread owns the IO. The final period always
+                # snapshots, so a drain never strands a partial window.
+                th = CKPT.save(state, self.snapshot_dir, step=t,
+                               keep=system.cfg.snapshot_keep, async_=True)
+                if th is not None:
+                    snap_threads.append(th)
+                snapshots += 1
             if not has_next:
                 break
 
+        for th in snap_threads:
+            th.join()
         total = source.total
         return ServingReport(
             periods=periods, drained_periods=drained,
             budget_us=self.budget_us,
             offered=total.offered, processed=total.processed,
             dropped=total.dropped, violations=violations,
-            latency_us=latencies, per_period=accounts, last=out)
+            latency_us=latencies, per_period=accounts, last=out,
+            snapshots=snapshots)
 
 
 def serve_trace(system, events, nows=None, periods: int = 100,

@@ -1,6 +1,8 @@
-"""Checkpointing: roundtrip, atomicity, keep-k GC, async, elastic reshard."""
+"""Checkpointing: roundtrip, atomicity, keep-k GC, async, elastic reshard,
+NamedTuple class fidelity, extension-dtype round-trips."""
 import os
 import threading
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -66,3 +68,120 @@ def test_elastic_restore_resharding(tmp_path, tree):
     tree_eq(tree, got)
     for leaf in jax.tree.leaves(got):
         assert leaf.sharding == sh
+
+
+# -- NamedTuple class fidelity (regression: _rebuild used to return a
+#    plain tuple, so state.reporter.regs crashed after every restore) ----
+
+class Inner(NamedTuple):
+    counts: jax.Array
+    gone: Optional[jax.Array] = None
+
+
+class Outer(NamedTuple):
+    inner: Inner
+    tag: jax.Array
+
+
+def test_namedtuple_roundtrip_preserves_class(tmp_path):
+    """Nested NamedTuples with u32/bf16 leaves and None fields — the DFA
+    state tree shape — restore as the REAL classes with attribute
+    access, not anonymous tuples."""
+    C.register_namedtuple(Inner)
+    C.register_namedtuple(Outer)
+    t = Outer(Inner(counts=jnp.arange(5, dtype=jnp.uint32)),
+              tag=jnp.ones((3,), jnp.bfloat16))
+    C.save(t, str(tmp_path), step=1)
+    got, _ = C.restore(str(tmp_path))
+    assert type(got) is Outer and type(got.inner) is Inner
+    assert got.inner.gone is None
+    np.testing.assert_array_equal(np.asarray(got.inner.counts),
+                                  np.asarray(t.inner.counts))
+    assert got.tag.dtype == jnp.bfloat16
+    np.testing.assert_array_equal(np.asarray(got.tag, np.float32),
+                                  np.asarray(t.tag, np.float32))
+
+
+def test_unregistered_namedtuple_keeps_attribute_access(tmp_path):
+    """An unknown class still restores with its field names (dynamic
+    namedtuple) rather than silently degrading to a plain tuple."""
+    class Private(NamedTuple):
+        a: jax.Array
+        b: jax.Array
+
+    C.save(Private(jnp.zeros(2), jnp.ones(3)), str(tmp_path), step=1)
+    # simulate restoring in a process that never saw the class
+    C._NT_REGISTRY.pop("Private", None)
+    got, _ = C.restore(str(tmp_path))
+    assert got._fields == ("a", "b")
+    np.testing.assert_array_equal(np.asarray(got.b), np.ones(3))
+
+
+def test_dfa_state_roundtrip_bitwise_step(tmp_path):
+    """THE satellite anchor: save→restore a LIVE DFAState and run one
+    dfa_step on it — bitwise identical to stepping the unsaved state.
+    Fails pre-fix with AttributeError on the first state.reporter."""
+    from repro.compat import make_mesh
+    from repro.configs import get_dfa_config
+    from repro.core.pipeline import DFAState, DFASystem
+    from repro.data import packets as PK
+    mesh = make_mesh((1, 1), ("data", "model"))
+    system = DFASystem(get_dfa_config(reduced=True), mesh)
+    flows = PK.gen_flows(8, seed=3)
+    ev = {k: jnp.asarray(v) for k, v in PK.events_for_shards(
+        flows, 0, system.n_shards, 128).items()}
+    with system.mesh:
+        step = jax.jit(system.dfa_step)
+        live = step(system.init_state(), ev, jnp.uint32(50_000)).state
+        C.save(live, str(tmp_path), step=1)
+        restored, _ = C.restore(str(tmp_path))
+        assert type(restored) is DFAState
+        out_a = step(live, ev, jnp.uint32(150_000))
+        out_b = step(restored, ev, jnp.uint32(150_000))
+    tree_eq(out_a, out_b)
+
+
+# -- extension dtypes (regression: the dead-code dtype path broke
+#    float8_e5m2 saves — np.load rejects its '<f1' descriptor) -----------
+
+@pytest.mark.parametrize("name", ["bfloat16", "float8_e4m3fn",
+                                  "float8_e5m2"])
+def test_extension_dtype_roundtrip(tmp_path, name):
+    import ml_dtypes
+    dt = getattr(ml_dtypes, name)
+    arr = jnp.asarray(np.arange(16).astype(np.float32)).astype(dt)
+    C.save({"x": arr}, str(tmp_path), step=1)
+    got, _ = C.restore(str(tmp_path))
+    assert str(got["x"].dtype) == name
+    np.testing.assert_array_equal(
+        np.asarray(got["x"]).view(np.uint8),
+        np.asarray(arr).view(np.uint8))
+
+
+# -- GC + async races (regression: keep=0 sliced steps[:-0] == nothing,
+#    and overlapping async writers raced rename + GC) --------------------
+
+def test_gc_keep_zero_deletes_everything(tmp_path, tree):
+    for s in (1, 2):
+        C.save(tree, str(tmp_path), step=s)
+    assert C.list_steps(str(tmp_path)) == [1, 2]
+    with C._IO_LOCK:
+        C._gc(str(tmp_path), keep=0)
+    assert C.list_steps(str(tmp_path)) == []
+    with C._IO_LOCK:
+        C._gc(str(tmp_path), keep=-1)   # any keep<=0 means keep nothing
+    assert C.list_steps(str(tmp_path)) == []
+
+
+def test_interleaved_async_saves_keep_last_k(tmp_path, tree):
+    """A burst of overlapping async saves must converge to exactly the
+    newest ``keep`` steps, every one of them restorable."""
+    threads = [C.save(tree, str(tmp_path), step=s, keep=3, async_=True)
+               for s in range(1, 9)]
+    for t in threads:
+        t.join()
+    assert C.list_steps(str(tmp_path)) == [6, 7, 8]
+    for s in (6, 7, 8):
+        got, step = C.restore(str(tmp_path), step=s)
+        assert step == s
+        tree_eq(tree, got)

@@ -1,0 +1,339 @@
+"""Elastic pod failure recovery: kill a pod mid-trace, prove nothing lost.
+
+The PR 5 harness proved the merged DFA state is mesh-factorization
+independent; this suite proves it is *roster*-independent under HRW
+homing plus snapshot/restore — the property that makes pod loss
+survivable:
+
+    (2,2) mesh, roster {0,1,2,3}, snapshots every 2 periods
+        │  pod 0 dies after period 4
+        ▼
+    recover_from_snapshot: restore period-4 snapshot, rebuild on a
+    (1,2) mesh with roster {2,3}, re-home ONLY the dead pod's flows
+        │  replay periods 5..T (the documented replay window)
+        ▼
+    merged end state + per-period outputs ≡ a clean run of the whole
+    trace on the (1,2)/{2,3} mesh — BITWISE.
+
+Why bitwise is achievable: HRW's restriction property (removing a node
+never changes surviving keys' winners), node-id-encoded flow ids
+(survivor ring blocks move without rewrites), port-major reporter state
+(the same total port set replays the same report streams), and the
+stored five-tuple in every ring entry (dead flows re-home from the entry
+itself). The replay window is exact here because the harness re-feeds
+the lost periods; live deployments lose at most
+``snapshot_every_periods`` periods of updates.
+
+Merged-state canonicalization follows test_multipod_equiv: reporter
+arrays are port-major global; translator/collector rows are compared on
+the shared node blocks; ``last_seq`` merges by elementwise max and the
+scalar telemetry counters by sum (their per-device placement is a
+topology artifact — recovery folds the dead pod's values into survivor
+device 0).
+"""
+import dataclasses
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import pod_mesh_or_skip
+from repro.checkpoint import checkpoint as CKPT
+from repro.configs.dfa import REDUCED
+from repro.core import reporter as REP
+from repro.core import translator as TRANS
+from repro.core.pipeline import DFASystem
+from repro.data import scenarios as SC
+from repro.launch import elastic as EL
+
+TOTAL_PORTS = 4
+EVENTS_PER_PORT = 48
+T = 6                    # trace periods; snapshots land at 2, 4, (6)
+KILL_AT = 4              # pod dies after this period's snapshot
+SNAP_EVERY = 2
+FPS = 512                # ring rows per device — FIXED across rosters
+REPORTER_SLOTS = 64      # per-PORT Marina table, fixed across rosters
+PORT_CAPACITY = 16
+
+_systems = {}
+_traces = {}
+
+
+def _cfg(pods, shards, nodes=()):
+    return dataclasses.replace(
+        REDUCED,
+        flow_home="rendezvous",
+        pods=pods,
+        ports_per_pod=TOTAL_PORTS // pods,
+        reporter_slots=REPORTER_SLOTS,
+        flows_per_shard=FPS,
+        port_report_capacity=PORT_CAPACITY,
+        home_nodes=nodes,
+        snapshot_every_periods=SNAP_EVERY,
+        kernel_backend="ref")
+
+
+def _system(pods, shards, nodes=()):
+    key = (pods, shards, nodes)
+    if key not in _systems:
+        mesh = pod_mesh_or_skip(pods, shards)
+        _systems[key] = DFASystem(_cfg(pods, shards, nodes), mesh)
+    return _systems[key]
+
+
+def _trace(name):
+    if name not in _traces:
+        ev, nows = SC.build(name, TOTAL_PORTS, EVENTS_PER_PORT, T)
+        _traces[name] = ({k: jnp.asarray(v) for k, v in ev.items()},
+                         jnp.asarray(nows))
+    return _traces[name]
+
+
+def _merged_state(system, state):
+    """Roster-canonical view of DFAState (see module docstring)."""
+    n = system.n_shards
+    out = {f"rep.{k}": np.asarray(a)
+           for k, a in state.reporter._asdict().items()}
+    out["tr.hist_counter"] = np.asarray(state.translator.hist_counter)
+    c = state.collector
+    out["coll.memory"] = np.asarray(c.memory)
+    out["coll.entry_valid"] = np.asarray(c.entry_valid)
+    out["coll.last_seq"] = np.asarray(c.last_seq).reshape(n, -1).max(0)
+    for k in ("bad_checksum", "seq_anomalies", "received"):
+        out[f"coll.{k}"] = np.asarray(getattr(c, k)).astype(
+            np.uint64).sum()
+    return out
+
+
+def _canon_periods(out):
+    """Per period: flow-id-sorted (fid, enriched) — row order inside a
+    period is an exchange artifact; the VALUES must match bitwise."""
+    enr, fid, em = (np.asarray(out.enriched), np.asarray(out.flow_ids),
+                    np.asarray(out.mask))
+    per = []
+    for t in range(enr.shape[0]):
+        m = em[t]
+        order = np.argsort(fid[t][m], kind="stable")
+        per.append({"fid": fid[t][m][order], "enr": enr[t][m][order]})
+    return per
+
+
+def _assert_state_eq(ref, got, ctx):
+    for k in ref:
+        np.testing.assert_array_equal(ref[k], got[k],
+                                      err_msg=f"{ctx}: state {k}")
+
+
+# -- HRW properties (pure translator, no mesh) ---------------------------
+
+def test_hrw_restriction_property(rng):
+    """Removing a node never changes a surviving key's winner — THE
+    property recovery correctness rests on."""
+    kh = jnp.asarray(rng.integers(0, 2**32, size=4096, dtype=np.uint32))
+    full = jnp.asarray(range(8), jnp.uint32)
+    pos_full = np.asarray(TRANS.rendezvous_position(kh, full))
+    for dead in (0, 3, 7):
+        survivors = np.asarray([n for n in range(8) if n != dead],
+                               np.uint32)
+        pos_sub = np.asarray(TRANS.rendezvous_position(
+            kh, jnp.asarray(survivors)))
+        stay = np.asarray(full)[pos_full] != dead
+        # survivors keep their winner...
+        np.testing.assert_array_equal(
+            survivors[pos_sub[stay]], np.asarray(full)[pos_full[stay]],
+            err_msg=f"dead={dead}: a surviving key changed home")
+        # ...and only ~1/8 of keys move at all (binomial 3-sigma bounds)
+        moved = float((~stay).mean())
+        assert 0.06 < moved < 0.20, \
+            f"dead={dead}: {moved:.3f} of keys moved, expected ~1/8"
+
+
+def test_rendezvous_flow_ids_movement_bound(rng):
+    """Flow ids over the survivor roster: unchanged for surviving homes
+    (node id AND slot), re-homed only for the dead node's flows."""
+    keys = jnp.asarray(rng.integers(0, 2**32, size=(512, 5),
+                                    dtype=np.uint32))
+    full = jnp.asarray(range(4), jnp.uint32)
+    sub = jnp.asarray([0, 1, 3], jnp.uint32)      # node 2 died
+    fid_full = np.asarray(TRANS.rendezvous_flow_ids(keys, full, FPS))
+    fid_sub = np.asarray(TRANS.rendezvous_flow_ids(keys, sub, FPS))
+    stay = (fid_full // FPS) != 2
+    np.testing.assert_array_equal(fid_full[stay], fid_sub[stay])
+    # dead-node flows land on survivors, same slot (roster-free hash)
+    assert (fid_sub[~stay] // FPS != 2).all()
+    np.testing.assert_array_equal(fid_full[~stay] % FPS,
+                                  fid_sub[~stay] % FPS)
+    assert (~stay).any(), "trace never homed a flow on the dead node"
+
+
+def test_home_nodes_validation():
+    mesh = pod_mesh_or_skip(1, 2)
+    with pytest.raises(ValueError, match="entries"):
+        DFASystem(_cfg(1, 2, nodes=(0, 1, 2)), mesh)
+    with pytest.raises(ValueError, match="strictly increasing"):
+        DFASystem(_cfg(1, 2, nodes=(3, 1)), mesh)
+
+
+# -- factorization invariance of the rendezvous scheme -------------------
+
+@pytest.mark.parametrize("scenario", ["cross_pod_mix", "elephants_mice"])
+def test_rendezvous_factorization_invariance(scenario):
+    """Same 2-device roster {0,1} as (1,2) and (2,1): merged state and
+    per-period outputs bitwise equal — rendezvous inherits the PR 5
+    pod-count-invariance contract."""
+    events, nows = _trace(scenario)
+    ref_sys, alt_sys = _system(1, 2), _system(2, 1)
+    with ref_sys.mesh:
+        ref = ref_sys.stream(ref_sys.init_state(), events, nows)
+    with alt_sys.mesh:
+        alt = alt_sys.stream(alt_sys.init_state(), events, nows)
+    assert int(np.asarray(ref.metrics["reports_recv"]).sum()) > 0
+    _assert_state_eq(_merged_state(ref_sys, ref.state),
+                     _merged_state(alt_sys, alt.state), scenario)
+    for t, (r, g) in enumerate(zip(_canon_periods(ref),
+                                   _canon_periods(alt))):
+        for k in r:
+            np.testing.assert_array_equal(
+                r[k], g[k], err_msg=f"{scenario}: period {t} {k}")
+
+
+# -- snapshotting --------------------------------------------------------
+
+def test_snapshot_stream_bitwise_identical(tmp_path):
+    """The chunk-and-checkpoint stream path is pure observation: outputs
+    and end state bitwise equal to the unchunked stream, snapshots land
+    at every period boundary multiple of SNAP_EVERY plus the final
+    period, and the newest snapshot restores to exactly the end state."""
+    events, nows = _trace("cross_pod_mix")
+    sysm = _system(1, 2)
+    with sysm.mesh:
+        plain = sysm.stream(sysm.init_state(), events, nows)
+        snap = sysm.stream(sysm.init_state(), events, nows,
+                           snapshot_dir=str(tmp_path))
+    for a, b in zip(jax.tree.leaves(plain), jax.tree.leaves(snap)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert CKPT.list_steps(str(tmp_path)) == [2, 4, 6]
+    restored, step = CKPT.restore(str(tmp_path))
+    assert step == T
+    for a, b in zip(jax.tree.leaves(restored),
+                    jax.tree.leaves(snap.state)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# -- the tentpole differential: kill a pod mid-trace ---------------------
+
+def _kill_and_recover(scenario, dead_pod, snap_dir):
+    """(2,2) streams KILL_AT periods with snapshots; ``dead_pod`` dies;
+    recovery replays the rest on the (1,2) survivor mesh."""
+    events, nows = _trace(scenario)
+    full = _system(2, 2)
+    with full.mesh:
+        full.stream(full.init_state(),
+                    {k: v[:KILL_AT] for k, v in events.items()},
+                    nows[:KILL_AT], snapshot_dir=snap_dir)
+    devices = full.mesh.devices.reshape(-1)[:2].tolist()
+    new_sys, new_state, period = EL.recover_from_snapshot(
+        full, snap_dir, dead_pod, devices=devices)
+    assert period == KILL_AT
+    with new_sys.mesh:
+        out = new_sys.stream(new_state,
+                             {k: v[period:] for k, v in events.items()},
+                             nows[period:])
+    return new_sys, out
+
+
+@pytest.mark.parametrize("scenario", ["cross_pod_mix", "elephants_mice",
+                                      "flow_churn"])
+def test_kill_a_pod_matches_clean_small_mesh(scenario, tmp_path):
+    """THE correctness anchor: survivor-mesh end state after recovery +
+    replay ≡ a clean full-trace run on the small mesh — bitwise, for
+    state, replayed per-period outputs AND per-period metric deltas."""
+    events, nows = _trace(scenario)
+    new_sys, out = _kill_and_recover(scenario, 0, str(tmp_path))
+    assert new_sys.home_nodes == (2, 3)
+    clean_sys = _system(1, 2, nodes=(2, 3))
+    with clean_sys.mesh:
+        clean = clean_sys.stream(clean_sys.init_state(), events, nows)
+    assert int(np.asarray(clean.metrics["reports_recv"]).sum()) > 0
+    _assert_state_eq(_merged_state(clean_sys, clean.state),
+                     _merged_state(new_sys, out.state), scenario)
+    # the replayed window's outputs match the clean run's same periods
+    ref = _canon_periods(clean)[KILL_AT:]
+    got = _canon_periods(out)
+    assert len(ref) == len(got) == T - KILL_AT
+    for t, (r, g) in enumerate(zip(ref, got)):
+        for k in r:
+            np.testing.assert_array_equal(
+                r[k], g[k],
+                err_msg=f"{scenario}: replayed period {KILL_AT + t} {k}")
+    for k, v in out.metrics.items():
+        np.testing.assert_array_equal(
+            np.asarray(clean.metrics[k])[KILL_AT:], np.asarray(v),
+            err_msg=f"{scenario}: replayed metric {k}")
+
+
+def test_kill_pod_one(tmp_path):
+    """Killing the OTHER pod exercises the non-contiguous survivor slice
+    (positions 0,1 survive, 2,3 die)."""
+    new_sys, out = _kill_and_recover("cross_pod_mix", 1, str(tmp_path))
+    assert new_sys.home_nodes == (0, 1)
+    events, nows = _trace("cross_pod_mix")
+    clean_sys = _system(1, 2, nodes=(0, 1))
+    with clean_sys.mesh:
+        clean = clean_sys.stream(clean_sys.init_state(), events, nows)
+    _assert_state_eq(_merged_state(clean_sys, clean.state),
+                     _merged_state(new_sys, out.state), "dead_pod=1")
+
+
+def test_elastic_recovery_smoke(tmp_path):
+    """CI anchor (tier-1-deselected, dedicated smoke step): one
+    kill-recover-replay cycle end to end, plus the heartbeat trigger
+    wiring — a registered pod that never beats fires whole_dead_pods and
+    maybe_recover returns the survivor system."""
+    from repro.distributed.monitor import Heartbeat
+    snap = str(tmp_path / "snap")
+    new_sys, out = _kill_and_recover("cross_pod_mix", 0, snap)
+    assert int(np.asarray(out.metrics["reports_recv"]).sum()) > 0
+    assert new_sys.mesh_pods == 1 and new_sys.total_ports == TOTAL_PORTS
+    d = new_sys.describe()
+    assert d["flow_home"] == "rendezvous"
+    assert d["home_nodes"] == (2, 3)
+    assert d["snapshot_every_periods"] == SNAP_EVERY
+    # trigger wiring: procs 0,1 = pod 0 beat; procs 2,3 = pod 1 never do
+    hb_dir = str(tmp_path / "hb")
+    roster = {0: 0, 1: 0, 2: 1, 3: 1}
+    hb = Heartbeat(hb_dir, process_index=0, stale_after_s=60.0,
+                   expected_peers=roster)
+    hb.beat(step=1)
+    Heartbeat(hb_dir, process_index=1, pod=0).beat(step=1)
+    assert EL.whole_dead_pods(hb) == [1]
+    full = _system(2, 2)
+    devices = full.mesh.devices.reshape(-1)[:2].tolist()
+    got = EL.maybe_recover(hb, full, snap, devices=devices)
+    assert got is not None
+    rec_sys, _, period = got
+    assert period == KILL_AT
+    assert rec_sys.home_nodes == (0, 1)   # pod 1 dead -> nodes 2,3 gone
+
+
+# -- guard rails ---------------------------------------------------------
+
+def test_recovery_refuses_range_hash_home():
+    """flow_home='hash' renumbers the whole keyspace on a roster change —
+    recovery must refuse instead of silently scrambling flow identity."""
+    mesh = pod_mesh_or_skip(2, 2)
+    cfg = dataclasses.replace(_cfg(2, 2), flow_home="hash", home_nodes=())
+    sysm = DFASystem(cfg, mesh)
+    with pytest.raises(ValueError, match="rendezvous"):
+        EL.survivor_config(sysm, 0)
+
+
+def test_survivor_config_validation():
+    sysm = _system(2, 2)
+    with pytest.raises(ValueError, match="not in"):
+        EL.survivor_config(sysm, 5)
+    single = _system(1, 2)
+    with pytest.raises(ValueError, match="single-pod"):
+        EL.survivor_config(single, 0)

@@ -45,3 +45,114 @@ def test_pipeline_apply_names_missing_axis():
     mesh = make_mesh((1, 1), ("data", "model"))
     with pytest.raises(ValueError, match="pod"):
         pipeline_apply(lambda p, x, s: x, {}, None, mesh, axis="pod")
+
+
+# -- expected-peers roster (regression: a peer that died BEFORE its first
+#    beat left no hb_*.json and was invisible forever) -------------------
+
+def test_never_beaten_registered_peer_reports_age_inf(tmp_path):
+    d = str(tmp_path)
+    roster = {0: 0, 1: 0, 2: 1, 3: 1}
+    hb = Heartbeat(d, process_index=0, stale_after_s=60.0,
+                   expected_peers=roster)
+    hb.beat(step=1)
+    Heartbeat(d, process_index=1, pod=0).beat(step=1)
+    # procs 2 and 3 (all of pod 1) never wrote a file
+    dead = hb.dead_peers()
+    assert sorted(dead) == [2, 3]
+    assert all(age == float("inf") for age in dead.values())
+    by_pod = hb.dead_peers_by_pod()
+    assert sorted(by_pod) == [1] and sorted(by_pod[1]) == [2, 3]
+
+
+def test_expected_peers_iterable_form(tmp_path):
+    """A bare index iterable registers everyone under pod 0."""
+    hb = Heartbeat(str(tmp_path), process_index=0, expected_peers=[0, 1])
+    hb.beat(step=1)
+    assert sorted(hb.dead_peers()) == [1]
+    assert hb.dead_peers_by_pod() == {0: {1: float("inf")}}
+
+
+def test_unparsable_beat_counts_as_never_beaten(tmp_path):
+    """A corrupt heartbeat file is a suspect process, not a healthy one."""
+    import os
+    with open(os.path.join(str(tmp_path), "hb_1.json"), "w") as f:
+        f.write("{not json")
+    hb = Heartbeat(str(tmp_path), process_index=0, stale_after_s=60.0,
+                   expected_peers={1: 2})
+    assert hb.dead_peers_by_pod() == {2: {1: float("inf")}}
+
+
+# -- run_with_restart (regressions: an exception before the first
+#    checkpoint escaped as FileNotFoundError, bypassing max_restarts; and
+#    a trailing num_steps % checkpoint_every tail was never saved) -------
+
+def _restart_harness(tmp_path, num_steps, checkpoint_every,
+                     fail_at=(), max_restarts=3):
+    from repro.distributed.monitor import run_with_restart
+    saves = []
+    failed = set()
+
+    def step_fn(state, step):
+        if step in fail_at and step not in failed:
+            failed.add(step)
+            raise RuntimeError(f"injected crash at {step}")
+        return state + 1, {}
+
+    def save_fn(state, step):
+        saves.append((int(state), step))
+
+    def restore_fn():
+        if not saves:
+            raise FileNotFoundError("no checkpoints yet")
+        state, step = saves[-1]
+        return state, step
+
+    state, step = run_with_restart(
+        step_fn, 0, 0, num_steps, save_fn, restore_fn,
+        checkpoint_every=checkpoint_every, max_restarts=max_restarts)
+    return state, step, saves
+
+
+def test_restart_before_first_checkpoint_falls_back_to_initial(tmp_path):
+    """A crash at step 0 (no checkpoint on disk yet) must restart from
+    the caller's initial state — pre-fix this escaped as an uncaught
+    FileNotFoundError from restore_fn."""
+    state, step, _ = _restart_harness(tmp_path, num_steps=5,
+                                      checkpoint_every=10, fail_at={0})
+    assert (state, step) == (5, 5)
+
+
+def test_restart_budget_still_enforced_without_checkpoint(tmp_path):
+    """The fallback must not bypass max_restarts accounting."""
+    from repro.distributed.monitor import run_with_restart
+
+    def step_fn(state, step):
+        raise RuntimeError("always")
+
+    def restore_fn():
+        raise FileNotFoundError
+
+    with pytest.raises(RuntimeError, match="always"):
+        run_with_restart(step_fn, 0, 0, 5, lambda s, i: None, restore_fn,
+                         checkpoint_every=10, max_restarts=2)
+
+
+def test_final_tail_state_always_saved(tmp_path):
+    """num_steps % checkpoint_every != 0: the tail must still be saved on
+    loop exit (pre-fix the last 3 steps of progress evaporated)."""
+    state, step, saves = _restart_harness(tmp_path, num_steps=13,
+                                          checkpoint_every=5)
+    assert (state, step) == (13, 13)
+    assert saves[-1] == (13, 13)
+    assert (5, 5) in saves and (10, 10) in saves
+
+
+def test_restart_replays_from_last_checkpoint(tmp_path):
+    """The pre-existing contract still holds: a mid-run crash resumes
+    from the newest checkpoint, exactly."""
+    state, step, saves = _restart_harness(tmp_path, num_steps=12,
+                                          checkpoint_every=4,
+                                          fail_at={6})
+    assert (state, step) == (12, 12)
+    assert saves[-1] == (12, 12)

@@ -160,6 +160,35 @@ def test_serving_loop_smoke_line_rate():
     assert int(np.asarray(report.last.metrics["reports_recv"])) > 0
 
 
+def test_serving_loop_snapshots_without_stalling(tmp_path):
+    """Elastic satellite: with snapshot_every_periods set, the loop
+    checkpoints the DFAState every N completed periods plus the final
+    one — async, between block_until_ready and the next donated dispatch
+    — and the newest snapshot equals the loop's end state bitwise."""
+    import jax
+    from repro.checkpoint import checkpoint as CKPT
+    mesh = make_mesh((1, 1), ("data", "model"))
+    cfg = dataclasses.replace(get_dfa_config(reduced=True),
+                              snapshot_every_periods=2)
+    system = DFASystem(cfg, mesh)
+    events, nows = _trace(system.n_shards, E=system.cfg.event_block)
+    source = build_source(system, events, nows)
+    report = ServingLoop(system, source,
+                         snapshot_dir=str(tmp_path)).run(5)
+    assert report.periods == 5 and report.balanced
+    # periods 2, 4 and the final 5 snapshot (keep=3 retains all three)
+    assert report.snapshots == 3
+    assert CKPT.list_steps(str(tmp_path)) == [2, 4, 5]
+    restored, step = CKPT.restore(str(tmp_path))
+    assert step == 5
+    for a, b in zip(jax.tree.leaves(restored),
+                    jax.tree.leaves(report.last.state)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # and the knob off means zero snapshot side effects (default path)
+    off = serve_trace(system, events, nows, periods=2)
+    assert off.snapshots == 0
+
+
 def test_serving_loop_forced_overrun_drains_on_shutdown():
     """Offered 2x the budget's capacity: the queue fills, the policy
     sheds exactly, and graceful shutdown serves the in-flight backlog
@@ -221,7 +250,8 @@ DESCRIBE_KEYS = sorted([
     "shards_per_pod", "total_ports", "ports_per_device",
     "reporter_slots", "port_report_capacity", "overlap_periods",
     "inference_head", "serve_offered_eps", "serve_budget_us",
-    "serve_queue_events", "drop_policy",
+    "serve_queue_events", "drop_policy", "home_nodes",
+    "snapshot_every_periods",
 ])
 
 
