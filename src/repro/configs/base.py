@@ -159,6 +159,12 @@ class DFAConfig:
     # "interpret" — see repro.kernels.dispatch (REPRO_KERNEL_BACKEND env
     # var overrides this field; an explicit backend= argument beats both)
     kernel_backend: str = "auto"
+    # wire schema version (repro.core.wire registry): "v1" = the paper's
+    # bit-faithful 8-bit reporter_id/seq layout (256-port cap, every
+    # committed golden); "v2" = widened u16 fields lifting the port/seq
+    # caps. REPRO_WIRE_FORMAT env var overrides this field; unknown
+    # names fail loud at DFASystem construction.
+    wire_format: str = "v1"
     # gather_enrich memory strategy: "auto" | "full" (ring region pinned
     # in VMEM) | "hbm" (ring stays HBM-resident, per-report-tile DMA).
     # auto = VMEM-budget heuristic in dispatch.resolve_gather_variant;

@@ -67,3 +67,16 @@ REDUCED_MULTIPOD = dataclasses.replace(
     flows_per_shard=128,
     port_report_capacity=32,
 )
+
+# REDUCED_MULTIPOD under the widened V2 wire schema (u16 reporter_id /
+# seq — repro.core.wire.V2): the same 2D mesh structure with the 256-port
+# cap lifted. The per-port shapes shrink so wide-port meshes (hundreds of
+# virtual ports per device) stay CPU-testable; the V2 differential suite
+# overrides ports_per_pod per grid point.
+REDUCED_MULTIPOD_V2 = dataclasses.replace(
+    REDUCED_MULTIPOD,
+    wire_format="v2",
+    reporter_slots=8,
+    flows_per_shard=2048,
+    port_report_capacity=2,
+)

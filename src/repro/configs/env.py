@@ -43,6 +43,9 @@ REPRO_BENCH_TINY         flag                       benchmarks/: shrink
 REPRO_REGEN_GOLDENS      flag                       tests/test_run_periods_
                                                     golden.py: refresh all
                                                     committed fingerprints
+REPRO_WIRE_FORMAT        choice  v1|v2              core.wire active wire
+                                                    schema (beats
+                                                    DFAConfig.wire_format)
 =======================  ======  =================  =========================
 """
 from __future__ import annotations
@@ -171,3 +174,10 @@ REGEN_GOLDENS = register(EnvSpec(
     "REPRO_REGEN_GOLDENS", "flag",
     description="refresh every committed golden fingerprint in one run",
     consumer="tests.test_run_periods_golden"))
+
+WIRE_FORMAT = register(EnvSpec(
+    "REPRO_WIRE_FORMAT", "choice", ("v1", "v2"),
+    description="active wire schema (v1 = the paper's 8-bit "
+                "reporter_id/seq layout, v2 = the widened u16 layout; "
+                "beats DFAConfig.wire_format)",
+    consumer="repro.core.wire"))

@@ -7,7 +7,10 @@ mediation, no copies — we even alias the buffer in-place via donation).
 
 Integrity: per-entry checksum (Fig 4) and per-reporter sequence continuity
 (the paper's §VI-B recommendation) are validated on ingest; violations are
-counted, never crash the path.
+counted, never crash the path. All layout facts — meta-word field
+positions, the reporter-id space sizing ``last_seq``, the seq wrap mask
+and the dup-detection window — come off the active
+:class:`repro.core.wire.WireFormat`.
 """
 from __future__ import annotations
 
@@ -18,15 +21,18 @@ import jax.numpy as jnp
 
 from repro.configs.base import DFAConfig
 from repro.core import protocol as PROTO
+from repro.core import wire as WIRE
 
 Tree = Any
-N_REPORTERS = 256        # 8-bit reporter id space
+# V1's 8-bit reporter-id space, kept as a module alias for the callers
+# that predate the schema; sizing decisions should use wire.n_reporters.
+N_REPORTERS = WIRE.V1.n_reporters
 
 
 class CollectorState(NamedTuple):
     memory: jax.Array      # (F, H, 16) u32 — Fig 4 region
     entry_valid: jax.Array  # (F, H) bool — which ring entries hold data
-    last_seq: jax.Array    # (N_REPORTERS,) u32 — seq continuity (VI-B)
+    last_seq: jax.Array    # (wire.n_reporters,) u32 — seq continuity (VI-B)
     bad_checksum: jax.Array   # () u32
     seq_anomalies: jax.Array  # () u32
     received: jax.Array    # () u32 — total accepted payloads
@@ -34,11 +40,12 @@ class CollectorState(NamedTuple):
 
 def init_state(cfg: DFAConfig) -> CollectorState:
     F, H = cfg.flows_per_shard, cfg.history
+    wf = WIRE.resolve(cfg)
     return CollectorState(
         memory=jnp.zeros((F, H, PROTO.PAYLOAD_WORDS), jnp.uint32),
         entry_valid=jnp.zeros((F, H), bool),
         # stores (last seq + 1); 0 = never seen (so .max updates work)
-        last_seq=jnp.zeros((N_REPORTERS,), jnp.uint32),
+        last_seq=jnp.zeros((wf.n_reporters,), jnp.uint32),
         bad_checksum=jnp.zeros((), jnp.uint32),
         seq_anomalies=jnp.zeros((), jnp.uint32),
         received=jnp.zeros((), jnp.uint32),
@@ -68,6 +75,7 @@ def ingest(state: CollectorState, payloads: jax.Array, mask: jax.Array,
     through the dispatch registry (cfg.kernel_backend / env override);
     pass ``scatter_ref`` to force the jnp oracle.
     """
+    wf = WIRE.resolve(cfg)
     if scatter_fn is None:
         from repro.kernels.ring_scatter.ops import ring_scatter_collector
 
@@ -75,8 +83,8 @@ def ingest(state: CollectorState, payloads: jax.Array, mask: jax.Array,
             return ring_scatter_collector(memory, entry_valid, pays, flow,
                                           hist, m, cfg=cfg)
 
-    p = PROTO.unpack_payload(payloads)
-    ok_csum = PROTO.payload_valid(payloads)
+    p = PROTO.unpack_payload(payloads, wire=wf)
+    ok_csum = PROTO.payload_valid(payloads, wire=wf)
     bad = jnp.sum(mask & ~ok_csum)  # corrupted/tampered payloads (§VI-B)
     mask = mask & ok_csum
     local = (p["flow_id"].astype(jnp.int32)
@@ -87,15 +95,19 @@ def ingest(state: CollectorState, payloads: jax.Array, mask: jax.Array,
                             jnp.clip(local, 0, cfg.flows_per_shard - 1),
                             p["hist_idx"].astype(jnp.int32), mask)
     # sequence continuity per reporter: max-seq tracking + anomaly count
-    # (last_seq stores seq+1; 0 = reporter never seen)
+    # (last_seq stores seq+1; 0 = reporter never seen). The wrap mask and
+    # dup window scale with the schema's seq width — V1 keeps the paper's
+    # 8-bit space / 8-deep window, V2's u16 space gets a 2048-deep one.
+    n_rep = wf.n_reporters
     rep = p["reporter_id"].astype(jnp.int32)
     seq = p["seq"].astype(jnp.uint32)
-    prev = state.last_seq[jnp.clip(rep, 0, N_REPORTERS - 1)]
-    prev8 = (prev - 1) & jnp.uint32(0xFF)
-    dup = mask & (prev > 0) & (seq <= prev8) & (
-        prev8 - seq < jnp.uint32(8))      # small window => duplicate/replay
+    prev = state.last_seq[jnp.clip(rep, 0, n_rep - 1)]
+    prev_seq = (prev - 1) & jnp.uint32(wf.seq_mask)
+    dup = mask & (prev > 0) & (seq <= prev_seq) & (
+        prev_seq - seq < jnp.uint32(wf.seq_dup_window)
+    )                                 # small window => duplicate/replay
     anomalies = state.seq_anomalies + jnp.sum(dup).astype(jnp.uint32)
-    new_seq = state.last_seq.at[jnp.where(mask, rep, N_REPORTERS)].max(
+    new_seq = state.last_seq.at[jnp.where(mask, rep, n_rep)].max(
         seq + 1, mode="drop")
     return state._replace(
         memory=memory, entry_valid=ev, last_seq=new_seq,

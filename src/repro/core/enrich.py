@@ -17,7 +17,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import DFAConfig
-from repro.core import protocol as PROTO
+from repro.core import wire as WIRE
 
 EPS = 1e-6
 PER_ENTRY = 18            # features derived per history entry
@@ -65,9 +65,9 @@ def derive_ref(memory_entries: jax.Array, entry_valid: jax.Array,
     [n, iat_mean, ps_mean, rate] | deltas newest-vs-window | zero pad.
     """
     F, H, W = memory_entries.shape
-    stats = memory_entries[..., PROTO.STATS_SLICE].astype(jnp.uint32)
-    hist_idx = (memory_entries[..., PROTO.META_WORD] & 0xFF).astype(
-        jnp.int32)
+    wf = WIRE.resolve(cfg)
+    stats = memory_entries[..., wf.payload_stats_slice].astype(jnp.uint32)
+    hist_idx = wf.payload_hist.extract(memory_entries).astype(jnp.int32)
     feats = entry_features(stats)                        # (F, H, PER_ENTRY)
     vmask = entry_valid.astype(jnp.float32)[..., None]
     feats = feats * vmask

@@ -62,7 +62,6 @@ from __future__ import annotations
 
 import dataclasses
 import math
-import warnings
 from typing import Any, Dict, NamedTuple, Optional, Tuple
 
 import jax
@@ -76,6 +75,7 @@ from repro.core import collector as COLL
 from repro.core import protocol as PROTO
 from repro.core import reporter as REP
 from repro.core import translator as TRANS
+from repro.core import wire as WIRE
 from repro.kernels import dispatch
 
 Tree = Any
@@ -107,9 +107,9 @@ class StepOutputs(NamedTuple):
     forced every continuous caller to branch on arity. Streaming drivers
     stack each per-period field under a leading (T,) dim.
 
-    Unpack by name (``out.state``, ``out.enriched`` ...); the legacy
-    positional shape is available via :meth:`as_tuple` and the deprecated
-    ``*_tuple`` driver shims, both removed after one release.
+    Unpack by name (``out.state``, ``out.enriched`` ...). The deprecated
+    positional accessors (``as_tuple`` and the ``*_tuple`` driver shims)
+    were removed after their one-release grace window.
     """
     state: DFAState                     # post-period system state
     enriched: jax.Array                 # ([T,] R, derived_dim) f32
@@ -117,13 +117,6 @@ class StepOutputs(NamedTuple):
     mask: jax.Array                     # ([T,] R) bool validity
     metrics: Dict[str, jax.Array]       # per-period delta counters
     preds: Optional[jax.Array] = None   # ([T,] R, C) when a head is armed
-
-    def as_tuple(self):
-        """The pre-redesign variadic return: a 5-tuple, or a 6-tuple when
-        an inference head is armed. For migration only."""
-        base = (self.state, self.enriched, self.flow_ids, self.mask,
-                self.metrics)
-        return base if self.preds is None else base + (self.preds,)
 
 
 class DFASystem:
@@ -141,6 +134,9 @@ class DFASystem:
         self.mesh = mesh
         self.axes = tuple(mesh.axis_names)
         self.n_shards = int(math.prod(mesh.devices.shape))
+        # active wire schema (env > cfg.wire_format > "v1"), resolved
+        # once — fail-loud on junk, and topology caps derive from it
+        self.wire = WIRE.resolve(cfg)
         self._derive_topology()
         self.infer_params: Optional[Tree] = None
         if infer_fn is None and cfg.inference_head != "none":
@@ -227,18 +223,22 @@ class DFASystem:
                 f"total ports ({self.mesh_pods} pods x "
                 f"{cfg.ports_per_pod}/pod = {total_ports}) must be a "
                 f"multiple of the device count {self.n_shards}")
-        if total_ports > COLL.N_REPORTERS:
-            # the wire format's reporter id is 8-bit (paper Fig 2); with
-            # more ports than ids, two ports alias one reporter id and
-            # the home-side canonical (flow, reporter, seq) order — and
-            # with it the pod-count-invariance contract — stops being
-            # deterministic. Fail loud instead of silently degrading;
-            # >256 ports needs a wire-format widening first (ROADMAP).
+        if total_ports > self.wire.n_reporters:
+            # with more ports than reporter ids, two ports alias one id
+            # and the home-side canonical (flow, reporter, seq) order —
+            # and with it the pod-count-invariance contract — stops
+            # being deterministic. Fail loud instead of silently
+            # degrading; the cap is the schema's, not a constant: V1's
+            # 8-bit field allows 256 ports, wire_format="v2" lifts it
+            # to 65,536.
             raise ValueError(
-                f"total ports {total_ports} exceeds the 8-bit reporter "
-                f"id space ({COLL.N_REPORTERS}); canonical report "
-                "ordering requires a unique (flow, reporter) pair per "
-                "period")
+                f"total ports {total_ports} exceeds the "
+                f"{self.wire.reporter_width}-bit reporter id space of "
+                f"wire format {self.wire.name!r} "
+                f"({self.wire.n_reporters}); canonical report ordering "
+                "requires a unique (flow, reporter) pair per period — "
+                "set wire_format='v2' (or REPRO_WIRE_FORMAT=v2) for "
+                "u16 reporter ids")
         self.total_ports = total_ports
         self.ports_per_device = total_ports // self.n_shards
         self.rep_cfg = (dataclasses.replace(
@@ -340,10 +340,14 @@ class DFASystem:
                                         cfg.report_capacity)
             rep_st, reports = REP.make_reports(
                 rep_st, slots, mask, now_, 0, flow_base, cfg)
-            # reporter id = shard (mod 256, the 8-bit id space)
-            rid = (shard % COLL.N_REPORTERS).astype(jnp.uint32)
-            reports = reports.at[:, 1].set(
-                jnp.where(mask, (rid << 24) | (reports[:, 1] & 0x00FFFFFF),
+            # reporter id = shard (mod the schema's reporter id space);
+            # repack through the schema — no open-coded shifts here
+            wf = self.wire
+            rid = (shard % wf.n_reporters).astype(jnp.uint32)
+            mw = wf.report_meta_word
+            reports = reports.at[:, mw].set(
+                jnp.where(mask,
+                          wf.set_report_reporter(reports[:, mw], rid),
                           0))
             # 3. route to owner shards (fixed-capacity buckets + all_to_all)
             buckets, bmask = TRANS.route_reports(
@@ -428,6 +432,7 @@ class DFASystem:
         """
         cfg = self.cfg
         ax = self.axes
+        wf = self.wire
         P_l = self.ports_per_device
         Rs = self.rep_cfg.flows_per_shard       # per-port table slots
         S = self.shards_per_pod
@@ -438,6 +443,12 @@ class DFASystem:
         fps = cfg.flows_per_shard               # rings per device
         G = self.total_flows
         hrw = cfg.flow_home == "rendezvous"
+        # the ref backend's per-port ingest is pure jnp (sort/scatter/
+        # top_k — all with batching rules), so the hosted ports can run
+        # under one vmap instead of a Python-unrolled loop; essential at
+        # wide port counts (V2 meshes host hundreds of ports per device,
+        # and an unrolled loop would compile one ingest body per port)
+        vmap_ports = dispatch.resolve_backend(None, cfg) == "ref"
         # logical node roster (pod-major positions -> stable node ids);
         # replicated constant inside the shard_map closure
         nodes_arr = jnp.asarray(self.home_nodes, jnp.uint32)
@@ -476,25 +487,15 @@ class DFASystem:
                     "shift every port's slice off the port-major trace "
                     "layout")
             E_p = ev_ts.shape[0] // P_l
-            # explicit unrolled loop rather than a vmap over the port
-            # axis: the ingest path can resolve to the scalar-prefetch
-            # HBM pallas variant, which has no batching rule, and P_l is
-            # small (total_ports/n_devices — bounded by the 8-bit
-            # reporter id space / mesh size, single digits in practice)
-            sts, reports_l, masks_l = [], [], []
-            for p in range(P_l):
-                pst = REP.ReporterState(
-                    regs[p], last_ts[p], last_report[p], keys[p],
-                    active[p], rep_st.seq[p], rep_st.collisions[p])
-                sl = slice(p * E_p, (p + 1) * E_p)
-                pst = REP.ingest(pst, {"ts": ev_ts[sl], "size": ev_sz[sl],
-                                       "five_tuple": ev_tu[sl],
-                                       "valid": ev_va[sl]}, self.rep_cfg)
+
+            def port_body(pst, ev, gid):
+                """One hosted port: ingest its event slice, emit its due
+                reports. The global port id IS the reporter identity (mod
+                the schema's reporter id space) — stable across mesh
+                factorizations."""
+                pst = REP.ingest(pst, ev, self.rep_cfg)
                 slots, mask = REP.due_flows(pst, now_, self.rep_cfg, R_p)
-                # global port id IS the reporter identity (mod the 8-bit
-                # wire field) — stable across mesh factorizations
-                gid = dev * P_l + p
-                rid = (gid % COLL.N_REPORTERS).astype(jnp.uint32)
+                rid = (gid % wf.n_reporters).astype(jnp.uint32)
                 if hrw:
                     fids = TRANS.rendezvous_flow_ids(
                         pst.keys[slots], nodes_arr, fps)
@@ -503,24 +504,42 @@ class DFASystem:
                 pst, reports = REP.make_reports(
                     pst, slots, mask, now_, rid, 0, self.rep_cfg,
                     flow_ids=fids)
-                sts.append(pst)
-                reports_l.append(reports)
-                masks_l.append(mask)
+                return pst, reports, mask
+
+            gids = dev * P_l + jnp.arange(P_l, dtype=jnp.int32)
+            stacked = REP.ReporterState(regs, last_ts, last_report, keys,
+                                        active, rep_st.seq,
+                                        rep_st.collisions)
+            ev_b = {"ts": ev_ts.reshape(P_l, E_p),
+                    "size": ev_sz.reshape(P_l, E_p),
+                    "five_tuple": ev_tu.reshape(P_l, E_p, 5),
+                    "valid": ev_va.reshape(P_l, E_p)}
+            if vmap_ports:
+                new_st, reports_s, masks_s = jax.vmap(port_body)(
+                    stacked, ev_b, gids)
+            else:
+                # unrolled loop for the pallas/interpret backends: the
+                # ingest path can resolve to the scalar-prefetch HBM
+                # pallas variant, which has no batching rule; P_l stays
+                # small there (kernel meshes host single-digit ports)
+                outs = [port_body(jax.tree.map(lambda a: a[p], stacked),
+                                  {k: v[p] for k, v in ev_b.items()},
+                                  gids[p])
+                        for p in range(P_l)]
+                new_st = jax.tree.map(lambda *xs: jnp.stack(xs),
+                                      *[o[0] for o in outs])
+                reports_s = jnp.stack([o[1] for o in outs])
+                masks_s = jnp.stack([o[2] for o in outs])
             rep_st = REP.ReporterState(
-                regs=jnp.stack([s.regs for s in sts]).reshape(
-                    P_l * Rs, REP.N_REG),
-                last_ts=jnp.stack([s.last_ts for s in sts]).reshape(
-                    P_l * Rs),
-                last_report=jnp.stack(
-                    [s.last_report for s in sts]).reshape(P_l * Rs),
-                keys=jnp.stack([s.keys for s in sts]).reshape(
-                    P_l * Rs, 5),
-                active=jnp.stack([s.active for s in sts]).reshape(
-                    P_l * Rs),
-                seq=jnp.stack([s.seq for s in sts]),
-                collisions=jnp.stack([s.collisions for s in sts]))
-            reports = jnp.concatenate(reports_l)      # (P_l*R_p, 14)
-            mask = jnp.concatenate(masks_l)
+                regs=new_st.regs.reshape(P_l * Rs, REP.N_REG),
+                last_ts=new_st.last_ts.reshape(P_l * Rs),
+                last_report=new_st.last_report.reshape(P_l * Rs),
+                keys=new_st.keys.reshape(P_l * Rs, 5),
+                active=new_st.active.reshape(P_l * Rs),
+                seq=new_st.seq,
+                collisions=new_st.collisions)
+            reports = reports_s.reshape(P_l * R_p, wf.report_words)
+            mask = masks_s.reshape(P_l * R_p)
             sent = jnp.sum(mask)
             # stage 1: intra-pod all_to_all by home shard
             if hrw:
@@ -558,7 +577,7 @@ class DFASystem:
             routed = b2.reshape(pods * cap2, PROTO.REPORT_WORDS)
             rmask = m2.reshape(pods * cap2)
             # home-side canonical arrival order (mesh-shape independent)
-            routed, rmask = TRANS.canonical_order(routed, rmask)
+            routed, rmask = TRANS.canonical_order(routed, rmask, wire=wf)
             # owner-side translator + ring placement, as in the 1D path
             tr_st, payloads, coords = TRANS.translate(
                 tr_st, routed, rmask, flow_base, cfg)
@@ -615,7 +634,7 @@ class DFASystem:
 
         def local(coll_st, lf, fid, m):
             enriched = COLL.enrich_flow_history(coll_st, lf, cfg, mask=m)
-            flow_ids = jnp.where(m, fid, jnp.uint32(0xFFFFFFFF))
+            flow_ids = jnp.where(m, fid, jnp.uint32(WIRE.PAD_FLOW_ID))
             return enriched, flow_ids, m
 
         specs = self.state_specs()
@@ -722,31 +741,6 @@ class DFASystem:
         return StepOutputs(state, enriched, flow_ids, emask, metrics,
                            preds)
 
-    # -- deprecated variadic-tuple shims (one release, then gone) ---------
-    def _tuple_shim(self, name: str):
-        warnings.warn(
-            f"DFASystem.{name}_tuple is deprecated: drivers return the "
-            "structured StepOutputs NamedTuple now (fixed arity; unpack "
-            f"by name). Call {name}() directly.",
-            DeprecationWarning, stacklevel=3)
-
-    def dfa_step_tuple(self, state, events, now):
-        """Deprecated: ``dfa_step`` with the historical 5/6-tuple."""
-        self._tuple_shim("dfa_step")
-        return self.dfa_step(state, events, now).as_tuple()
-
-    def run_periods_tuple(self, state, events, nows):
-        """Deprecated: ``run_periods`` with the historical 5/6-tuple."""
-        self._tuple_shim("run_periods")
-        return self.run_periods(state, events, nows).as_tuple()
-
-    def run_periods_overlapped_tuple(self, state, events, nows):
-        """Deprecated: ``run_periods_overlapped`` with the historical
-        5/6-tuple."""
-        self._tuple_shim("run_periods_overlapped")
-        return self.run_periods_overlapped(state, events,
-                                           nows).as_tuple()
-
     # -- convenience ------------------------------------------------------
     def describe(self) -> Dict[str, Any]:
         """Trace-time kernel selection for this system: backend, gather
@@ -774,6 +768,7 @@ class DFASystem:
                               None, cfg, cfg.event_block, etile))
         return {
             "kernel_backend": backend,
+            "wire_format": self.wire.name,
             "gather_variant": variant,
             "ingest_variant": ingest_variant,
             "event_tile": etile,

@@ -1,48 +1,73 @@
-"""Bit-faithful DFA wire formats (paper Figs 2 and 4).
+"""DFA wire formats (paper Figs 2 and 4) — pack/unpack over the schema.
 
-Everything is expressed as little-endian u32 words:
+Every bit position lives in :mod:`repro.core.wire`: a versioned
+:class:`~repro.core.wire.WireFormat` declares each field's word offset,
+shift and width, and the functions here assemble/disassemble whole
+reports against whichever format the caller passes (``wire=`` keyword;
+the default is ``wire.V1``, the paper's bit-faithful layout, so every
+historical call site is unchanged).
+
+Everything is little-endian u32 words. The shared skeleton (identical in
+every registered format — see ``WireFormat``'s class docstring for the
+table):
 
 DTA report (reporter -> translator), the Key-Write derivative:
-  word 0      flow_id
-  word 1      (reporter_id << 24) | (seq << 16) | flags      [sec VI-B seq ids]
-  words 2-8   the SEVEN Table-I data fields:
-              pkt_count, sum_iat, sum_iat2, sum_iat3, sum_ps, sum_ps2, sum_ps3
-  words 9-13  five-tuple: src_ip, dst_ip, (sport<<16|dport), proto, pad
+  word 0           flow_id
+  word  ``report_meta_word``   reporter_id | seq   (packing per format:
+                   V1 = rid(8)<<24 | seq(8)<<16, V2 = rid(16)<<16 | seq(16))
+  ``report_stats_slice``   the SEVEN Table-I data fields:
+                   pkt_count, sum_iat, sum_iat2, sum_iat3,
+                   sum_ps, sum_ps2, sum_ps3
+  ``report_tuple_slice``   five-tuple: src_ip, dst_ip, (sport<<16|dport),
+                   proto, pad
   -> 14 words = 56 B on the wire (45 B payload + base header, word aligned)
 
 RoCEv2 WRITE payload (translator -> collector), padded to a power of two:
-  word 0      flow_id
-  words 1-7   seven data fields
-  words 8-12  five-tuple
-  word 13     (reporter_id << 24) | (seq << 16) | hist_idx
-  word 14     checksum (position-dependent rotate-then-xor fold of words
-              0-13 and the pad word 15)
-  word 15     pad (zero)
+  word 0           flow_id
+  ``payload_stats_slice``  seven data fields
+  ``payload_tuple_slice``  five-tuple
+  meta words       reporter_id | seq | hist_idx (V1: all in word 13, word
+                   15 is the zero pad; V2: rid/seq in word 13, hist_idx in
+                   word 15)
+  ``csum_word``    checksum (position-dependent rotate-then-xor fold of
+                   the ``csum_covered`` words — 0-13 and 15 in both
+                   registered formats)
   -> 16 words = 64 B exactly (the paper's RoCEv2 pow-2 payload)
 
 The checksum rotates each covered word left by its payload position before
 folding, so (a) the same corruption mask applied to two different words no
-longer cancels (plain xor-fold's blind spot) and (b) the pad word is inside
-the covered set — a flipped pad can't ride along undetected.
+longer cancels (plain xor-fold's blind spot) and (b) every non-checksum
+word is inside the covered set — V1's pad and V2's hist_idx word can't be
+flipped undetected.
 
 Collector memory entry (Fig 4) uses the same 16-word layout, so a report is
 placed into GPU/HBM memory VERBATIM — the zero-copy property DFA gets from
 RDMA is preserved as a layout guarantee here.
+
+The module-level constants (REPORT_WORDS, STATS_SLICE, META_WORD, ...)
+are the V1 geometry, kept as aliases for the many call sites and tests
+that predate the schema; format-dependent code should read them off the
+``WireFormat`` instead.
 """
 from __future__ import annotations
 
-from typing import Dict, Tuple
+from typing import Dict
 
 import jax
 import jax.numpy as jnp
 
-REPORT_WORDS = 14        # DTA report
-PAYLOAD_WORDS = 16       # RoCEv2 / collector entry (64 B)
+from repro.core import wire as WIRE
+
+# V1-geometry aliases (see module docstring) — identical in V2 except for
+# the field packing inside the meta words.
+REPORT_WORDS = WIRE.V1.report_words      # DTA report
+PAYLOAD_WORDS = WIRE.V1.payload_words    # RoCEv2 / collector entry (64 B)
 N_STATS = 7              # Table-I exported fields
-STATS_SLICE = slice(1, 8)        # in the RoCEv2 payload
-TUPLE_SLICE = slice(8, 13)
-META_WORD = 13
-CSUM_WORD = 14
+STATS_SLICE = WIRE.V1.payload_stats_slice        # in the RoCEv2 payload
+TUPLE_SLICE = WIRE.V1.payload_tuple_slice
+META_WORD = WIRE.V1.payload_meta_word
+CSUM_WORD = WIRE.V1.csum_word
+CSUM_COVERED = WIRE.V1.csum_covered      # 0-13 + pad
 
 FIVE_TUPLE_BYTES = 17    # 4+4+2+2+1 (paper)
 MARINA_VECTOR_BYTES = 45  # 7*4 + 17 (paper: "full feature vector requires 45B")
@@ -74,14 +99,13 @@ def xor_checksum(words: jax.Array,
                           (words.ndim - 1,))
 
 
-def pack_dta_report(flow_id, reporter_id, seq, stats, five_tuple
-                    ) -> jax.Array:
-    """-> (..., REPORT_WORDS) u32.
+def pack_dta_report(flow_id, reporter_id, seq, stats, five_tuple,
+                    wire: WIRE.WireFormat = WIRE.V1) -> jax.Array:
+    """-> (..., wire.report_words) u32.
 
     stats: (..., 7) u32; five_tuple: (..., 5) u32 (ip, ip, ports, proto, 0).
     """
-    meta = ((reporter_id.astype(jnp.uint32) << 24)
-            | ((seq.astype(jnp.uint32) & 0xFF) << 16))
+    meta = wire.pack_report_meta(reporter_id, seq)
     return jnp.concatenate([
         flow_id[..., None].astype(jnp.uint32),
         meta[..., None],
@@ -90,57 +114,62 @@ def pack_dta_report(flow_id, reporter_id, seq, stats, five_tuple
     ], axis=-1)
 
 
-def unpack_dta_report(r: jax.Array) -> Dict[str, jax.Array]:
+def unpack_dta_report(r: jax.Array, wire: WIRE.WireFormat = WIRE.V1
+                      ) -> Dict[str, jax.Array]:
     return {
-        "flow_id": r[..., 0],
-        "reporter_id": r[..., 1] >> 24,
-        "seq": (r[..., 1] >> 16) & 0xFF,
-        "stats": r[..., 2:9],
-        "five_tuple": r[..., 9:14],
+        "flow_id": r[..., wire.report_flow_word],
+        "reporter_id": wire.report_reporter.extract(r),
+        "seq": wire.report_seq.extract(r),
+        "stats": r[..., wire.report_stats_slice],
+        "five_tuple": r[..., wire.report_tuple_slice],
     }
 
 
-def pack_rocev2_payload(rep: Dict[str, jax.Array], hist_idx: jax.Array
-                        ) -> jax.Array:
+def pack_rocev2_payload(rep: Dict[str, jax.Array], hist_idx: jax.Array,
+                        wire: WIRE.WireFormat = WIRE.V1) -> jax.Array:
     """Translator: DTA report fields + history index -> 64 B payload."""
-    meta = ((rep["reporter_id"].astype(jnp.uint32) << 24)
-            | ((rep["seq"].astype(jnp.uint32) & 0xFF) << 16)
-            | (hist_idx.astype(jnp.uint32) & 0xFF))
+    meta = wire.payload_meta_words(rep["reporter_id"], rep["seq"],
+                                   hist_idx)
     body = jnp.concatenate([
         rep["flow_id"][..., None].astype(jnp.uint32),
         rep["stats"].astype(jnp.uint32),
         rep["five_tuple"].astype(jnp.uint32),
-        meta[..., None],
+        meta[wire.payload_meta_word][..., None],
     ], axis=-1)                                            # 14 words
-    # the fold also covers the pad word (position 15), which packs as zero
-    # and thus contributes rotl(0, 15) = 0 — only tampering can change it
-    csum = xor_checksum(body)
-    pad = jnp.zeros_like(csum)
-    return jnp.concatenate([body, csum[..., None], pad[..., None]], axis=-1)
+    tail = meta[wire.payload_words - 1]
+    # the fold covers the tail word at its true payload position (15): in
+    # V1 it packs as zero and contributes rotl(0, 15) = 0 — only
+    # tampering can change it; in V2 it carries hist_idx and the fold
+    # protects it like every other word
+    covered = jnp.concatenate([body, tail[..., None]], axis=-1)
+    csum = xor_checksum(covered,
+                        jnp.asarray(wire.csum_covered, jnp.uint32))
+    return jnp.concatenate([body, csum[..., None], tail[..., None]],
+                           axis=-1)
 
 
-def unpack_payload(p: jax.Array) -> Dict[str, jax.Array]:
+def unpack_payload(p: jax.Array, wire: WIRE.WireFormat = WIRE.V1
+                   ) -> Dict[str, jax.Array]:
     return {
         "flow_id": p[..., 0],
-        "stats": p[..., STATS_SLICE],
-        "five_tuple": p[..., TUPLE_SLICE],
-        "reporter_id": p[..., META_WORD] >> 24,
-        "seq": (p[..., META_WORD] >> 16) & 0xFF,
-        "hist_idx": p[..., META_WORD] & 0xFF,
-        "checksum": p[..., CSUM_WORD],
+        "stats": p[..., wire.payload_stats_slice],
+        "five_tuple": p[..., wire.payload_tuple_slice],
+        "reporter_id": wire.payload_reporter.extract(p),
+        "seq": wire.payload_seq.extract(p),
+        "hist_idx": wire.payload_hist.extract(p),
+        "checksum": p[..., wire.csum_word],
     }
 
 
-CSUM_COVERED = tuple(range(CSUM_WORD)) + (PAYLOAD_WORDS - 1,)  # 0-13 + pad
-
-
-def payload_valid(p: jax.Array) -> jax.Array:
+def payload_valid(p: jax.Array, wire: WIRE.WireFormat = WIRE.V1
+                  ) -> jax.Array:
     """Collector-side integrity check (Fig 4 checksum): rotate-then-xor
-    fold over words 0-13 AND the pad word 15, each rotated by its payload
-    position, compared against the stored word 14."""
-    covered = p[..., jnp.asarray(CSUM_COVERED)]
-    pos = jnp.asarray(CSUM_COVERED, jnp.uint32)
-    return xor_checksum(covered, pos) == p[..., CSUM_WORD]
+    fold over the format's covered words (0-13 AND the tail word 15),
+    each rotated by its payload position, compared against the stored
+    checksum word."""
+    covered = p[..., jnp.asarray(wire.csum_covered)]
+    pos = jnp.asarray(wire.csum_covered, jnp.uint32)
+    return xor_checksum(covered, pos) == p[..., wire.csum_word]
 
 
 def pack_five_tuple(src_ip, dst_ip, sport, dport, proto) -> jax.Array:

@@ -26,6 +26,7 @@ import jax.numpy as jnp
 from repro.configs.base import DFAConfig
 from repro.core import logstar as LS
 from repro.core import protocol as PROTO
+from repro.core import wire as WIRE
 
 Tree = Any
 
@@ -308,7 +309,7 @@ def make_reports(state: ReporterState, slots: jax.Array, mask: jax.Array,
     seqs = state.seq + jnp.cumsum(mask.astype(jnp.uint32)) - 1
     reports = PROTO.pack_dta_report(
         flow_ids, jnp.full((R,), reporter_id, jnp.uint32),
-        seqs, stats, tuples)
+        seqs, stats, tuples, wire=WIRE.resolve(cfg))
     reports = jnp.where(mask[:, None], reports, jnp.uint32(0))
     F = state.last_report.shape[0]
     # wrap-aware: ``now`` is the latest time by contract even when the u32

@@ -21,6 +21,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import DFAConfig
 from repro.core import protocol as PROTO
+from repro.core import wire as WIRE
 
 Tree = Any
 
@@ -40,11 +41,13 @@ def compute_addresses(state: TranslatorState, local_flow: jax.Array,
                       mask: jax.Array, cfg: DFAConfig
                       ) -> Tuple[TranslatorState, jax.Array]:
     """History index per report + counter update (mod ``history``; the
-    hardware register is 8-bit — we keep the & 0xFF semantics).
+    hardware register wraps at the schema's hist-field width — 8 bits in
+    both registered formats, matching the paper).
 
     Multiple reports for the same flow in one batch get consecutive indices
     (cumulative per-flow rank), matching sequential switch processing.
     """
+    wrap = jnp.uint32(WIRE.resolve(cfg).hist_counter_mask)
     F = state.hist_counter.shape[0]
     R = local_flow.shape[0]
     safe = jnp.where(mask, local_flow, F)
@@ -56,12 +59,12 @@ def compute_addresses(state: TranslatorState, local_flow: jax.Array,
         jnp.where(seg_start, jnp.arange(R), 0), axis=0)
     rank = jnp.zeros((R,), jnp.int32).at[order].set(idx_in_run)
     base = state.hist_counter[jnp.clip(local_flow, 0, F - 1)]
-    hist = ((base + rank.astype(jnp.uint32)) & 0xFF) % jnp.uint32(
+    hist = ((base + rank.astype(jnp.uint32)) & wrap) % jnp.uint32(
         cfg.history)
     # counter += count of reports per flow
     counts = jnp.zeros((F + 1,), jnp.uint32).at[safe].add(
         mask.astype(jnp.uint32), mode="drop")
-    new_counter = (state.hist_counter + counts[:F]) & jnp.uint32(0xFF)
+    new_counter = (state.hist_counter + counts[:F]) & wrap
     # paper semantics: reset to 0 when max history index is reached
     new_counter = new_counter % jnp.uint32(cfg.history)
     return TranslatorState(new_counter), hist
@@ -71,11 +74,12 @@ def translate(state: TranslatorState, reports: jax.Array, mask: jax.Array,
               shard_flow_base, cfg: DFAConfig
               ) -> Tuple[TranslatorState, jax.Array, Dict[str, jax.Array]]:
     """DTA reports (R, 14) -> RoCEv2 payloads (R, 16) + placement coords."""
-    rep = PROTO.unpack_dta_report(reports)
+    wf = WIRE.resolve(cfg)
+    rep = PROTO.unpack_dta_report(reports, wire=wf)
     local_flow = (rep["flow_id"].astype(jnp.int32)
                   - jnp.asarray(shard_flow_base, jnp.int32))
     state, hist = compute_addresses(state, local_flow, mask, cfg)
-    payload = PROTO.pack_rocev2_payload(rep, hist)
+    payload = PROTO.pack_rocev2_payload(rep, hist, wire=wf)
     payload = jnp.where(mask[:, None], payload, jnp.uint32(0))
     return state, payload, {"local_flow": local_flow, "hist": hist,
                             "mask": mask}
@@ -206,7 +210,8 @@ def node_position(node: jax.Array, node_ids: jax.Array) -> jax.Array:
     return jnp.clip(pos, 0, node_ids.shape[0] - 1).astype(jnp.int32)
 
 
-def canonical_order(reports: jax.Array, mask: jax.Array
+def canonical_order(reports: jax.Array, mask: jax.Array,
+                    wire: WIRE.WireFormat = WIRE.V1
                     ) -> Tuple[jax.Array, jax.Array]:
     """Arrival-order canonicalization at the home translator: sort the
     received batch by (flow_id, reporter_id, seq), padding rows last.
@@ -218,11 +223,14 @@ def canonical_order(reports: jax.Array, mask: jax.Array
     a total order that only depends on WHAT arrived — this is what makes
     the merged collector state pod-count invariant. The (flow, reporter)
     pair is unique within a batch (a port reports a flow at most once per
-    period), so the order is deterministic; word 1 already packs
-    (reporter_id << 24 | seq << 16), making it the ready-made secondary
-    sort key."""
-    f = jnp.where(mask, reports[:, 0], jnp.uint32(0xFFFFFFFF))
-    meta = jnp.where(mask, reports[:, 1], jnp.uint32(0xFFFFFFFF))
+    period), so the order is deterministic; every registered wire format
+    keeps the meta word monotone in (reporter_id, seq), making it the
+    ready-made secondary sort key. Padding rows take the max-u32 key so
+    they sort last."""
+    f = jnp.where(mask, reports[:, wire.report_flow_word],
+                  jnp.uint32(WIRE.PAD_FLOW_ID))
+    meta = jnp.where(mask, reports[:, wire.report_meta_word],
+                     jnp.uint32(WIRE.PAD_SORT_KEY))
     o1 = jnp.argsort(meta, stable=True)
     order = o1[jnp.argsort(f[o1], stable=True)]
     return reports[order], mask[order]

@@ -1,0 +1,311 @@
+"""Versioned wire schema — the ONE source of truth for the report layout.
+
+Every bit position of the DTA report (reporter -> translator) and the
+RoCEv2 payload / collector ring entry (translator -> collector, Fig 4) is
+declared here as a :class:`Field` (word, shift, width) inside a registered
+:class:`WireFormat`. The packing/unpacking/repacking layers
+(``core.protocol``, ``core.reporter``, ``core.translator``,
+``core.collector``, ``core.pipeline``, ``core.enrich``,
+``kernels.derived_features``, ``launch.elastic``) all consume the schema;
+none of them re-derives a shift or a mask by hand. A grep-based lint
+(``tools/lint_wire.py``, wired into the CI lint tier) keeps it that way.
+
+Two formats are registered:
+
+``V1`` (default) — bit-faithful to the paper's Figs 2/4:
+    report  word 1  = reporter_id(8) << 24 | seq(8) << 16 | flags(16)
+    payload word 13 = reporter_id(8) << 24 | seq(8) << 16 | hist_idx(8)
+    payload word 15 = zero pad
+  8-bit reporter_id / seq cap the system at 256 ports and a 256-report
+  per-port dup-tracking window. Every committed golden is pinned against
+  this layout; it must stay bitwise-identical forever.
+
+``V2`` — the widened format (ROADMAP "wire-format widening"):
+    report  word 1  = reporter_id(16) << 16 | seq(16)
+    payload word 13 = reporter_id(16) << 16 | seq(16)
+    payload word 15 = hist_idx(8)      (the former pad word)
+  u16 reporter_id / seq lift both caps (65,536 ports, 65,536-seq dup
+  window). The checksum word (14) and its covered set (words 0-13 and
+  15) are unchanged — word 15 was always inside the fold, so moving
+  hist_idx there keeps every payload bit integrity-protected.
+
+Both formats keep the meta word's (reporter_id, seq) pair monotone in the
+raw u32 word value, which is what lets the home translator's canonical
+(flow, reporter, seq) re-sort keep using the meta word directly as its
+secondary key (``translator.canonical_order``).
+
+Everything here is hashable (frozen dataclasses), so a ``WireFormat`` can
+ride as a ``static_argnames`` entry through ``jax.jit`` and into Pallas
+kernel bodies; the helpers are plain u32 bit ops that lower inside any
+kernel.
+
+Resolution order for the active format: ``REPRO_WIRE_FORMAT`` env
+override (fail-loud, via ``configs.env``) > ``DFAConfig.wire_format`` >
+the ``"v1"`` default. Unknown names raise listing the registry.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+# flow-id value marking a padding row in canonical sorts / emitted
+# flow-id streams (flow ids are < total_flows << 2^32 - 1 by contract)
+PAD_FLOW_ID = 0xFFFFFFFF
+# meta-word sort key for padding rows (sorts after every real report)
+PAD_SORT_KEY = 0xFFFFFFFF
+
+
+@dataclass(frozen=True)
+class Field:
+    """One packed field: ``word`` index, bit ``shift``, bit ``width``.
+
+    The helpers are the only sanctioned way to read/write the field —
+    they work on u32 scalars/arrays, inside jit and inside Pallas bodies.
+    """
+
+    word: int
+    shift: int
+    width: int
+
+    def __post_init__(self):
+        if not (0 <= self.shift and self.shift + self.width <= 32):
+            raise ValueError(f"field {self} does not fit a u32 word")
+
+    @property
+    def mask(self) -> int:
+        """Value mask (pre-shift): ``(1 << width) - 1``."""
+        return (1 << self.width) - 1
+
+    @property
+    def capacity(self) -> int:
+        """Number of distinct values the field can hold."""
+        return 1 << self.width
+
+    def get(self, word_val: jax.Array) -> jax.Array:
+        """Extract from the raw u32 word VALUE."""
+        return ((word_val.astype(jnp.uint32) >> self.shift)
+                & jnp.uint32(self.mask))
+
+    def extract(self, words: jax.Array) -> jax.Array:
+        """Extract from a ``(..., W)`` u32 word ARRAY."""
+        return self.get(words[..., self.word])
+
+    def place(self, value: jax.Array) -> jax.Array:
+        """The field's contribution to its word: ``(value & mask) << shift``."""
+        return (value.astype(jnp.uint32)
+                & jnp.uint32(self.mask)) << self.shift
+
+    def set_in(self, word_val: jax.Array, value: jax.Array) -> jax.Array:
+        """Repack: replace this field inside an existing word value."""
+        keep = jnp.uint32(~(self.mask << self.shift) & 0xFFFFFFFF)
+        return (word_val.astype(jnp.uint32) & keep) | self.place(value)
+
+
+@dataclass(frozen=True)
+class WireFormat:
+    """A complete report + payload layout (all offsets/shifts/widths).
+
+    Word indices shared by both registered formats (the skeleton):
+
+    ========  =======================  =========================
+    position  DTA report (Fig 2)       RoCEv2 payload (Fig 4)
+    ========  =======================  =========================
+    word 0    flow_id                  flow_id
+    stats     words 2-8 (Table I x7)   words 1-7
+    tuple     words 9-13 (five-tuple)  words 8-12
+    meta      word 1                   word 13 (+ word 15)
+    csum      —                        word 14
+    ========  =======================  =========================
+
+    Only the FIELD packing inside the meta words differs per version.
+    Slices are stored as (start, stop) tuples so the dataclass stays
+    hashable (jit static arg); use the ``*_slice`` properties.
+    """
+
+    name: str
+    # DTA report (reporter -> translator)
+    report_words: int
+    report_reporter: Field
+    report_seq: Field
+    report_stats: Tuple[int, int]
+    report_tuple: Tuple[int, int]
+    # RoCEv2 payload / collector ring entry (translator -> collector)
+    payload_words: int
+    payload_reporter: Field
+    payload_seq: Field
+    payload_hist: Field
+    payload_stats: Tuple[int, int]
+    payload_tuple: Tuple[int, int]
+    csum_word: int
+    csum_covered: Tuple[int, ...]
+
+    def __post_init__(self):
+        if self.report_reporter.width != self.payload_reporter.width:
+            raise ValueError(
+                f"{self.name}: reporter_id width differs between report "
+                f"({self.report_reporter.width}) and payload "
+                f"({self.payload_reporter.width}) — the translator copies "
+                "the field verbatim, so the spaces must agree")
+        if self.report_seq.width != self.payload_seq.width:
+            raise ValueError(
+                f"{self.name}: seq width differs between report and "
+                "payload")
+        if self.csum_word in self.csum_covered:
+            raise ValueError(
+                f"{self.name}: checksum word {self.csum_word} cannot "
+                "cover itself")
+
+    # -- derived geometry --------------------------------------------------
+    @property
+    def report_flow_word(self) -> int:
+        return 0
+
+    @property
+    def report_meta_word(self) -> int:
+        return self.report_reporter.word
+
+    @property
+    def payload_meta_word(self) -> int:
+        return self.payload_reporter.word
+
+    @property
+    def n_reporters(self) -> int:
+        """Reporter-id space = the port-count cap."""
+        return self.report_reporter.capacity
+
+    @property
+    def reporter_width(self) -> int:
+        return self.report_reporter.width
+
+    @property
+    def seq_width(self) -> int:
+        return self.report_seq.width
+
+    @property
+    def seq_mask(self) -> int:
+        return self.report_seq.mask
+
+    @property
+    def seq_dup_window(self) -> int:
+        """§VI-B duplicate/replay detection window: how far below the
+        per-reporter max a seq may sit and still count as a replay rather
+        than a wrap. 1/32 of the seq space — the paper's 8 for the 8-bit
+        V1 field, scaled with the width so V2's u16 space doesn't
+        silently reuse the 8-deep window."""
+        return 1 << max(self.seq_width - 5, 0)
+
+    @property
+    def hist_counter_mask(self) -> int:
+        """Wrap mask of the translator's per-flow history counter (the
+        hardware register the paper sizes at 8 bits = the hist_idx field
+        width)."""
+        return self.payload_hist.mask
+
+    @property
+    def report_stats_slice(self) -> slice:
+        return slice(*self.report_stats)
+
+    @property
+    def report_tuple_slice(self) -> slice:
+        return slice(*self.report_tuple)
+
+    @property
+    def payload_stats_slice(self) -> slice:
+        return slice(*self.payload_stats)
+
+    @property
+    def payload_tuple_slice(self) -> slice:
+        return slice(*self.payload_tuple)
+
+    # -- pack / unpack / repack helpers ------------------------------------
+    def pack_report_meta(self, reporter_id: jax.Array,
+                         seq: jax.Array) -> jax.Array:
+        """(reporter_id, seq) -> the report meta word value."""
+        return self.report_reporter.place(reporter_id) \
+            | self.report_seq.place(seq)
+
+    def set_report_reporter(self, meta_word: jax.Array,
+                            reporter_id: jax.Array) -> jax.Array:
+        """Repack: overwrite the reporter-id field of a report meta word
+        (the pipeline stamps the shard/port identity post-pack)."""
+        return self.report_reporter.set_in(meta_word, reporter_id)
+
+    def payload_meta_words(self, reporter_id: jax.Array, seq: jax.Array,
+                           hist_idx: jax.Array
+                           ) -> Dict[int, jax.Array]:
+        """Meta-word values keyed by payload word index — every payload
+        word that is not flow/stats/tuple/csum. V1 packs all three fields
+        into word 13 (word 15 stays the zero pad); V2 splits hist_idx out
+        to word 15."""
+        zero = jnp.zeros_like(reporter_id.astype(jnp.uint32))
+        # the pad word (last) is always emitted so packers can assemble a
+        # full payload: V1 leaves it zero, V2 packs hist_idx there
+        out = {self.payload_reporter.word: zero,
+               self.payload_hist.word: zero,
+               self.payload_words - 1: zero}
+        for f, v in ((self.payload_reporter, reporter_id),
+                     (self.payload_seq, seq),
+                     (self.payload_hist, hist_idx)):
+            out[f.word] = out[f.word] | f.place(v)
+        return out
+
+
+# -- the registered formats --------------------------------------------------
+
+V1 = WireFormat(
+    name="v1",
+    report_words=14,
+    report_reporter=Field(word=1, shift=24, width=8),
+    report_seq=Field(word=1, shift=16, width=8),
+    report_stats=(2, 9),
+    report_tuple=(9, 14),
+    payload_words=16,
+    payload_reporter=Field(word=13, shift=24, width=8),
+    payload_seq=Field(word=13, shift=16, width=8),
+    payload_hist=Field(word=13, shift=0, width=8),
+    payload_stats=(1, 8),
+    payload_tuple=(8, 13),
+    csum_word=14,
+    csum_covered=tuple(range(14)) + (15,),
+)
+
+V2 = WireFormat(
+    name="v2",
+    report_words=14,
+    report_reporter=Field(word=1, shift=16, width=16),
+    report_seq=Field(word=1, shift=0, width=16),
+    report_stats=(2, 9),
+    report_tuple=(9, 14),
+    payload_words=16,
+    payload_reporter=Field(word=13, shift=16, width=16),
+    payload_seq=Field(word=13, shift=0, width=16),
+    payload_hist=Field(word=15, shift=0, width=8),
+    payload_stats=(1, 8),
+    payload_tuple=(8, 13),
+    csum_word=14,
+    csum_covered=tuple(range(14)) + (15,),
+)
+
+FORMATS: Dict[str, WireFormat] = {"v1": V1, "v2": V2}
+
+
+def get(name: str) -> WireFormat:
+    """Registry lookup; unknown names raise listing what exists."""
+    if name not in FORMATS:
+        raise ValueError(
+            f"unknown wire format {name!r}; registered: "
+            f"{sorted(FORMATS)} (declare new layouts in repro.core.wire)")
+    return FORMATS[name]
+
+
+def resolve(cfg=None) -> WireFormat:
+    """The active format: ``REPRO_WIRE_FORMAT`` env override >
+    ``cfg.wire_format`` > ``"v1"``. Both stages fail loud on junk."""
+    from repro.configs import env as ENV
+    name = ENV.read_choice("REPRO_WIRE_FORMAT")
+    if name is None:
+        name = getattr(cfg, "wire_format", "v1") or "v1"
+    return get(name)

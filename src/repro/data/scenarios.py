@@ -187,6 +187,45 @@ def cross_pod_mix(total_ports: int, events_per_port: int, T: int,
     return _assemble(per_port, T)
 
 
+def wide_port_sweep(total_ports: int, events_per_port: int, T: int,
+                    seed: int = 0):
+    """Hundreds-of-ports scaling scenario (the wide wire-format regime):
+    fully vectorized generation — every port owns two disjoint local
+    flows and all ports share one global elephant, so one trace
+    exercises both pod-local and maximally cross-pod homing. No
+    per-port/per-flow python loops, so it stays cheap at the >256-port
+    counts the V2 schema admits (where the other generators crawl)."""
+    P, E = total_ports, events_per_port
+    rng = np.random.default_rng(seed + 101)
+    local_src = 0x0C000000 + np.arange(P, dtype=np.uint32)
+    shared = np.asarray(
+        [0x0D000001, 0xD0000001, (443 << 16) | 443, 6, 0], np.uint32)
+    rows = {k: [] for k in ("ts", "size", "five_tuple", "valid")}
+    for t in range(T):
+        choice = rng.integers(0, 3, size=(P, E)).astype(np.uint32)
+        is_local = choice < 2
+        tup = np.zeros((P, E, 5), np.uint32)
+        tup[..., 0] = np.where(is_local, local_src[:, None], shared[0])
+        tup[..., 1] = np.where(
+            is_local,
+            0xC0000000 + 2 * np.arange(P, dtype=np.uint32)[:, None]
+            + (choice & 1), shared[1])
+        tup[..., 2] = np.where(is_local,
+                               ((1000 + choice) << 16) | 2000, shared[2])
+        tup[..., 3] = np.where(is_local, 17, shared[3])
+        offs = np.sort(rng.integers(0, PERIOD_US, size=(P, E)), axis=1)
+        rows["ts"].append(
+            (t * PERIOD_US + offs).astype(np.uint32).reshape(P * E))
+        rows["size"].append(
+            rng.integers(64, 1500, size=(P, E)).astype(np.uint32)
+            .reshape(P * E))
+        rows["five_tuple"].append(tup.reshape(P * E, 5))
+        rows["valid"].append(np.ones((P * E,), bool))
+    events = {k: np.stack(v) for k, v in rows.items()}
+    nows = np.asarray([(t + 1) * PERIOD_US for t in range(T)], np.uint32)
+    return events, nows
+
+
 SCENARIOS: Dict[str, Callable[..., Tuple[dict, np.ndarray]]] = {
     "elephants_mice": elephants_mice,
     "port_local": port_local,
@@ -195,6 +234,7 @@ SCENARIOS: Dict[str, Callable[..., Tuple[dict, np.ndarray]]] = {
     "bursty_iat": bursty_iat,
     "u32_wrap": u32_wrap,
     "cross_pod_mix": cross_pod_mix,
+    "wide_port_sweep": wide_port_sweep,
 }
 
 

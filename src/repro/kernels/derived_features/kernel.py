@@ -15,24 +15,26 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.core import wire as WIRE
 from repro.core.enrich import PER_ENTRY, entry_features
-from repro.core.protocol import META_WORD, STATS_SLICE
 
 WORDS = 16
 
 
 def derive_block(entries: jax.Array, valid: jax.Array,
-                 derived_dim: int) -> jax.Array:
+                 derived_dim: int,
+                 wire: WIRE.WireFormat = WIRE.V1) -> jax.Array:
     """(T, H, 16) u32 entries + (T, H) bool -> (T, derived_dim) f32.
 
     The feature math shared by this kernel and the fused gather_enrich
     kernel; all selection (newest entry) is iota/one-hot — no gathers —
-    so it lowers cleanly inside any Pallas body. Mirrors
-    repro.core.enrich.derive_ref.
+    and the hist_idx decode comes off the wire schema's Field helpers
+    (plain u32 bit ops), so it lowers cleanly inside any Pallas body.
+    Mirrors repro.core.enrich.derive_ref.
     """
     T, H, _ = entries.shape
-    stats = entries[:, :, STATS_SLICE].astype(jnp.uint32)
-    hist_idx = (entries[:, :, META_WORD] & 0xFF).astype(jnp.float32)
+    stats = entries[:, :, wire.payload_stats_slice].astype(jnp.uint32)
+    hist_idx = wire.payload_hist.extract(entries).astype(jnp.float32)
     feats = entry_features(stats)                    # (T, H, PER_ENTRY)
     vmask = valid.astype(jnp.float32)[..., None]
     feats = feats * vmask
@@ -59,22 +61,25 @@ def derive_block(entries: jax.Array, valid: jax.Array,
     return out[:, :derived_dim]
 
 
-def _kernel(entries_ref, valid_ref, out_ref, *, derived_dim: int):
+def _kernel(entries_ref, valid_ref, out_ref, *, derived_dim: int,
+            wire: WIRE.WireFormat):
     out_ref[...] = derive_block(entries_ref[...], valid_ref[...] > 0,
-                                derived_dim)
+                                derived_dim, wire=wire)
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("derived_dim", "flow_tile", "interpret"))
+                   static_argnames=("derived_dim", "flow_tile", "interpret",
+                                    "wire"))
 def derived_features_pallas(entries: jax.Array, valid: jax.Array,
                             derived_dim: int = 96, flow_tile: int = 256,
-                            interpret: bool = True) -> jax.Array:
+                            interpret: bool = True,
+                            wire: WIRE.WireFormat = WIRE.V1) -> jax.Array:
     """entries: (F, H, 16) u32; valid: (F, H) bool -> (F, derived_dim) f32."""
     F, H, W = entries.shape
     assert F % flow_tile == 0 and W == WORDS
 
     return pl.pallas_call(
-        functools.partial(_kernel, derived_dim=derived_dim),
+        functools.partial(_kernel, derived_dim=derived_dim, wire=wire),
         grid=(F // flow_tile,),
         in_specs=[
             pl.BlockSpec((flow_tile, H, WORDS), lambda f: (f, 0, 0)),

@@ -1,6 +1,7 @@
 """Registry client for derived_features (the enrichment stage)."""
 from __future__ import annotations
 
+from repro.core import wire as WIRE
 from repro.kernels import dispatch
 
 
@@ -13,4 +14,5 @@ def derived_features(entries, valid, cfg, backend=None, force=None):
         return impl(entries, valid, cfg)
     ft = dispatch.negotiate_tile(entries.shape[0], cfg.flow_tile)
     return impl(entries, valid, derived_dim=cfg.derived_dim, flow_tile=ft,
-                interpret=dispatch.interpret_flag(b))
+                interpret=dispatch.interpret_flag(b),
+                wire=WIRE.resolve(cfg))

@@ -35,6 +35,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core import wire as WIRE
 from repro.kernels.derived_features.kernel import derive_block
 
 WORDS = 16
@@ -45,7 +46,7 @@ WORDS = 16
 # ---------------------------------------------------------------------------
 
 def _full_kernel(flows_ref, mem_ref, valid_ref, out_ref, ent_scratch,
-                 val_scratch, *, derived_dim: int):
+                 val_scratch, *, derived_dim: int, wire: WIRE.WireFormat):
     T = flows_ref.shape[0]
 
     def gather(r, _):
@@ -56,16 +57,17 @@ def _full_kernel(flows_ref, mem_ref, valid_ref, out_ref, ent_scratch,
 
     jax.lax.fori_loop(0, T, gather, 0)
     out_ref[...] = derive_block(ent_scratch[...], val_scratch[...] > 0,
-                                derived_dim)
+                                derived_dim, wire=wire)
 
 
 @functools.partial(jax.jit,
                    static_argnames=("derived_dim", "report_tile",
-                                    "interpret"))
+                                    "interpret", "wire"))
 def gather_enrich_pallas(memory: jax.Array, entry_valid: jax.Array,
                          local_flow: jax.Array, derived_dim: int = 96,
                          report_tile: int = 128,
-                         interpret: bool = True) -> jax.Array:
+                         interpret: bool = True,
+                         wire: WIRE.WireFormat = WIRE.V1) -> jax.Array:
     """memory: (F, H, 16) u32; entry_valid: (F, H); local_flow: (R,) i32
     in [0, F) -> (R, derived_dim) f32."""
     F, H, W = memory.shape
@@ -74,7 +76,8 @@ def gather_enrich_pallas(memory: jax.Array, entry_valid: jax.Array,
     flows = jnp.clip(local_flow.astype(jnp.int32), 0, F - 1)
 
     return pl.pallas_call(
-        functools.partial(_full_kernel, derived_dim=derived_dim),
+        functools.partial(_full_kernel, derived_dim=derived_dim,
+                          wire=wire),
         grid=(R // report_tile,),
         in_specs=[
             pl.BlockSpec((report_tile,), lambda r: (r,)),
@@ -101,7 +104,7 @@ SEM_ENT, SEM_VAL = 0, 1
 
 def _hbm_kernel(flows_ref, mem_ref, valid_ref, out_ref, ent_scratch,
                 val_scratch, sems, *, derived_dim: int, report_tile: int,
-                n_tiles: int):
+                n_tiles: int, wire: WIRE.WireFormat):
     """Grid step i: wait for tile i's rows (prefetched by step i-1, or by
     the prologue for i == 0), kick off tile i+1's DMAs into the other
     scratch slot, then derive tile i in place."""
@@ -142,16 +145,17 @@ def _hbm_kernel(flows_ref, mem_ref, valid_ref, out_ref, ent_scratch,
     slot = i % N_SLOTS
     wait_tile(i, slot)
     out_ref[...] = derive_block(ent_scratch[slot], val_scratch[slot] > 0,
-                                derived_dim)
+                                derived_dim, wire=wire)
 
 
 @functools.partial(jax.jit,
                    static_argnames=("derived_dim", "report_tile",
-                                    "interpret"))
+                                    "interpret", "wire"))
 def gather_enrich_hbm_pallas(memory: jax.Array, entry_valid: jax.Array,
                              local_flow: jax.Array, derived_dim: int = 96,
                              report_tile: int = 128,
-                             interpret: bool = True) -> jax.Array:
+                             interpret: bool = True,
+                             wire: WIRE.WireFormat = WIRE.V1) -> jax.Array:
     """Same contract as gather_enrich_pallas, but ``memory``/``entry_valid``
     never leave HBM as whole blocks: VMEM holds only two
     (report_tile, H, 16) scratch slots, so F is unbounded by VMEM."""
@@ -178,7 +182,8 @@ def gather_enrich_hbm_pallas(memory: jax.Array, entry_valid: jax.Array,
     )
     return pl.pallas_call(
         functools.partial(_hbm_kernel, derived_dim=derived_dim,
-                          report_tile=report_tile, n_tiles=n_tiles),
+                          report_tile=report_tile, n_tiles=n_tiles,
+                          wire=wire),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((R, derived_dim), jnp.float32),
         interpret=interpret,

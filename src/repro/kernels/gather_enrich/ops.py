@@ -15,6 +15,7 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
+from repro.core import wire as WIRE
 from repro.kernels import dispatch
 
 
@@ -54,5 +55,6 @@ def gather_enrich(memory, entry_valid, local_flow, cfg, backend=None,
         flows = jnp.concatenate(
             [local_flow, jnp.zeros((Rp - R,), local_flow.dtype)])
     out = impl(memory, entry_valid, flows, derived_dim=cfg.derived_dim,
-               report_tile=rt, interpret=dispatch.interpret_flag(b))
+               report_tile=rt, interpret=dispatch.interpret_flag(b),
+               wire=WIRE.resolve(cfg))
     return out[:R]

@@ -65,6 +65,7 @@ from repro.core import collector as COLL
 from repro.core import protocol as PROTO
 from repro.core import reporter as REP
 from repro.core import translator as TRANS
+from repro.core import wire as WIRE
 from repro.core.pipeline import DFAState, DFASystem
 from repro.distributed.monitor import Heartbeat
 from repro.launch.mesh import make_dfa_mesh
@@ -112,12 +113,13 @@ def _np_tree(tree):
     return jax.tree.map(lambda a: np.asarray(jax.device_get(a)), tree)
 
 
-def _refold_checksum(payload: np.ndarray) -> np.ndarray:
-    """Recompute word 14 after a word-0 rewrite (host-side, tiny)."""
-    covered = jnp.asarray(payload[..., list(PROTO.CSUM_COVERED)])
-    pos = jnp.asarray(PROTO.CSUM_COVERED, jnp.uint32)
+def _refold_checksum(payload: np.ndarray,
+                     wf: WIRE.WireFormat) -> np.ndarray:
+    """Recompute the checksum word after a word-0 rewrite (host-side)."""
+    covered = jnp.asarray(payload[..., list(wf.csum_covered)])
+    pos = jnp.asarray(wf.csum_covered, jnp.uint32)
     out = payload.copy()
-    out[..., PROTO.CSUM_WORD] = np.asarray(
+    out[..., wf.csum_word] = np.asarray(
         PROTO.xor_checksum(covered, pos))
     return out
 
@@ -135,6 +137,7 @@ def rehome_state(state: DFAState, old_system: DFASystem,
     the pod-count-invariance contract defines, and it is preserved.
     """
     st = _np_tree(state)
+    wf = old_system.wire
     S = old_system.shards_per_pod
     fps = old_system.cfg.flows_per_shard
     H = old_system.cfg.history
@@ -154,9 +157,9 @@ def rehome_state(state: DFAState, old_system: DFASystem,
     mem = np.zeros((n_new * fps,) + st.collector.memory.shape[1:],
                    st.collector.memory.dtype)
     valid = np.zeros((n_new * fps, H), st.collector.entry_valid.dtype)
-    nseq = np.zeros((n_new, COLL.N_REPORTERS), st.collector.last_seq.dtype)
+    nseq = np.zeros((n_new, wf.n_reporters), st.collector.last_seq.dtype)
     old_seq = st.collector.last_seq.reshape(len(old_nodes),
-                                            COLL.N_REPORTERS)
+                                            wf.n_reporters)
     scalars = {k: np.zeros((n_new,), getattr(st.collector, k).dtype)
                for k in ("bad_checksum", "seq_anomalies", "received")}
     for new_i, old_i in enumerate(surv_pos):
@@ -179,7 +182,8 @@ def rehome_state(state: DFAState, old_system: DFASystem,
         for r in rows:
             ev = st.collector.entry_valid[base + r]
             h0 = int(np.nonzero(ev)[0][0])
-            key = st.collector.memory[base + r, h0, 8:13]
+            key = st.collector.memory[base + r, h0,
+                                      wf.payload_tuple_slice]
             kh = REP.hash_u32(jnp.asarray(key))
             pos = int(TRANS.rendezvous_position(kh[None], nodes_arr)[0])
             node = new_nodes[pos]
@@ -187,7 +191,7 @@ def rehome_state(state: DFAState, old_system: DFASystem,
             pay = st.collector.memory[base + r].copy()
             live = ev.astype(bool)
             pay[live, 0] = np.uint32(node * fps + r)
-            pay[live] = _refold_checksum(pay[live])
+            pay[live] = _refold_checksum(pay[live], wf)
             mem[dst, live] = pay[live]
             valid[dst] |= ev
             # the history counter travels with the flow (all entries of a

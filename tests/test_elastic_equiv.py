@@ -318,6 +318,73 @@ def test_elastic_recovery_smoke(tmp_path):
     assert rec_sys.home_nodes == (0, 1)   # pod 1 dead -> nodes 2,3 gone
 
 
+# -- the V2 wide format survives pod loss past the V1 port wall ----------
+
+V2_PORTS = 264           # > the V1 8-bit reporter-id space
+V2_EVENTS_PER_PORT = 4
+
+
+def _cfg_v2(pods, shards, nodes=()):
+    """The elastic config under wire_format='v2' with 264 ports.
+
+    elephants_mice shares the SAME 24 flow keys the V1 suite streams;
+    the ring grows to 1024 rows/device because at FPS=512 two of those
+    keys alias to one (node, slot) pair on node 0 under the full roster
+    (the documented unsplittable-collision case — recovery cannot split
+    a shared ring row). At 1024 all 24 keys map to distinct flow ids on
+    both rosters, so only the reporter-id population changes (264 ports
+    instead of 4) — exactly the field the wide format widens."""
+    return dataclasses.replace(
+        _cfg(pods, shards, nodes),
+        wire_format="v2",
+        ports_per_pod=V2_PORTS // pods,
+        flows_per_shard=1024,
+        reporter_slots=32,
+        port_report_capacity=32)
+
+
+def test_v2_kill_a_pod_past_256_ports(tmp_path):
+    """Kill-recover-replay with 264 virtual ports under V2: recovery's
+    checksum refold and seq merge run against the wide schema, and the
+    survivor end state still matches a clean small-mesh run bitwise."""
+    ev, nows_np = SC.build("elephants_mice", V2_PORTS,
+                           V2_EVENTS_PER_PORT, T)
+    events = {k: jnp.asarray(v) for k, v in ev.items()}
+    nows = jnp.asarray(nows_np)
+    full = DFASystem(_cfg_v2(2, 2), pod_mesh_or_skip(2, 2))
+    assert full.wire.name == "v2" and full.total_ports == V2_PORTS
+    with full.mesh:
+        full.stream(full.init_state(),
+                    {k: v[:KILL_AT] for k, v in events.items()},
+                    nows[:KILL_AT], snapshot_dir=str(tmp_path))
+    devices = full.mesh.devices.reshape(-1)[:2].tolist()
+    new_sys, new_state, period = EL.recover_from_snapshot(
+        full, str(tmp_path), 0, devices=devices)
+    assert period == KILL_AT and new_sys.home_nodes == (2, 3)
+    with new_sys.mesh:
+        out = new_sys.stream(new_state,
+                             {k: v[period:] for k, v in events.items()},
+                             nows[period:])
+    clean_sys = DFASystem(_cfg_v2(1, 2, nodes=(2, 3)),
+                          pod_mesh_or_skip(1, 2))
+    with clean_sys.mesh:
+        clean = clean_sys.stream(clean_sys.init_state(), events, nows)
+    assert int(np.asarray(clean.metrics["reports_recv"]).sum()) > 0
+    got = _merged_state(new_sys, out.state)
+    # ports past the V1 wall really reported before AND after the kill
+    assert (got["rep.seq"][256:] > 0).any(), \
+        "no port beyond the 8-bit space reported — the wide field was " \
+        "never exercised"
+    _assert_state_eq(_merged_state(clean_sys, clean.state), got,
+                     "v2 elephants_mice")
+    ref = _canon_periods(clean)[KILL_AT:]
+    for t, (r, g) in enumerate(zip(ref, _canon_periods(out))):
+        for k in r:
+            np.testing.assert_array_equal(
+                r[k], g[k],
+                err_msg=f"v2: replayed period {KILL_AT + t} {k}")
+
+
 # -- guard rails ---------------------------------------------------------
 
 def test_recovery_refuses_range_hash_home():

@@ -33,7 +33,8 @@ import numpy as np
 import pytest
 
 from conftest import pod_mesh_or_skip
-from repro.configs.dfa import REDUCED, REDUCED_MULTIPOD
+from repro.configs.dfa import (REDUCED, REDUCED_MULTIPOD,
+                               REDUCED_MULTIPOD_V2)
 from repro.core import translator as TRANS
 from repro.core.pipeline import DFASystem
 from repro.data import scenarios as SC
@@ -157,15 +158,17 @@ def _check_grid(grid, scenario, head, total_ports=TOTAL_PORTS):
             f"{scenario}: trace produced no routed reports"
         assert int(ref[2]["bucket_drops"].sum()) == 0
         # validity bound of the invariance contract: once a port's
-        # lifetime report count passes the 8-bit wire seq space, the
+        # lifetime report count passes the wire format's seq space, the
         # collector's per-DEVICE §VI-B dup window can fire differently
         # per mesh factorization (each device sees a mesh-dependent
         # subset of a reporter's seq stream). Scenarios must stay under
         # the wrap — assert it so a future longer trace fails here, not
-        # as an inscrutable seq_anomalies mismatch.
-        assert (ref[0]["rep.seq"] < 256).all(), \
-            f"{scenario}: a port wrapped its 8-bit seq; invariance of " \
-            "seq_anomalies is not guaranteed past the wrap"
+        # as an inscrutable seq_anomalies mismatch. The bound comes off
+        # the schema, not a hard-coded 256: V2 traces get the u16 space.
+        wf = _system(*grid[0], head, total_ports)[0].wire
+        assert (ref[0]["rep.seq"] <= wf.seq_mask).all(), \
+            f"{scenario}: a port wrapped its {wf.seq_width}-bit seq; " \
+            "invariance of seq_anomalies is not guaranteed past the wrap"
         for pods, shards in grid[1:]:
             got = _run(pods, shards, head, overlapped, scenario,
                        total_ports)
@@ -262,14 +265,102 @@ def test_single_device_multiport_mesh():
 
 
 def test_port_count_beyond_reporter_id_space_refused():
-    """>256 ports would alias two ports onto one 8-bit reporter id and
-    silently break canonical ordering — the constructor must refuse."""
+    """Under V1, >256 ports would alias two ports onto one 8-bit reporter
+    id and silently break canonical ordering — the constructor must
+    refuse (and point at the wide format)."""
     mesh = pod_mesh_or_skip(1, 1)
     cfg = dataclasses.replace(
         REDUCED, flow_home="hash", ports_per_pod=512,
         reporter_slots=64, port_report_capacity=1)
-    with pytest.raises(ValueError, match="8-bit reporter id"):
+    with pytest.raises(ValueError, match="8-bit reporter id") as e:
         DFASystem(cfg, mesh)
+    assert "v2" in str(e.value), \
+        "the refusal should tell the operator about wire_format='v2'"
+
+
+# -- the V2 wide format: the 256-port cap is a schema property ------------
+#
+# Same differential contract as the V1 grid, run past the V1 wall: 264
+# virtual ports (> the 8-bit reporter-id space) stream the vectorized
+# wide_port_sweep trace through three mesh factorizations under
+# wire_format="v2", and the merged state / per-period outputs / metrics
+# must stay bitwise identical. Trace is short (T=2, 2 events/port) —
+# the point is reporter ids above 255 surviving the whole
+# pack->route->unpack->canonical-sort path, not traffic volume.
+
+V2_PORTS = 264
+V2_EVENTS_PER_PORT = 2
+V2_T = 2
+V2_G = 8192              # global ring keyspace, fixed across meshes
+V2_GRID = ((1, 2), (2, 2), (4, 1))
+
+
+def _mesh_cfg_v2(pods, shards):
+    ndev = pods * shards
+    return dataclasses.replace(
+        REDUCED_MULTIPOD_V2,
+        pods=pods,
+        ports_per_pod=V2_PORTS // pods,
+        flows_per_shard=V2_G // ndev,
+        port_report_capacity=4,
+        kernel_backend="ref")
+
+
+def _run_v2(pods, shards, overlapped, scenario):
+    key = ("v2", pods, shards)
+    if key not in _systems:
+        mesh = pod_mesh_or_skip(pods, shards)
+        sysm = DFASystem(_mesh_cfg_v2(pods, shards), mesh)
+        _systems[key] = (sysm, jax.jit(sysm.run_periods),
+                         jax.jit(sysm.run_periods_overlapped))
+    sysm, seq, ovl = _systems[key]
+    tkey = ("v2", scenario)
+    if tkey not in _traces:
+        ev, nows = SC.build(scenario, V2_PORTS, V2_EVENTS_PER_PORT, V2_T)
+        _traces[tkey] = ({k: jnp.asarray(v) for k, v in ev.items()},
+                         jnp.asarray(nows))
+    events, nows = _traces[tkey]
+    with sysm.mesh:
+        out = (ovl if overlapped else seq)(sysm.init_state(), events,
+                                           nows)
+    return (sysm,
+            (_merged_state(sysm, out.state),
+             _canon_periods(out.enriched, out.flow_ids, out.mask),
+             {k: np.asarray(v) for k, v in out.metrics.items()}))
+
+
+def test_v2_accepts_port_counts_past_v1_wall():
+    """The config-level 256-port refusal is gone under V2: the same 512
+    ports V1 rejects construct cleanly, and describe() says why."""
+    mesh = pod_mesh_or_skip(1, 1)
+    cfg = dataclasses.replace(
+        REDUCED, flow_home="hash", wire_format="v2", ports_per_pod=512,
+        reporter_slots=8, port_report_capacity=1)
+    sysm = DFASystem(cfg, mesh)
+    assert sysm.total_ports == 512 and sysm.wire.name == "v2"
+    assert sysm.describe()["wire_format"] == "v2"
+
+
+def test_v2_pod_count_invariance_past_256_ports():
+    """THE V2 acceptance differential: 264 ports (> V1's 8-bit space) are
+    pod-count invariant under wire_format='v2', both drivers."""
+    for overlapped in (False, True):
+        ref_sys, ref = _run_v2(*V2_GRID[0], overlapped,
+                               "wide_port_sweep")
+        assert ref_sys.wire.seq_mask == 0xFFFF
+        assert int(ref[2]["reports_recv"].sum()) > 0
+        assert int(ref[2]["bucket_drops"].sum()) == 0
+        # ports past the V1 wall really reported: per-port seq counters
+        # above index 255 advanced, so reporter ids >255 crossed the wire
+        assert (np.asarray(ref[0]["rep.seq"])[256:] > 0).any(), \
+            "no port beyond the 8-bit space ever reported — the trace " \
+            "does not exercise the widened field"
+        assert (ref[0]["rep.seq"] <= ref_sys.wire.seq_mask).all()
+        for pods, shards in V2_GRID[1:]:
+            _, got = _run_v2(pods, shards, overlapped, "wide_port_sweep")
+            _assert_same(ref, got,
+                         f"v2 wide_port_sweep ovl={overlapped} "
+                         f"({pods},{shards}) vs {V2_GRID[0]}")
 
 
 def test_config_mesh_pod_mismatch_refused():

@@ -2,7 +2,7 @@
 checked against committed JSON fingerprints, so streaming/kernel/routing
 refactors can't silently change enrichment output.
 
-Two goldens are pinned:
+Three goldens are pinned:
 
 * ``run_periods_t4``          — the original single-shard (1,1) T=4 run
                                 (legacy flow_home="ingest" path);
@@ -10,7 +10,12 @@ Two goldens are pinned:
                                 REDUCED_MULTIPOD config over the
                                 cross_pod_mix scenario (hash homes,
                                 two-stage exchange; needs 4 forced host
-                                devices, skipped otherwise).
+                                devices, skipped otherwise);
+* ``run_periods_multipod_v2_t4`` — the same mesh/scenario shape under
+                                wire_format="v2" (u16 reporter_id/seq),
+                                with an extra ``ring_checksum`` xor fold
+                                over the raw collector ring bytes that
+                                pins the widened payload layout bitwise.
 
 Fingerprints hold the integer metrics bit-exactly and float summaries of
 the enriched features to 1e-4 (ref backend — pure jnp — so the values
@@ -37,7 +42,7 @@ import numpy as np
 from conftest import pod_mesh_or_skip
 from repro.compat import make_mesh
 from repro.configs import get_dfa_config
-from repro.configs.dfa import REDUCED_MULTIPOD
+from repro.configs.dfa import REDUCED_MULTIPOD, REDUCED_MULTIPOD_V2
 from repro.core.pipeline import DFASystem
 from repro.data import packets as PK
 from repro.data import scenarios as SC
@@ -116,10 +121,40 @@ def _build_multipod():
                "flow_home": "hash"})
 
 
+def _build_multipod_v2():
+    """The same (2,2) cross_pod_mix run under wire_format='v2'. The
+    enrichment fingerprint must MATCH the flow-level content of a V1 run
+    (the schema changes bit positions, not features); the extra
+    ``ring_checksum`` pins the widened byte layout itself — an xor fold
+    over every collector ring word, so any drift in where reporter_id /
+    seq / hist_idx land inside the 64 B payload trips the golden."""
+    mesh = pod_mesh_or_skip(2, 2)
+    cfg = dataclasses.replace(REDUCED_MULTIPOD_V2, kernel_backend="ref",
+                              port_report_capacity=32)
+    system = DFASystem(cfg, mesh)
+    assert system.wire.name == "v2"
+    ev, nows = SC.build("cross_pod_mix", system.total_ports,
+                        EVENTS_PER_SHARD // system.total_ports, T,
+                        seed=3)
+    events = {k: jnp.asarray(v) for k, v in ev.items()}
+    with system.mesh:
+        out = jax.jit(system.run_periods)(
+            system.init_state(), events, jnp.asarray(nows))
+    ring = np.asarray(out.state.collector.memory).reshape(-1)
+    return _fingerprint(
+        out.state, np.asarray(out.enriched), np.asarray(out.flow_ids),
+        np.asarray(out.mask), out.metrics,
+        extra={"mesh": [2, 2], "total_ports": system.total_ports,
+               "flow_home": "hash", "wire_format": "v2",
+               "ring_checksum": int(np.bitwise_xor.reduce(
+                   ring.view(np.uint32)))})
+
+
 # name -> builder; the file is tests/goldens/<name>.json
 GOLDENS = {
     "run_periods_t4": _build_single_shard,
     "run_periods_multipod_t4": _build_multipod,
+    "run_periods_multipod_v2_t4": _build_multipod_v2,
 }
 
 _regenerated = False
@@ -151,6 +186,10 @@ def _assert_matches(got, want):
     for k in ("T", "events_per_shard", "collector_received",
               "entry_valid_count", "regs_checksum"):
         assert got[k] == want[k], (k, got[k], want[k])
+    if "ring_checksum" in want:       # V2 golden pins the raw byte layout
+        assert got["ring_checksum"] == want["ring_checksum"], \
+            "collector ring bytes moved — a wire-layout change must be " \
+            "deliberate (bump/regen the golden with the schema change)"
     for t, (g, w) in enumerate(zip(got["periods"], want["periods"])):
         assert g["received"] == w["received"], t
         assert g["flow_ids"] == w["flow_ids"], t
@@ -185,3 +224,7 @@ def test_run_periods_matches_golden(monkeypatch):
 
 def test_multipod_run_periods_matches_golden(monkeypatch):
     _check("run_periods_multipod_t4", monkeypatch)
+
+
+def test_multipod_v2_run_periods_matches_golden(monkeypatch):
+    _check("run_periods_multipod_v2_t4", monkeypatch)

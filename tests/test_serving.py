@@ -251,7 +251,7 @@ DESCRIBE_KEYS = sorted([
     "reporter_slots", "port_report_capacity", "overlap_periods",
     "inference_head", "serve_offered_eps", "serve_budget_us",
     "serve_queue_events", "drop_policy", "home_nodes",
-    "snapshot_every_periods",
+    "snapshot_every_periods", "wire_format",
 ])
 
 
@@ -275,7 +275,7 @@ def test_describe_reports_serving_knobs_and_keys_stable():
     assert d2["serve_budget_us"] == 5_000
 
 
-# -- StepOutputs + stream() + deprecated shims --------------------------------
+# -- StepOutputs + stream() ---------------------------------------------------
 
 def test_stream_entry_point_matches_run_periods():
     mesh = make_mesh((1, 1), ("data", "model"))
@@ -295,35 +295,24 @@ def test_stream_entry_point_matches_run_periods():
 
 def test_step_outputs_arity_is_fixed():
     """The whole point of the redesign: preds presence never changes the
-    field count — only as_tuple() (the deprecated view) is variadic."""
+    field count."""
     assert StepOutputs._fields == ("state", "enriched", "flow_ids",
                                    "mask", "metrics", "preds")
     out5 = StepOutputs("s", "e", "f", "m", {})
-    assert out5.preds is None and len(out5.as_tuple()) == 5
+    assert out5.preds is None
     out6 = StepOutputs("s", "e", "f", "m", {}, preds="p")
-    assert len(out6.as_tuple()) == 6
+    assert out6.preds == "p" and len(out6) == 6
 
 
-def test_deprecated_tuple_shims_warn_and_match():
-    mesh = make_mesh((1, 1), ("data", "model"))
-    system = DFASystem(get_dfa_config(reduced=True), mesh)
-    events, nows = _trace(system.n_shards, T=2, E=128)
-    ev0 = {k: v[0] for k, v in events.items()}
-    with system.mesh:
-        with pytest.warns(DeprecationWarning, match="dfa_step"):
-            tup = system.dfa_step_tuple(system.init_state(), ev0, nows[0])
-        out = system.dfa_step(system.init_state(), ev0, nows[0])
-        assert len(tup) == 5              # no head -> historical 5-tuple
-        np.testing.assert_array_equal(np.asarray(tup[3]),
-                                      np.asarray(out.mask))
-        with pytest.warns(DeprecationWarning, match="run_periods"):
-            tup_s = system.run_periods_tuple(system.init_state(), events,
-                                             nows)
-        assert len(tup_s) == 5
-        with pytest.warns(DeprecationWarning,
-                          match="run_periods_overlapped"):
-            system.run_periods_overlapped_tuple(system.init_state(),
-                                                events, nows)
+def test_deprecated_tuple_shims_are_gone():
+    """The PR 6 deprecation window closed: the `*_tuple` drivers and the
+    variadic `as_tuple()` view no longer exist — callers consume
+    StepOutputs fields by name."""
+    for name in ("dfa_step_tuple", "run_periods_tuple",
+                 "run_periods_overlapped_tuple", "_tuple_shim"):
+        assert not hasattr(DFASystem, name), \
+            f"removed shim {name} reappeared"
+    assert not hasattr(StepOutputs, "as_tuple")
 
 
 # -- configs.env: the one override registry -----------------------------------
@@ -332,7 +321,7 @@ def test_env_registry_covers_all_repro_vars():
     names = set(ENV.registered())
     assert names == {"REPRO_KERNEL_BACKEND", "REPRO_GATHER_VARIANT",
                      "REPRO_INGEST_VARIANT", "REPRO_BENCH_TINY",
-                     "REPRO_REGEN_GOLDENS"}
+                     "REPRO_REGEN_GOLDENS", "REPRO_WIRE_FORMAT"}
     table = ENV.env_table()
     for n in names:
         assert n in table

@@ -1,0 +1,94 @@
+#!/usr/bin/env python
+"""Wire-layout lint: no raw meta bit-twiddling outside repro/core/wire.py.
+
+The versioned wire schema (repro.core.wire) is the ONE source of truth
+for where reporter_id / seq / hist_idx live inside the report and payload
+words. This lint keeps it that way: any *code* (strings and comments are
+tokenized away, so docstrings may still illustrate the layout) that
+re-derives the packing by hand — the V1 ``rid << 24`` shift, the
+``>> 24`` extract, the ``0x00FFFFFF`` keep-mask of the old repack, or the
+``(>> 16) & 0xFF`` seq read — fails the lint with a pointer at the
+schema helpers.
+
+Usage: ``python tools/lint_wire.py [root ...]`` (default ``src/repro``);
+exits non-zero listing every violation. Wired into the CI lint tier next
+to ruff.
+"""
+from __future__ import annotations
+
+import re
+import sys
+import tokenize
+from pathlib import Path
+
+PATTERNS = (
+    (re.compile(r"<<\s*24\b"), "reporter-id pack '<< 24'"),
+    (re.compile(r">>\s*24\b"), "reporter-id extract '>> 24'"),
+    (re.compile(r"0x00FF_?FFFF\b", re.IGNORECASE),
+     "meta repack keep-mask 0x00FFFFFF"),
+    (re.compile(r">>\s*16\s*\)?\s*&\s*0xFF\b"),
+     "seq extract '(>> 16) & 0xFF'"),
+)
+
+# the schema itself is the one place allowed to spell out bit positions
+ALLOWED = ("core/wire.py",)
+
+HINT = ("wire-layout bit twiddling belongs in repro/core/wire.py — use "
+        "Field.get/extract/place/set_in or the WireFormat pack helpers")
+
+
+def code_lines(path: Path) -> dict[int, str]:
+    """line number -> that line's CODE tokens joined by spaces (string
+    literals and comments dropped, so prose can't trip the patterns)."""
+    out: dict[int, list[str]] = {}
+    with open(path, "rb") as f:
+        try:
+            tokens = list(tokenize.tokenize(f.readline))
+        except (tokenize.TokenError, SyntaxError):
+            return {}
+    skip = {tokenize.STRING, tokenize.COMMENT, tokenize.ENCODING,
+            tokenize.NL, tokenize.NEWLINE, tokenize.INDENT,
+            tokenize.DEDENT}
+    # FSTRING_* only exist on 3.12+; treat their pieces as strings too
+    for name in ("FSTRING_START", "FSTRING_MIDDLE", "FSTRING_END"):
+        if hasattr(tokenize, name):
+            skip.add(getattr(tokenize, name))
+    for t in tokens:
+        if t.type in skip or not t.string:
+            continue
+        out.setdefault(t.start[0], []).append(t.string)
+    return {n: " ".join(parts) for n, parts in out.items()}
+
+
+def lint(roots: list[str]) -> list[str]:
+    violations = []
+    for root in roots:
+        base = Path(root)
+        files = sorted(base.rglob("*.py")) if base.is_dir() else [base]
+        for path in files:
+            posix = path.as_posix()
+            if any(posix.endswith(a) for a in ALLOWED):
+                continue
+            for lineno, code in sorted(code_lines(path).items()):
+                for pat, what in PATTERNS:
+                    if pat.search(code):
+                        violations.append(
+                            f"{posix}:{lineno}: {what}: {code.strip()}")
+    return violations
+
+
+def main(argv: list[str]) -> int:
+    roots = argv or ["src/repro"]
+    violations = lint(roots)
+    for v in violations:
+        print(v, file=sys.stderr)
+    if violations:
+        print(f"\nlint_wire: {len(violations)} violation(s). {HINT}",
+              file=sys.stderr)
+        return 1
+    print(f"lint_wire: clean ({', '.join(roots)})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
