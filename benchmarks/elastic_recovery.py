@@ -15,6 +15,20 @@ Two rows the nightly ``compare_bench.py`` gate watches:
   mesh; on smaller runners (the 1-device CI bench-smoke) the row is
   skipped with a note so the artifact stays honest about coverage.
 
+Two more rows from the fault-injection/live-recovery PR:
+
+* ``fault_unarmed_overhead`` — per-period wall delta between
+  ``fault_spec=None`` and an all-zero ``FaultSpec``: the unconfigured
+  fault path is compiled out, so this must stay within noise (the
+  zero-cost-when-unconfigured contract).
+* ``fault_injection_overhead`` — per-period cost of an ARMED mixed fault
+  schedule (the price of running chaos in the loop, informational).
+* ``serving_journal_recovery_us`` — the live in-loop recovery wall: a
+  chaos-killed pod absorbed MID-SERVE by ``ServingLoop`` (snapshot
+  restore + survivor rebuild + journal replay + pending re-stage),
+  i.e. the ``recovery_stall_us`` SLO bucket. Same 4-device guard as
+  ``elastic_recovery_us``.
+
 CPU wall numbers are relative only (no TPU in this container).
 
 Standalone: ``python benchmarks/elastic_recovery.py --tiny --json out.json``
@@ -101,9 +115,35 @@ def run():
     finally:
         shutil.rmtree(snap_dir, ignore_errors=True)
 
+    # -- fault path cost (single device: always runs) -------------------
+    from repro.data.faults import FaultSpec
+    unarmed_sys = DFASystem(
+        dataclasses.replace(_cfg(1, 1), fault_spec=FaultSpec()),
+        make_dfa_mesh(1, 1, devs[:1]))
+    armed_sys = DFASystem(
+        dataclasses.replace(_cfg(1, 1), fault_spec=FaultSpec(
+            seed=3, drop_rate=0.05, dup_rate=0.05, flip_rate=0.05,
+            replay_rate=0.02, reorder_rate=0.1)),
+        make_dfa_mesh(1, 1, devs[:1]))
+    with system.mesh:
+        plain = min(_stream_wall(system, events, nows)
+                    for _ in range(ITERS))
+    for name, sysm in (("fault_unarmed_overhead", unarmed_sys),
+                       ("fault_injection_overhead", armed_sys)):
+        with sysm.mesh:
+            _stream_wall(sysm, events, nows)                 # compile
+            wall = min(_stream_wall(sysm, events, nows)
+                       for _ in range(ITERS))
+        csv(name, (wall - plain) / T * 1e6,
+            f"per_period;T={T};plain_us={plain * 1e6:.0f};"
+            f"with_us={wall * 1e6:.0f};"
+            f"spec={sysm.cfg.fault_spec.describe()}")
+
     # -- recovery time: (2,2) -> kill pod 0 -> (1,2) --------------------
     if len(devs) < 4:
         csv("elastic_recovery_us", float("nan"),
+            f"skipped;need=4_devices;have={len(devs)}")
+        csv("serving_journal_recovery_us", float("nan"),
             f"skipped;need=4_devices;have={len(devs)}")
         return
     full = DFASystem(_cfg(2, 2), make_dfa_mesh(2, 2, devs[:4]))
@@ -122,6 +162,25 @@ def run():
         csv("elastic_recovery_us", rec_us,
             f"mesh=(2,2)->(1,2);period={period};replay_window<="
             f"{SNAP_EVERY};occupied_rows={moved}")
+    finally:
+        shutil.rmtree(snap_dir, ignore_errors=True)
+
+    # -- live in-loop recovery wall (ServingLoop journal path) ----------
+    from repro.launch.serving import ServingLoop, build_source
+    kill_at = 2 * SNAP_EVERY + 1          # mid-window: 1 journal replay
+    snap_dir = tempfile.mkdtemp(prefix="dfa_snap_bench_")
+    try:
+        loop = ServingLoop(
+            full, build_source(full, ev, nows_np),
+            snapshot_dir=snap_dir,
+            chaos=lambda t: [0] if t == kill_at else [],
+            recovery_devices=devs[:2])
+        report = loop.run(T)
+        assert report.recoveries == 1
+        csv("serving_journal_recovery_us", report.recovery_stall_us[0],
+            f"mesh=(2,2)->(1,2);kill_at={kill_at};"
+            f"journal_replayed={report.journal_replayed};"
+            f"periods={T};violations={report.violations}")
     finally:
         shutil.rmtree(snap_dir, ignore_errors=True)
 

@@ -9,7 +9,7 @@ from __future__ import annotations
 
 import dataclasses
 from dataclasses import dataclass, field
-from typing import Optional, Tuple
+from typing import Any, Optional, Tuple
 
 
 @dataclass(frozen=True)
@@ -267,6 +267,17 @@ class DFAConfig:
     #   "oldest" — head drop: evict the oldest queued events to admit
     #              the new ones (freshness-biased telemetry)
     drop_policy: str = "newest"
+    # -- transport fault injection (data.faults) -------------------------
+    # optional data.faults.FaultSpec applied between translation and
+    # collector ingest (the lossy RDMA segment). Typed Any so configs
+    # stays import-light; FaultSpec is frozen, keeping the config
+    # hashable/jit-static. None = fault path compiled out entirely.
+    fault_spec: Optional[Any] = None
+    # what launch.elastic does when re-homing hits an unsplittable ring
+    # slot (two live flows in one slot with different HRW winners):
+    #   "fail" — raise with the collision count (default: fail loud)
+    #   "warn" — count + warnings.warn, move the slot by its first entry
+    rehome_collision_policy: str = "fail"
 
     def serve_budget_resolved_us(self) -> int:
         """The serving loop's per-period SLO (falls back to the paper's

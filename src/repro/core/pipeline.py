@@ -76,6 +76,7 @@ from repro.core import protocol as PROTO
 from repro.core import reporter as REP
 from repro.core import translator as TRANS
 from repro.core import wire as WIRE
+from repro.data import faults as FAULTS
 from repro.kernels import dispatch
 
 Tree = Any
@@ -85,6 +86,32 @@ class DFAState(NamedTuple):
     reporter: REP.ReporterState
     translator: TRANS.TranslatorState
     collector: COLL.CollectorState
+
+
+def _global_seq_gap(coll_st, lseq0, recv0, lost0, dev, ax):
+    """Supersede the collector's shard-local seq-gap count with the
+    global one (inside the ingest shard_map, after COLL.ingest).
+
+    A reporter's seq stream fans out across flow-home shards, so each
+    shard's local §VI-B window multi-counts advances that were simply
+    routed elsewhere. Globally the accounting is exact: per reporter,
+    the window advance (max over shards — seqs are minted contiguously)
+    minus the accepted arrivals summed over shards is precisely the
+    number of reports that never landed anywhere (dropped in flight, or
+    discarded as corrupted). The global count lands on the lead shard so
+    summing scalars across shards — what every merge/differential
+    harness does — stays exact; ``lost0`` is the shard's pre-ingest
+    value, discarding the routing-polluted local delta.
+    """
+    advanced = (jnp.sum(jax.lax.pmax(coll_st.last_seq, ax))
+                - jnp.sum(jax.lax.pmax(lseq0, ax)))
+    arrivals = jax.lax.psum(jnp.sum(coll_st.received - recv0), ax)
+    lost_delta = (advanced - arrivals).astype(jnp.uint32)
+    lost = lost0 + jnp.where(dev == 0, lost_delta, jnp.uint32(0))
+    # counters ride the state as per-shard (1,) slices of an (n_shards,)
+    # array — keep that local shape
+    return coll_st._replace(
+        lost_reports=lost.reshape(coll_st.lost_reports.shape)), lost_delta
 
 
 class RoutedBatch(NamedTuple):
@@ -292,7 +319,22 @@ class DFASystem:
 
     # -- the step (two half-steps) ----------------------------------------
     _METRIC_KEYS = ("reports_sent", "reports_recv", "bucket_drops",
-                    "collisions", "bad_checksum", "seq_anomalies")
+                    "collisions", "bad_checksum", "seq_anomalies",
+                    "lost_reports")
+
+    @property
+    def fault_spec(self) -> Optional[FAULTS.FaultSpec]:
+        """The armed transport-fault schedule, or None (fault path
+        compiled out — zero cost when no injector is configured)."""
+        fs = self.cfg.fault_spec
+        return fs if fs is not None and fs.armed else None
+
+    def _metric_specs(self, ax) -> Dict[str, P]:
+        specs = {k: P() for k in self._METRIC_KEYS}
+        if self.fault_spec is not None:
+            specs.update({k: P() for k in FAULTS.COUNT_KEYS})
+            specs.update({k: P(ax) for k in FAULTS.LEDGER_KEYS})
+        return specs
 
     def ingest_half(self, state: DFAState, events: Dict[str, jax.Array],
                     now: jax.Array
@@ -328,6 +370,7 @@ class DFASystem:
             collisions0 = jnp.sum(rep_st.collisions)
             bad_csum0 = jnp.sum(coll_st.bad_checksum)
             seq_anom0 = jnp.sum(coll_st.seq_anomalies)
+            lost0 = jnp.sum(coll_st.lost_reports)
             # 1. reporter ingest (ingest_update via the dispatch
             # registry: ref = multipass oracle, pallas/interpret = fused
             # sort-once kernel; cfg.ingest_variant/event_tile select the
@@ -362,8 +405,23 @@ class DFASystem:
             # 4. owner-side translator: history addresses + RoCEv2 payloads
             tr_st, payloads, coords = TRANS.translate(
                 tr_st, routed, rmask, flow_base, cfg)
-            # 5. collector ring placement (ring_scatter via dispatch)
-            coll_st = COLL.ingest(coll_st, payloads, rmask, flow_base, cfg)
+            # 5. collector ring placement (ring_scatter via dispatch),
+            # optionally through the lossy-transport injector — faults
+            # hit only what the collector sees (the RDMA segment);
+            # routing coords stay faithful to what the switch emitted
+            ing_pay, ing_mask = payloads, rmask
+            fmetrics = {}
+            if self.fault_spec is not None:
+                ing_pay, ing_mask, fcounts, fledger = FAULTS.inject(
+                    payloads, rmask, self.fault_spec, wf, now_, shard)
+                fmetrics = {k: jax.lax.psum(v, ax)
+                            for k, v in fcounts.items()}
+                fmetrics.update(fledger)
+            lseq0, recv0 = coll_st.last_seq, coll_st.received
+            coll_st = COLL.ingest(coll_st, ing_pay, ing_mask, flow_base,
+                                  cfg)
+            coll_st, lost_delta = _global_seq_gap(
+                coll_st, lseq0, recv0, lost0, shard, ax)
             metrics = {
                 "reports_sent": jax.lax.psum(jnp.sum(mask), ax),
                 "reports_recv": jax.lax.psum(jnp.sum(rmask), ax),
@@ -376,6 +434,8 @@ class DFASystem:
                     jnp.sum(coll_st.bad_checksum) - bad_csum0, ax),
                 "seq_anomalies": jax.lax.psum(
                     jnp.sum(coll_st.seq_anomalies) - seq_anom0, ax),
+                "lost_reports": lost_delta,
+                **fmetrics,
             }
             return (rep_st, tr_st, coll_st, coords["local_flow"],
                     routed[:, 0], rmask, metrics)
@@ -388,8 +448,7 @@ class DFASystem:
             in_specs=(specs.reporter, specs.translator, specs.collector)
             + ev_specs + (P(),),
             out_specs=out_state_specs
-            + (P(ax), P(ax), P(ax),
-               {k: P() for k in self._METRIC_KEYS}),
+            + (P(ax), P(ax), P(ax), self._metric_specs(ax)),
             check=False)
         rep_st, tr_st, coll_st, local_flow, flow_id, rmask, metrics = fn(
             state.reporter, state.translator, state.collector,
@@ -473,6 +532,7 @@ class DFASystem:
             collisions0 = jnp.sum(rep_st.collisions)
             bad_csum0 = jnp.sum(coll_st.bad_checksum)
             seq_anom0 = jnp.sum(coll_st.seq_anomalies)
+            lost0 = jnp.sum(coll_st.lost_reports)
             # per-port views of this device's reporter slice
             regs = rep_st.regs.reshape(P_l, Rs, REP.N_REG)
             last_ts = rep_st.last_ts.reshape(P_l, Rs)
@@ -581,8 +641,21 @@ class DFASystem:
             # owner-side translator + ring placement, as in the 1D path
             tr_st, payloads, coords = TRANS.translate(
                 tr_st, routed, rmask, flow_base, cfg)
-            coll_st = COLL.ingest(coll_st, payloads, rmask, flow_base,
+            # optional lossy-transport injector on the collector-facing
+            # stream only (see the 1D path for the rationale)
+            ing_pay, ing_mask = payloads, rmask
+            fmetrics = {}
+            if self.fault_spec is not None:
+                ing_pay, ing_mask, fcounts, fledger = FAULTS.inject(
+                    payloads, rmask, self.fault_spec, wf, now_, dev)
+                fmetrics = {k: jax.lax.psum(v, ax)
+                            for k, v in fcounts.items()}
+                fmetrics.update(fledger)
+            lseq0, recv0 = coll_st.last_seq, coll_st.received
+            coll_st = COLL.ingest(coll_st, ing_pay, ing_mask, flow_base,
                                   cfg)
+            coll_st, lost_delta = _global_seq_gap(
+                coll_st, lseq0, recv0, lost0, dev, ax)
             metrics = {
                 "reports_sent": jax.lax.psum(sent, ax),
                 "reports_recv": jax.lax.psum(jnp.sum(rmask), ax),
@@ -593,6 +666,8 @@ class DFASystem:
                     jnp.sum(coll_st.bad_checksum) - bad_csum0, ax),
                 "seq_anomalies": jax.lax.psum(
                     jnp.sum(coll_st.seq_anomalies) - seq_anom0, ax),
+                "lost_reports": lost_delta,
+                **fmetrics,
             }
             return (rep_st, tr_st, coll_st, coords["local_flow"],
                     routed[:, 0], rmask, metrics)
@@ -606,8 +681,7 @@ class DFASystem:
             in_specs=(specs.reporter, specs.translator, specs.collector)
             + ev_specs + (P(),),
             out_specs=out_state_specs
-            + (P(ax), P(ax), P(ax),
-               {k: P() for k in self._METRIC_KEYS}),
+            + (P(ax), P(ax), P(ax), self._metric_specs(ax)),
             check=False)
         rep_st, tr_st, coll_st, local_flow, flow_id, rmask, metrics = fn(
             state.reporter, state.translator, state.collector,
@@ -802,6 +876,10 @@ class DFASystem:
             "serve_budget_us": cfg.serve_budget_resolved_us(),
             "serve_queue_events": cfg.serve_queue_events,
             "drop_policy": cfg.drop_policy,
+            # transport-fault / elastic robustness knobs
+            "fault_injection": (self.fault_spec.describe()
+                                if self.fault_spec is not None else "none"),
+            "rehome_collision_policy": cfg.rehome_collision_policy,
         }
 
     def jit_step(self, donate: bool = True):

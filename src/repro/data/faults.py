@@ -1,0 +1,279 @@
+"""Deterministic wire-level fault injection for the DFA transport.
+
+DFA's reports travel as one-way RDMA WRITEs from the switch — the
+translator computes the ring address ON the switch (§III-B), then the
+payload crosses a lossy fabric the collector never acknowledges. The
+paper's §VI-B sequence numbers and the Fig 4 checksum exist precisely
+because that segment can drop, duplicate, reorder, corrupt, or replay
+reports in flight. This module injects exactly those faults, seeded and
+composable, on packed payload batches at the one faithful point: AFTER
+translation (the address and history index already ride the payload, as
+they would on the wire) and BEFORE collector ingest.
+
+Fault taxonomy (all rates are independent per-row probabilities; victim
+classes are disjoint by construction, so one physical report suffers at
+most one fault and the accounting identities stay exact):
+
+==============  ========================================================
+fault           wire meaning / detection obligation
+==============  ========================================================
+drop            the WRITE never lands. Detected as a per-reporter seq
+                GAP (collector ``lost_reports``) once a later seq from
+                the same reporter arrives.
+bit-flip        in-flight corruption: one random bit of one random word
+                is inverted. Detected by the position-dependent
+                rotate-xor checksum (``bad_checksum``); the payload is
+                discarded, so its seq ALSO surfaces as a gap — a
+                corrupted report is a lost report that happened to
+                arrive (``lost_reports`` counts drops + flips; flips
+                are separable as ``lost - bad`` exactly).
+duplicate       the fabric delivers the same WRITE twice. The copy is
+                byte-identical and arrives after the original; the
+                collector's §VI-B dup tracking rejects it
+                (``seq_anomalies``), leaving ring state bitwise equal
+                to the clean run.
+stale replay    an adversarial/garbled re-send: same (reporter, seq)
+                identity, scrambled stats words, VALID checksum (a
+                well-formed packet — integrity checks cannot catch it;
+                only the seq identity can). Must be rejected BEFORE
+                placement or it would silently corrupt the ring.
+bounded reorder the fabric delivers a window of WRITEs out of order.
+                Applied to original rows only, within blocks of
+                ``reorder_window`` rows. The collector is
+                order-invariant for distinct (flow, hist) targets, so a
+                reorder-only run is bitwise identical to clean.
+==============  ========================================================
+
+Drop and flip victims are chosen among rows that are NOT their
+reporter's highest seq in the batch, so the resulting gap is detectable
+in the SAME period (another accepted report with a higher seq arrives
+alongside) — this is what makes the per-period identity
+``Δlost_reports == injected_drops + injected_flips`` exact rather than
+lagged. Tail losses (the reporter's last report of a period) are real
+too; the collector detects them one period late, which the unit suite
+covers separately — the injector just doesn't produce them, by design.
+
+Duplicate/replay copies are appended in a second R-row region after the
+originals, so a copy's row index always exceeds its original's: the
+collector's first-arrival-wins rule then deterministically keeps the
+original, which is what the bitwise differential requires (and what a
+real replay looks like — the copy is, by causality, later).
+
+Determinism: the PRNG key folds (spec.seed, period timestamp, device
+index), so a fault schedule is a pure function of the spec and the
+stream position — the differential suites replay it exactly.
+
+Accounting is in the UNWRAPPED seq regime (the §VI-B dup window and the
+gap tracker both assume the per-reporter wire seq has not wrapped); the
+property suite keeps its traces inside one wrap, matching the
+collector's documented regime.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import protocol as PROTO
+from repro.core import wire as WIRE
+
+# ledger codes (metrics["fault_kind"]): one per injected-fault class
+KIND_NONE = 0
+KIND_DROP = 1
+KIND_DUP = 2
+KIND_FLIP = 3
+KIND_REPLAY = 4
+
+COUNT_KEYS = ("injected_drops", "injected_dups", "injected_flips",
+              "injected_replays", "injected_reorders")
+LEDGER_KEYS = ("fault_kind", "fault_flow", "fault_hist")
+
+
+@dataclass(frozen=True)
+class FaultSpec:
+    """A seeded, composable transport-fault schedule.
+
+    Frozen + hashable so it can ride ``DFAConfig.fault_spec`` (the config
+    stays a jit-static argument). All-zero rates mean "not armed": the
+    pipeline skips injection entirely at trace time, so an unconfigured
+    fault path costs nothing."""
+
+    seed: int = 0
+    drop_rate: float = 0.0
+    dup_rate: float = 0.0
+    flip_rate: float = 0.0
+    replay_rate: float = 0.0
+    reorder_rate: float = 0.0      # per-BLOCK probability of a shuffle
+    reorder_window: int = 4        # max displacement bound (block size)
+
+    def __post_init__(self):
+        for f in ("drop_rate", "dup_rate", "flip_rate", "replay_rate",
+                  "reorder_rate"):
+            v = getattr(self, f)
+            if not 0.0 <= v <= 1.0:
+                raise ValueError(f"{f}={v} must be a probability")
+        if (self.drop_rate + self.dup_rate + self.flip_rate
+                + self.replay_rate) > 1.0:
+            raise ValueError(
+                "drop+dup+flip+replay rates exceed 1.0 — victim classes "
+                "are disjoint slices of one uniform draw, so their rates "
+                "must sum to at most 1")
+        if self.reorder_window < 2:
+            raise ValueError("reorder_window must be >= 2")
+
+    @property
+    def armed(self) -> bool:
+        return (self.drop_rate > 0 or self.dup_rate > 0
+                or self.flip_rate > 0 or self.replay_rate > 0
+                or self.reorder_rate > 0)
+
+    @property
+    def appends_copies(self) -> bool:
+        """Whether inject() returns a 2R-row batch (copy region)."""
+        return self.dup_rate > 0 or self.replay_rate > 0
+
+    def describe(self) -> str:
+        if not self.armed:
+            return "none"
+        parts = [f"{k}={getattr(self, k):g}" for k in
+                 ("drop_rate", "dup_rate", "flip_rate", "replay_rate",
+                  "reorder_rate") if getattr(self, k) > 0]
+        return f"seed={self.seed}," + ",".join(parts)
+
+
+def _blockwise_permutation(key, R: int, window: int, rate: float,
+                           ) -> jax.Array:
+    """A bounded-displacement permutation of ``range(R)``: rows move only
+    within their ``window``-sized block, and each block shuffles with
+    probability ``rate`` (identity otherwise)."""
+    blk = jnp.arange(R, dtype=jnp.int32) // window
+    n_blk = (R + window - 1) // window
+    k_act, k_rank = jax.random.split(key)
+    active = jax.random.uniform(k_act, (n_blk,)) < rate
+    pos = (jnp.arange(R, dtype=jnp.int32) % window).astype(jnp.float32)
+    rank = jnp.where(active[blk], jax.random.uniform(k_rank, (R,)), pos)
+    # two-pass stable argsort = lexsort by (block, rank): blocks stay in
+    # order, active blocks get a uniform shuffle inside
+    o1 = jnp.argsort(rank, stable=True)
+    return o1[jnp.argsort(blk[o1], stable=True)]
+
+
+def inject(payloads: jax.Array, mask: jax.Array, spec: FaultSpec,
+           wire: WIRE.WireFormat, now: jax.Array, salt: jax.Array
+           ) -> Tuple[jax.Array, jax.Array, Dict[str, jax.Array],
+                      Dict[str, jax.Array]]:
+    """Apply ``spec`` to one translated payload batch.
+
+    payloads: (R, payload_words) u32; mask: (R,) bool. ``now`` is the
+    period timestamp and ``salt`` the device index — both fold into the
+    PRNG key so every (period, device) gets an independent, reproducible
+    schedule.
+
+    Returns ``(payloads', mask', counts, ledger)``; the row count is R,
+    or 2R when the spec injects duplicate/replay copies (the second
+    region holds the copies, masked on only where one was injected).
+    ``counts`` holds the per-class injected totals (scalars, to be
+    psum'd into the period metrics); ``ledger`` holds per-row arrays
+    (``fault_kind``/``fault_flow``/``fault_hist``) the differential
+    suites use to reconstruct the expected end state.
+    """
+    R = payloads.shape[0]
+    key = jax.random.fold_in(jax.random.key(spec.seed),
+                             now.astype(jnp.uint32))
+    key = jax.random.fold_in(key, salt.astype(jnp.uint32))
+    k_reord, k_u, k_word, k_bit, k_scram = jax.random.split(key, 5)
+
+    pay, m = payloads, mask
+    n_moved = jnp.zeros((), jnp.uint32)
+    if spec.reorder_rate > 0:
+        perm = _blockwise_permutation(k_reord, R, spec.reorder_window,
+                                      spec.reorder_rate)
+        pay, m = pay[perm], m[perm]
+        n_moved = jnp.sum(m & (perm != jnp.arange(R))).astype(jnp.uint32)
+
+    rep = wire.payload_reporter.extract(pay)
+    seq = wire.payload_seq.extract(pay)
+    n_rep = wire.n_reporters
+    # per-reporter batch-max seq: a row holding it is the reporter's
+    # "tail" this period — losing it would defer gap detection by a
+    # period, so drop/flip victims exclude tails (see module docstring)
+    ridx = jnp.where(m, rep.astype(jnp.int32), n_rep)
+    bmax = jnp.zeros((n_rep + 1,), jnp.uint32).at[ridx].max(
+        seq + 1, mode="drop")
+    tail = m & (seq + 1 == bmax[jnp.clip(ridx, 0, n_rep)])
+
+    u = jax.random.uniform(k_u, (R,))
+    f0 = spec.flip_rate
+    d0 = f0 + spec.drop_rate
+    p0 = d0 + spec.dup_rate
+    r0 = p0 + spec.replay_rate
+    flip = m & ~tail & (u < f0) if spec.flip_rate > 0 \
+        else jnp.zeros_like(m)
+    drop = m & ~tail & (u >= f0) & (u < d0) if spec.drop_rate > 0 \
+        else jnp.zeros_like(m)
+    dup = m & (u >= d0) & (u < p0) if spec.dup_rate > 0 \
+        else jnp.zeros_like(m)
+    repl = m & (u >= p0) & (u < r0) if spec.replay_rate > 0 \
+        else jnp.zeros_like(m)
+
+    flow0 = pay[:, 0]
+    hist0 = wire.payload_hist.extract(pay)
+    kind = jnp.zeros((R,), jnp.uint32)
+
+    if spec.flip_rate > 0:
+        W = wire.payload_words
+        w_sel = jax.random.randint(k_word, (R,), 0, W)
+        b_sel = jax.random.randint(k_bit, (R,), 0, 32)
+        bitval = jnp.left_shift(jnp.uint32(1), b_sel.astype(jnp.uint32))
+        hit = (jnp.arange(W)[None, :] == w_sel[:, None]) & flip[:, None]
+        pay = pay ^ jnp.where(hit, bitval[:, None], jnp.uint32(0))
+        kind = jnp.where(flip, jnp.uint32(KIND_FLIP), kind)
+    if spec.drop_rate > 0:
+        m = m & ~drop
+        kind = jnp.where(drop, jnp.uint32(KIND_DROP), kind)
+
+    counts = {
+        "injected_drops": jnp.sum(drop).astype(jnp.uint32),
+        "injected_dups": jnp.sum(dup).astype(jnp.uint32),
+        "injected_flips": jnp.sum(flip).astype(jnp.uint32),
+        "injected_replays": jnp.sum(repl).astype(jnp.uint32),
+        "injected_reorders": n_moved,
+    }
+
+    if not spec.appends_copies:
+        ledger = {"fault_kind": kind, "fault_flow": flow0,
+                  "fault_hist": hist0}
+        return pay, m, counts, ledger
+
+    # copy region: duplicates are byte-identical; replays keep the
+    # (reporter, seq, flow, hist) identity but scramble the stats words
+    # and re-fold a VALID checksum — only the seq defense can catch them
+    cp = pay
+    cmask = dup | repl
+    ckind = jnp.where(dup, jnp.uint32(KIND_DUP),
+                      jnp.where(repl, jnp.uint32(KIND_REPLAY),
+                                jnp.uint32(KIND_NONE)))
+    if spec.replay_rate > 0:
+        sl = wire.payload_stats_slice
+        n_stats = sl.stop - sl.start
+        scram = jax.random.randint(
+            k_scram, (R, n_stats), 1, 1 << 30).astype(jnp.uint32)
+        stats = jnp.where(repl[:, None], cp[:, sl] ^ scram, cp[:, sl])
+        cp = cp.at[:, sl].set(stats)
+        covered = cp[:, jnp.asarray(wire.csum_covered)]
+        csum = PROTO.xor_checksum(
+            covered, jnp.asarray(wire.csum_covered, jnp.uint32))
+        cp = cp.at[:, wire.csum_word].set(
+            jnp.where(repl, csum, cp[:, wire.csum_word]))
+
+    pay2 = jnp.concatenate([pay, cp], axis=0)
+    m2 = jnp.concatenate([m, cmask], axis=0)
+    ledger = {
+        "fault_kind": jnp.concatenate([kind, ckind]),
+        "fault_flow": jnp.concatenate([flow0, cp[:, 0]]),
+        "fault_hist": jnp.concatenate(
+            [hist0, wire.payload_hist.extract(cp)]),
+    }
+    return pay2, m2, counts, ledger

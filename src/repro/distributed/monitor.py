@@ -67,6 +67,20 @@ class Heartbeat:
     stale_after_s: float = 60.0
     pod: int = 0
     expected_peers: Optional[Union[Dict[int, int], Iterable[int]]] = None
+    # processes deliberately removed from the roster (a recovered-from
+    # pod): they never beat again, and reporting them dead forever would
+    # re-trip the pod-loss trigger on every scan
+    retired: set = field(default_factory=set)
+
+    def retire_peers(self, indices: Iterable[int]) -> None:
+        """Stop reporting these processes as dead (post-recovery)."""
+        self.retired.update(int(i) for i in indices)
+
+    def retire_pod(self, pod: int) -> None:
+        """Retire every registered process of ``pod`` (the elastic
+        recovery path calls this after the survivor mesh is live)."""
+        self.retire_peers(i for i, p in self._expected().items()
+                          if p == pod)
 
     def beat(self, step: int):
         os.makedirs(self.directory, exist_ok=True)
@@ -115,10 +129,10 @@ class Heartbeat:
                     # unparsable beat counts as never-beaten, not healthy
                     continue
                 seen.add(idx)
-                if age > self.stale_after_s:
+                if age > self.stale_after_s and idx not in self.retired:
                     out[idx] = (age, int(d.get("pod", 0)))
         for idx, pod in self._expected().items():
-            if idx not in seen:
+            if idx not in seen and idx not in self.retired:
                 out[idx] = (float("inf"), pod)
         return out
 

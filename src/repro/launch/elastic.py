@@ -54,7 +54,8 @@ replays it and requires exact equality with a clean run.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Tuple
+import warnings
+from typing import Dict, List, NamedTuple, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -109,8 +110,51 @@ def survivor_system(system: DFASystem, dead_pod: int,
     return DFASystem(cfg, mesh, infer_fn=system.infer_fn)
 
 
+class RehomeStats(NamedTuple):
+    """What a membership-change state move actually did."""
+    moved_rows: int               # ring rows that changed node
+    unsplittable_collisions: int  # rows whose entries disagree on a home
+    scanned_rows: int = 0         # live rows examined (= moved on shrink)
+
+
 def _np_tree(tree):
     return jax.tree.map(lambda a: np.asarray(jax.device_get(a)), tree)
+
+
+def _row_winners(mem_row: np.ndarray, ev: np.ndarray,
+                 nodes_arr: jax.Array,
+                 wf: WIRE.WireFormat) -> np.ndarray:
+    """HRW winner positions for EVERY live entry of one ring row (each
+    entry stores its own five-tuple, words 8-12). A collision-free row
+    yields one distinct position; a slot collision whose keys disagree
+    on a home yields several — the unsplittable case."""
+    live = np.nonzero(ev)[0]
+    keys = jnp.asarray(mem_row[live][:, wf.payload_tuple_slice])
+    kh = REP.hash_u32(keys)
+    return np.asarray(TRANS.rendezvous_position(kh, nodes_arr))
+
+
+def _handle_unsplittable(count: int, policy: str, where: str) -> None:
+    """The documented re-homing gap, surfaced instead of silently
+    corrupting the ring: ``policy`` comes off
+    ``DFAConfig.rehome_collision_policy`` ("fail" default / "warn")."""
+    if count == 0:
+        return
+    msg = (f"{where}: {count} ring slot(s) hold entries from flows with "
+           "different HRW homes — the shared row and history counter "
+           "cannot be split during re-homing. Entries were moved by "
+           "their FIRST live entry's key; the other flow's history is "
+           "interleaved at the new home. Set "
+           "rehome_collision_policy='warn' to accept this, or resize "
+           "the ring (flows_per_shard) to make collisions rarer.")
+    if policy == "warn":
+        warnings.warn(msg, RuntimeWarning, stacklevel=3)
+    elif policy == "fail":
+        raise RuntimeError(msg)
+    else:
+        raise ValueError(
+            f"unknown rehome_collision_policy={policy!r} "
+            "(expected 'fail' or 'warn')")
 
 
 def _refold_checksum(payload: np.ndarray,
@@ -125,7 +169,8 @@ def _refold_checksum(payload: np.ndarray,
 
 
 def rehome_state(state: DFAState, old_system: DFASystem,
-                 new_system: DFASystem, dead_pod: int) -> DFAState:
+                 new_system: DFASystem, dead_pod: int
+                 ) -> Tuple[DFAState, RehomeStats]:
     """Move a full-mesh DFAState onto the survivor roster (host-side).
 
     Survivor node blocks copy bitwise to their new pod-major positions;
@@ -135,6 +180,13 @@ def rehome_state(state: DFAState, old_system: DFASystem,
     stats (last_seq, scalar counters) fold the dead devices' values into
     survivor device 0 — the merged view (elementwise max / sum) is what
     the pod-count-invariance contract defines, and it is preserved.
+
+    Ring slot collisions on a dead row (two flows sharing the slot whose
+    survivor homes DISAGREE) cannot be split — the row and its history
+    counter are one unit. They are detected per entry and surfaced via
+    ``new_system.cfg.rehome_collision_policy``: "fail" (default) raises
+    with the count, "warn" moves the row by its first live entry's key
+    and warns. Returns ``(new_state, RehomeStats)``.
     """
     st = _np_tree(state)
     wf = old_system.wire
@@ -161,7 +213,8 @@ def rehome_state(state: DFAState, old_system: DFASystem,
     old_seq = st.collector.last_seq.reshape(len(old_nodes),
                                             wf.n_reporters)
     scalars = {k: np.zeros((n_new,), getattr(st.collector, k).dtype)
-               for k in ("bad_checksum", "seq_anomalies", "received")}
+               for k in ("bad_checksum", "seq_anomalies", "received",
+                         "lost_reports")}
     for new_i, old_i in enumerate(surv_pos):
         src = slice(old_i * fps, (old_i + 1) * fps)
         dst = slice(new_i * fps, (new_i + 1) * fps)
@@ -175,17 +228,18 @@ def rehome_state(state: DFAState, old_system: DFASystem,
     # dead pod: re-home each ring row by the stored five-tuple
     nodes_arr = jnp.asarray(new_nodes, jnp.uint32)
     moved_rows = 0
+    unsplittable = 0
     for old_i in dead_pos:
         base = old_i * fps
         rows = np.nonzero(st.collector.entry_valid[base:base + fps]
                           .any(axis=1))[0]
         for r in rows:
             ev = st.collector.entry_valid[base + r]
-            h0 = int(np.nonzero(ev)[0][0])
-            key = st.collector.memory[base + r, h0,
-                                      wf.payload_tuple_slice]
-            kh = REP.hash_u32(jnp.asarray(key))
-            pos = int(TRANS.rendezvous_position(kh[None], nodes_arr)[0])
+            winners = _row_winners(st.collector.memory[base + r], ev,
+                                   nodes_arr, wf)
+            if len(set(winners.tolist())) > 1:
+                unsplittable += 1
+            pos = int(winners[0])
             node = new_nodes[pos]
             dst = pos * fps + r             # slot hash is roster-free
             pay = st.collector.memory[base + r].copy()
@@ -202,13 +256,18 @@ def rehome_state(state: DFAState, old_system: DFASystem,
         nseq[0] = np.maximum(nseq[0], old_seq[old_i])
         for k in scalars:
             scalars[k][0] += getattr(st.collector, k)[old_i]
+    _handle_unsplittable(unsplittable,
+                         new_system.cfg.rehome_collision_policy,
+                         f"rehome_state(dead_pod={dead_pod})")
 
     coll = COLL.CollectorState(
         memory=mem, entry_valid=valid, last_seq=nseq.reshape(-1),
         bad_checksum=scalars["bad_checksum"],
         seq_anomalies=scalars["seq_anomalies"],
-        received=scalars["received"])
-    return DFAState(rep, TRANS.TranslatorState(hist), coll)
+        received=scalars["received"],
+        lost_reports=scalars["lost_reports"])
+    return (DFAState(rep, TRANS.TranslatorState(hist), coll),
+            RehomeStats(moved_rows, unsplittable, moved_rows))
 
 
 def recover_from_snapshot(system: DFASystem, snapshot_dir: str,
@@ -225,7 +284,10 @@ def recover_from_snapshot(system: DFASystem, snapshot_dir: str,
     """
     restored, period = CKPT.restore(snapshot_dir, step=step)
     new_system = survivor_system(system, dead_pod, devices=devices)
-    rehomed = rehome_state(restored, system, new_system, dead_pod)
+    rehomed, stats = rehome_state(restored, system, new_system, dead_pod)
+    # callers keep the historical 3-tuple; the move accounting rides on
+    # the survivor system for anyone who wants it
+    new_system.last_rehome_stats = stats
     placed = jax.tree.map(
         lambda a, s: jax.device_put(jnp.asarray(a), s),
         rehomed, new_system.state_shardings())
@@ -249,12 +311,161 @@ def whole_dead_pods(hb: Heartbeat) -> List[int]:
 
 
 def maybe_recover(hb: Heartbeat, system: DFASystem, snapshot_dir: str,
-                  devices=None
+                  devices=None, ignore_pods: Sequence[int] = ()
                   ) -> Optional[Tuple[DFASystem, DFAState, int]]:
     """The pod-loss trigger: if a whole pod is dead per the heartbeat
-    roster, recover onto the survivor mesh; None when all pods live."""
-    dead = whole_dead_pods(hb)
+    roster, recover onto the survivor mesh; None when all pods live.
+
+    ``ignore_pods``: pods ALREADY recovered from — a heartbeat can keep
+    reporting a removed pod as dead (its processes never beat again), and
+    recovering from the same loss twice would re-home state that already
+    moved. Callers pass their removed set; a trip that only names ignored
+    pods is a no-op (idempotent recovery)."""
+    dead = [d for d in whole_dead_pods(hb) if d not in set(ignore_pods)]
     if not dead:
         return None
     return recover_from_snapshot(system, snapshot_dir, dead[0],
                                  devices=devices)
+
+
+# -- pod join (grow) -------------------------------------------------------
+
+def join_config(system: DFASystem, new_nodes: Sequence[int]):
+    """The pod-added config: pods+1, SAME total port set (each pod hosts
+    fewer ports), home_nodes extended with the new pod's node ids.
+
+    The new ids must sort strictly above the existing roster: the new pod
+    appends at the pod-major END of the mesh, and ``rendezvous_position``
+    requires a sorted roster for mesh-invariant tie-breaks — so new ids
+    above the old maximum keep positions and node ids aligned without
+    renumbering a single survivor."""
+    cfg = system.cfg
+    if cfg.flow_home != "rendezvous":
+        raise ValueError(
+            f"pod join needs flow_home='rendezvous', got "
+            f"{cfg.flow_home!r}: the range-sharded 'hash' scheme "
+            "renumbers every flow when the device count changes")
+    pods, S = system.mesh_pods, system.shards_per_pod
+    new_nodes = tuple(int(n) for n in new_nodes)
+    if len(new_nodes) != S:
+        raise ValueError(
+            f"a joining pod contributes one node id per shard: got "
+            f"{len(new_nodes)} ids for {S} shards_per_pod")
+    if list(new_nodes) != sorted(set(new_nodes)):
+        raise ValueError(f"new node ids {new_nodes} must be strictly "
+                         "increasing")
+    if system.home_nodes and min(new_nodes) <= max(system.home_nodes):
+        raise ValueError(
+            f"new node ids {new_nodes} must all exceed the current "
+            f"roster maximum {max(system.home_nodes)} — the joining pod "
+            "appends at the sorted end of the pod-major roster")
+    if system.total_ports % (pods + 1):
+        raise ValueError(
+            f"total ports {system.total_ports} do not spread over "
+            f"{pods + 1} pods")
+    return dataclasses.replace(
+        cfg, pods=pods + 1,
+        ports_per_pod=system.total_ports // (pods + 1),
+        home_nodes=tuple(system.home_nodes) + new_nodes)
+
+
+def join_system(system: DFASystem, new_nodes: Sequence[int],
+                devices=None) -> DFASystem:
+    """A DFASystem on the ``(pods+1, shards_per_pod)`` mesh."""
+    cfg = join_config(system, new_nodes)
+    mesh = make_dfa_mesh(cfg.pods, system.shards_per_pod,
+                         devices=devices)
+    return DFASystem(cfg, mesh, infer_fn=system.infer_fn)
+
+
+def expand_state(state: DFAState, old_system: DFASystem,
+                 new_system: DFASystem) -> Tuple[DFAState, RehomeStats]:
+    """Move a DFAState onto the grown roster (host-side) — the inverse of
+    :func:`rehome_state`, closing the ROADMAP pod-join remainder.
+
+    HRW's restriction property runs both ways: adding nodes only moves
+    the flows whose winner over the grown roster IS a new node —
+    ~1/(pods+1) of every device's live rows in expectation, nothing else.
+    So this scans every LIVE ring row on the existing devices (unlike the
+    shrink direction, which only walks the dead pod's rows), re-scores
+    the stored five-tuple over the grown roster, and moves the winners:
+    word 0 rewritten to ``new_node * fps + slot``, checksum refolded,
+    history counter travelling with the flow, source row cleared — so the
+    end state is bitwise what a clean run on the larger mesh would have
+    produced (modulo the replay window, pinned by the grow differential).
+    Reporter state is port-major global and transfers unchanged.
+
+    Slot collisions whose entries disagree on a home are unsplittable,
+    surfaced via ``rehome_collision_policy`` exactly as in the shrink
+    direction ("warn" keeps such rows at their first entry's home).
+    """
+    st = _np_tree(state)
+    wf = old_system.wire
+    fps = old_system.cfg.flows_per_shard
+    H = old_system.cfg.history
+    old_nodes = list(old_system.home_nodes)
+    new_nodes = list(new_system.home_nodes)
+    n_old, n_new = len(old_nodes), len(new_nodes)
+    assert new_nodes[:n_old] == old_nodes
+
+    hist = np.zeros((n_new * fps,), st.translator.hist_counter.dtype)
+    mem = np.zeros((n_new * fps,) + st.collector.memory.shape[1:],
+                   st.collector.memory.dtype)
+    valid = np.zeros((n_new * fps, H), st.collector.entry_valid.dtype)
+    nseq = np.zeros((n_new, wf.n_reporters), st.collector.last_seq.dtype)
+    old_seq = st.collector.last_seq.reshape(n_old, wf.n_reporters)
+    scalars = {k: np.zeros((n_new,), getattr(st.collector, k).dtype)
+               for k in ("bad_checksum", "seq_anomalies", "received",
+                         "lost_reports")}
+    # existing devices keep their pod-major positions: prefix-copy
+    hist[:n_old * fps] = st.translator.hist_counter
+    mem[:n_old * fps] = st.collector.memory
+    valid[:n_old * fps] = st.collector.entry_valid
+    nseq[:n_old] = old_seq
+    for k in scalars:
+        scalars[k][:n_old] = getattr(st.collector, k)
+
+    nodes_arr = jnp.asarray(new_nodes, jnp.uint32)
+    moved_rows = 0
+    scanned_rows = 0
+    unsplittable = 0
+    for old_i in range(n_old):
+        base = old_i * fps
+        rows = np.nonzero(st.collector.entry_valid[base:base + fps]
+                          .any(axis=1))[0]
+        scanned_rows += len(rows)
+        for r in rows:
+            ev = st.collector.entry_valid[base + r]
+            winners = _row_winners(st.collector.memory[base + r], ev,
+                                   nodes_arr, wf)
+            if len(set(winners.tolist())) > 1:
+                unsplittable += 1
+            pos = int(winners[0])
+            if pos < n_old:
+                continue                    # restriction: flow stays put
+            node = new_nodes[pos]
+            dst = pos * fps + r             # slot hash is roster-free
+            pay = st.collector.memory[base + r].copy()
+            live = ev.astype(bool)
+            pay[live, 0] = np.uint32(node * fps + r)
+            pay[live] = _refold_checksum(pay[live], wf)
+            mem[dst, live] = pay[live]
+            valid[dst] |= ev
+            hist[dst] = st.translator.hist_counter[base + r]
+            # clear the source: a clean larger-mesh run never wrote here
+            mem[base + r] = 0
+            valid[base + r] = False
+            hist[base + r] = 0
+            moved_rows += 1
+    _handle_unsplittable(unsplittable,
+                         new_system.cfg.rehome_collision_policy,
+                         f"expand_state(+{n_new - n_old} nodes)")
+
+    coll = COLL.CollectorState(
+        memory=mem, entry_valid=valid, last_seq=nseq.reshape(-1),
+        bad_checksum=scalars["bad_checksum"],
+        seq_anomalies=scalars["seq_anomalies"],
+        received=scalars["received"],
+        lost_reports=scalars["lost_reports"])
+    return (DFAState(st.reporter, TRANS.TranslatorState(hist), coll),
+            RehomeStats(moved_rows, unsplittable, scanned_rows))

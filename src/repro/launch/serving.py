@@ -34,9 +34,10 @@ otherwise). Wall-clock overruns are tracked separately as SLO
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import time
-from typing import Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -100,6 +101,14 @@ class ServingReport:
     per_period: List[PeriodAccounting]
     last: object = dataclasses.field(default=None, repr=False)
     snapshots: int = 0                # async DFAState checkpoints written
+    # -- live in-loop recovery (its own SLO bucket, NOT in latency_us:
+    # a membership change is a planned stall, not a per-period verdict
+    # latency — the gate prices it separately) --------------------------
+    recoveries: int = 0               # dead pods absorbed mid-serve
+    recovery_stall_us: List[float] = dataclasses.field(
+        default_factory=list)         # wall stall per recovery
+    duplicate_recovery_skips: int = 0  # re-trips for already-removed pods
+    journal_replayed: int = 0         # journal periods re-fed on recovery
 
     @property
     def latency(self) -> Dict[str, float]:
@@ -144,7 +153,10 @@ class ServingLoop:
 
     def __init__(self, system, source: TraceReplaySource,
                  budget_us: Optional[int] = None,
-                 snapshot_dir: Optional[str] = None):
+                 snapshot_dir: Optional[str] = None,
+                 heartbeat=None,
+                 chaos: Optional[Callable[[int], Sequence[int]]] = None,
+                 recovery_devices=None):
         if source.batch_events % system.n_shards:
             raise ValueError(
                 f"batch_events={source.batch_events} must divide across "
@@ -164,6 +176,96 @@ class ServingLoop:
         self.snapshot_dir = (snapshot_dir if snapshot_dir is not None
                              else (system.cfg.snapshot_dir or None))
         self.snapshot_every = int(system.cfg.snapshot_every_periods)
+        # -- live recovery (ROADMAP elastic remainder) ------------------
+        # journal: the last snapshot-window's period batches, host-side.
+        # Depth snapshot_every+1 covers the worst replay (recovery one
+        # period before the next snapshot: snapshot_every-1 completed
+        # periods to re-feed) plus the already-staged pending batch.
+        # ``heartbeat`` (distributed.monitor.Heartbeat with a roster)
+        # trips recovery when a whole pod goes stale; ``chaos`` is the
+        # test hook — ``chaos(t) -> pods to declare dead after period
+        # t`` (original pod numbering, like the heartbeat roster).
+        self.heartbeat = heartbeat
+        self.chaos = chaos
+        self.recovery_devices = recovery_devices
+        self._journal: collections.deque = collections.deque(
+            maxlen=max(self.snapshot_every, 1) + 1)
+        # original pod id -> live flag; recovery renumbers mesh positions
+        # but heartbeat/chaos speak original ids, and a second trip for a
+        # removed pod must be a counted no-op, not a second rehome
+        self._live_pods: List[int] = list(range(system.mesh_pods))
+        self._removed_pods: set = set()
+        self._dup_skips = 0
+
+    # -- live recovery internals ------------------------------------------
+
+    def _dead_pods(self, t: int) -> List[int]:
+        """Original pod ids newly declared dead after period ``t`` (chaos
+        hook + whole-pod heartbeat trips), double-recovery filtered."""
+        declared: List[int] = []
+        if self.chaos is not None:
+            declared.extend(int(d) for d in self.chaos(t))
+        if self.heartbeat is not None:
+            from repro.launch import elastic as EL
+            declared.extend(EL.whole_dead_pods(self.heartbeat))
+        fresh = []
+        for d in dict.fromkeys(declared):       # de-dup, keep order
+            if d in self._removed_pods:
+                self._dup_skips += 1            # idempotence, not a crash
+            else:
+                fresh.append(d)
+        return fresh
+
+    def _recover(self, dead_orig: int, t: int):
+        """Absorb a dead pod WITHOUT leaving the serving loop: restore the
+        newest snapshot, rebuild on the survivor mesh, re-home the dead
+        pod's flows, then re-feed the journal window — the loop continues
+        on the smaller mesh with bitwise the state an offline
+        ``recover_from_snapshot`` + trace replay would have produced,
+        except no external trace access is needed. Returns the recovered
+        on-device state; the wall stall is the caller's SLO bucket."""
+        from repro.checkpoint import checkpoint as CKPT
+        from repro.launch import elastic as EL
+        pos = self._live_pods.index(dead_orig)  # current mesh position
+        if self.snapshot_dir is None:
+            raise RuntimeError(
+                "live recovery needs snapshots: construct the loop with "
+                "snapshot_dir (and cfg.snapshot_every_periods > 0) so a "
+                "restore point exists inside the journal window")
+        new_system, state, period = EL.recover_from_snapshot(
+            self.system, self.snapshot_dir, pos,
+            devices=self.recovery_devices)
+        if self.source.batch_events % new_system.n_shards:
+            raise ValueError(
+                f"batch_events={self.source.batch_events} does not "
+                f"divide across the {new_system.n_shards} survivor "
+                "shards")
+        new_ring = HostIngestRing(
+            new_system,
+            self.source.batch_events // new_system.n_shards)
+        new_step = new_system.jit_step(donate=True)
+        replayed = 0
+        for idx, b, nw in sorted(self._journal, key=lambda e: e[0]):
+            if period < idx <= t:
+                out = new_step(state, *new_ring.stage(b, nw))
+                state = out.state
+                replayed += 1
+        if period + replayed != t:
+            raise RuntimeError(
+                f"journal window does not reach the snapshot: restored "
+                f"period {period}, journal replayed {replayed} of the "
+                f"{t - period} periods since — raise "
+                "snapshot_every_periods/journal depth or snapshot more "
+                "often")
+        jax.block_until_ready(state)
+        self.system = new_system
+        self.ring = new_ring
+        self._step = new_step
+        self._live_pods.pop(pos)
+        self._removed_pods.add(dead_orig)
+        if self.heartbeat is not None:
+            self.heartbeat.retire_pod(dead_orig)
+        return state, replayed
 
     def run(self, periods: int, drain: bool = True,
             state=None) -> ServingReport:
@@ -179,12 +281,17 @@ class ServingLoop:
         out = None
         snapshots = 0
         snap_threads: List = []
+        recoveries = 0
+        stalls: List[float] = []
+        replayed_total = 0
+        dup0 = self._dup_skips
         snap_on = self.snapshot_every > 0 and self.snapshot_dir is not None
         if snap_on:
             from repro.checkpoint import checkpoint as CKPT
 
         batch, now, acct = source.next_batch()      # period 0, staged
         staged = self.ring.stage(batch, now)        # before the loop
+        self._journal.append((1, batch, now))       # consumed by period 1
         t = 0
         while True:
             accounts.append(acct)
@@ -199,6 +306,7 @@ class ServingLoop:
             if has_next:
                 batch, now, acct = source.next_batch()
                 staged = self.ring.stage(batch, now)
+                self._journal.append((t + 1, batch, now))
                 if t >= periods:
                     drained += 1
             state = out.state
@@ -218,6 +326,25 @@ class ServingLoop:
                 if th is not None:
                     snap_threads.append(th)
                 snapshots += 1
+            # live recovery: a heartbeat-declared (or chaos-injected)
+            # dead pod is absorbed HERE, between periods — snapshot
+            # threads must land first so the restore point exists
+            for dead in self._dead_pods(t):
+                for th in snap_threads:
+                    th.join()
+                snap_threads.clear()
+                stall0 = time.perf_counter()
+                state, replayed = self._recover(dead, t)
+                stalls.append((time.perf_counter() - stall0) * 1e6)
+                recoveries += 1
+                replayed_total += replayed
+                system = self.system            # the survivor system
+                if has_next:
+                    # the pending batch was staged on the dead mesh:
+                    # re-stage on the survivor ring (it is also in the
+                    # journal, but replay stops at t — the pending
+                    # period t+1 runs in the normal loop path)
+                    staged = self.ring.stage(batch, now)
             if not has_next:
                 break
 
@@ -230,7 +357,10 @@ class ServingLoop:
             offered=total.offered, processed=total.processed,
             dropped=total.dropped, violations=violations,
             latency_us=latencies, per_period=accounts, last=out,
-            snapshots=snapshots)
+            snapshots=snapshots,
+            recoveries=recoveries, recovery_stall_us=stalls,
+            duplicate_recovery_skips=self._dup_skips - dup0,
+            journal_replayed=replayed_total)
 
 
 def serve_trace(system, events, nows=None, periods: int = 100,

@@ -77,10 +77,67 @@ def test_staged_equals_direct():
                                   np.asarray(b.memory))
 
 
+def test_seq_gap_counts_lost_reports():
+    """A hole in a reporter's seq stream is a lost report (§VI-B gap)."""
+    cfg = get_dfa_config(reduced=True)
+    st = C.init_state(cfg)
+    pays = jnp.stack([mk_payload(f, 0, seq=s, rid=1)
+                      for f, s in [(0, 0), (1, 1), (3, 3), (4, 4)]])
+    st = C.ingest(st, pays, jnp.ones(4, bool), 0, cfg)  # seq 2 missing
+    assert int(st.lost_reports) == 1
+    assert int(st.received) == 4
+
+
+def test_tail_drop_detected_next_period():
+    """Losing a reporter's LAST report of a period leaves no same-period
+    gap evidence; the next period's reports expose it."""
+    cfg = get_dfa_config(reduced=True)
+    st = C.init_state(cfg)
+    p1 = mk_payload(0, 0, seq=0, rid=1)
+    st = C.ingest(st, p1[None], jnp.ones(1, bool), 0, cfg)
+    assert int(st.lost_reports) == 0        # seq 1 loss not yet visible
+    p2 = jnp.stack([mk_payload(2, 1, seq=2, rid=1),
+                    mk_payload(3, 1, seq=3, rid=1)])
+    st = C.ingest(st, p2, jnp.ones(2, bool), 0, cfg)
+    assert int(st.lost_reports) == 1        # the period-1 tail, one late
+    assert int(st.received) == 3
+
+
+def test_within_batch_dup_first_arrival_wins():
+    """Two payloads with one (reporter, seq) identity in one ingest: the
+    first is placed, the second is rejected as a seq anomaly — a valid
+    checksum must not let a replay overwrite ring state."""
+    cfg = get_dfa_config(reduced=True)
+    st = C.init_state(cfg)
+    pays = jnp.stack([mk_payload(1, 0, seq=0, marker=11),
+                      mk_payload(1, 0, seq=0, marker=99)])
+    st = C.ingest(st, pays, jnp.ones(2, bool), 0, cfg)
+    assert int(np.asarray(st.memory)[1, 0, 1]) == 11
+    assert int(st.seq_anomalies) == 1
+    assert int(st.received) == 1
+    assert int(st.lost_reports) == 0
+
+
+def test_cross_batch_replay_rejected():
+    """A replayed (reporter, seq) arriving a batch later is rejected by
+    the §VI-B window, leaving the ring bitwise untouched."""
+    cfg = get_dfa_config(reduced=True)
+    st = C.init_state(cfg)
+    p1 = mk_payload(0, 0, seq=5, marker=11)
+    st = C.ingest(st, p1[None], jnp.ones(1, bool), 0, cfg)
+    mem0 = np.asarray(st.memory).copy()
+    replay = mk_payload(0, 0, seq=5, marker=99)
+    st = C.ingest(st, replay[None], jnp.ones(1, bool), 0, cfg)
+    np.testing.assert_array_equal(np.asarray(st.memory), mem0)
+    assert int(st.seq_anomalies) == 1
+    assert int(st.received) == 1
+
+
 def test_gather_flow_history():
     cfg = get_dfa_config(reduced=True)
     st = C.init_state(cfg)
-    pays = jnp.stack([mk_payload(3, h, marker=h) for h in range(4)])
+    # distinct seqs: same-(reporter, seq) rows would be dup-rejected
+    pays = jnp.stack([mk_payload(3, h, seq=h, marker=h) for h in range(4)])
     st = C.ingest(st, pays, jnp.ones(4, bool), 0, cfg)
     entries, valid = C.gather_flow_history(st, jnp.asarray([3, 0]))
     assert entries.shape == (2, cfg.history, P.PAYLOAD_WORDS)

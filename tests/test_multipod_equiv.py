@@ -99,7 +99,8 @@ def _merged_state(system, state):
     out["coll.memory"] = np.asarray(c.memory)
     out["coll.entry_valid"] = np.asarray(c.entry_valid)
     out["coll.last_seq"] = np.asarray(c.last_seq).reshape(n, -1).max(0)
-    for k in ("bad_checksum", "seq_anomalies", "received"):
+    for k in ("bad_checksum", "seq_anomalies", "received",
+              "lost_reports"):
         out[f"coll.{k}"] = np.asarray(getattr(c, k)).astype(
             np.uint64).sum()
     return out

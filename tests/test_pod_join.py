@@ -1,0 +1,303 @@
+"""Elastic pod JOIN: grow the mesh mid-stream, prove it matches clean.
+
+The shrink direction (tests/test_elastic_equiv.py) rests on HRW's
+restriction property: removing nodes never changes a survivor's winner.
+This suite pins the other direction — ADDING a pod only moves the flows
+whose winner over the grown roster is a new node (~1/(pods+1) of live
+rows), and ``expand_state`` moves exactly those:
+
+    (1,2) mesh, roster (0,1), 4 ports (4 per pod)
+        │  stream periods 0..JOIN_AT
+        ▼
+    join_config/join_system: pods+1, roster (0,1,2,3), 2 ports per pod
+    expand_state: scan live rows, move new-node winners, clear sources
+        │  stream periods JOIN_AT..T on the (2,2) mesh
+        ▼
+    merged end state + post-join per-period outputs ≡ a clean full-trace
+    run on the (2,2)/(0,1,2,3) mesh — BITWISE (no replay window: the
+    state moves live, nothing is restored from a stale snapshot)
+
+Also pinned here: the movement bound (0 < moved ≤ 3/4 of scanned live
+rows — the expectation is 1/2 when 2 nodes join 2), join_config's
+roster discipline (new ids strictly above the old maximum, one per
+shard, port divisibility), and the unsplittable ring-slot collision
+surface in BOTH directions: two flows sharing a ring slot whose HRW
+homes disagree cannot be split — ``rehome_collision_policy`` "fail"
+(default) raises with the count, "warn" moves by the first entry's key
+and warns (satellite of the fault-injection PR).
+"""
+import dataclasses
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import pod_mesh_or_skip
+from repro.configs.dfa import REDUCED
+from repro.core import reporter as REP
+from repro.core import translator as TRANS
+from repro.core.pipeline import DFASystem
+from repro.data import scenarios as SC
+from repro.launch import elastic as EL
+
+TOTAL_PORTS = 4
+EVENTS_PER_PORT = 48
+T = 6
+JOIN_AT = 3
+FPS = 1024               # ring rows per device — FIXED across rosters
+REPORTER_SLOTS = 64
+PORT_CAPACITY = 16
+
+_systems = {}
+_trace_cache = {}
+
+
+def _cfg(pods, shards, nodes=(), policy="fail"):
+    return dataclasses.replace(
+        REDUCED,
+        flow_home="rendezvous",
+        pods=pods,
+        ports_per_pod=TOTAL_PORTS // pods,
+        reporter_slots=REPORTER_SLOTS,
+        flows_per_shard=FPS,
+        port_report_capacity=PORT_CAPACITY,
+        home_nodes=nodes,
+        rehome_collision_policy=policy,
+        kernel_backend="ref")
+
+
+def _system(pods, shards, nodes=(), policy="fail"):
+    key = (pods, shards, nodes, policy)
+    if key not in _systems:
+        mesh = pod_mesh_or_skip(pods, shards)
+        _systems[key] = DFASystem(_cfg(pods, shards, nodes, policy), mesh)
+    return _systems[key]
+
+
+def _trace(name):
+    if name not in _trace_cache:
+        ev, nows = SC.build(name, TOTAL_PORTS, EVENTS_PER_PORT, T)
+        _trace_cache[name] = ({k: jnp.asarray(v) for k, v in ev.items()},
+                              jnp.asarray(nows))
+    return _trace_cache[name]
+
+
+def _merged_state(system, state):
+    n = system.n_shards
+    out = {f"rep.{k}": np.asarray(a)
+           for k, a in state.reporter._asdict().items()}
+    out["tr.hist_counter"] = np.asarray(state.translator.hist_counter)
+    c = state.collector
+    out["coll.memory"] = np.asarray(c.memory)
+    out["coll.entry_valid"] = np.asarray(c.entry_valid)
+    out["coll.last_seq"] = np.asarray(c.last_seq).reshape(n, -1).max(0)
+    for k in ("bad_checksum", "seq_anomalies", "received",
+              "lost_reports"):
+        out[f"coll.{k}"] = np.asarray(getattr(c, k)).astype(
+            np.uint64).sum()
+    return out
+
+
+def _canon_periods(out):
+    enr, fid, em = (np.asarray(out.enriched), np.asarray(out.flow_ids),
+                    np.asarray(out.mask))
+    per = []
+    for t in range(enr.shape[0]):
+        m = em[t]
+        order = np.argsort(fid[t][m], kind="stable")
+        per.append({"fid": fid[t][m][order], "enr": enr[t][m][order]})
+    return per
+
+
+def _place(system, state):
+    return jax.tree.map(lambda a, s: jax.device_put(jnp.asarray(a), s),
+                        state, system.state_shardings())
+
+
+def _grow_mid_stream(scenario):
+    """Stream JOIN_AT periods on (1,2)/(0,1), join pod (2,3), stream the
+    rest on (2,2) — returns (big system, stream out, RehomeStats)."""
+    events, nows = _trace(scenario)
+    small = _system(1, 2, nodes=(0, 1))
+    with small.mesh:
+        pre = small.stream(small.init_state(),
+                           {k: v[:JOIN_AT] for k, v in events.items()},
+                           nows[:JOIN_AT])
+    big = EL.join_system(small, (2, 3))
+    assert big.mesh_pods == 2 and big.home_nodes == (0, 1, 2, 3)
+    assert big.total_ports == TOTAL_PORTS
+    grown, stats = EL.expand_state(pre.state, small, big)
+    with big.mesh:
+        out = big.stream(_place(big, grown),
+                         {k: v[JOIN_AT:] for k, v in events.items()},
+                         nows[JOIN_AT:])
+    return big, out, stats
+
+
+@pytest.mark.parametrize("scenario", ["cross_pod_mix", "elephants_mice"])
+def test_grow_matches_clean_large_mesh(scenario):
+    """THE grow differential: mid-stream join ≡ a clean full-trace run
+    on the larger mesh — merged state AND post-join per-period outputs,
+    bitwise."""
+    events, nows = _trace(scenario)
+    big, out, stats = _grow_mid_stream(scenario)
+    assert stats.moved_rows > 0, "no flow re-homed to the new pod"
+    assert stats.unsplittable_collisions == 0
+    clean_sys = _system(2, 2, nodes=(0, 1, 2, 3))
+    with clean_sys.mesh:
+        clean = clean_sys.stream(clean_sys.init_state(), events, nows)
+    assert int(np.asarray(clean.metrics["reports_recv"]).sum()) > 0
+    ref, got = (_merged_state(clean_sys, clean.state),
+                _merged_state(big, out.state))
+    for k in ref:
+        np.testing.assert_array_equal(ref[k], got[k],
+                                      err_msg=f"{scenario}: state {k}")
+    refp = _canon_periods(clean)[JOIN_AT:]
+    gotp = _canon_periods(out)
+    assert len(refp) == len(gotp) == T - JOIN_AT
+    for t, (r, g) in enumerate(zip(refp, gotp)):
+        for k in r:
+            np.testing.assert_array_equal(
+                r[k], g[k],
+                err_msg=f"{scenario}: post-join period {JOIN_AT + t} {k}")
+    for k, v in out.metrics.items():
+        np.testing.assert_array_equal(
+            np.asarray(clean.metrics[k])[JOIN_AT:], np.asarray(v),
+            err_msg=f"{scenario}: post-join metric {k}")
+
+
+def test_grow_movement_bound():
+    """HRW movement bound: strictly some rows move, but no more than 3/4
+    of the scanned live rows (the expectation is 1/2 for 2 nodes joining
+    2; 3/4 is a deterministic-trace safety margin, and a full-scan move
+    would mean the restriction property broke)."""
+    _, _, stats = _grow_mid_stream("cross_pod_mix")
+    assert stats.scanned_rows > 0
+    assert 0 < stats.moved_rows <= 0.75 * stats.scanned_rows, \
+        (f"moved {stats.moved_rows} of {stats.scanned_rows} live rows — "
+         "outside the HRW ~1/(pods+1) movement bound")
+
+
+def test_join_config_validation():
+    small = _system(1, 2, nodes=(0, 1))
+    with pytest.raises(ValueError, match="one node id per shard"):
+        EL.join_config(small, (2,))
+    with pytest.raises(ValueError, match="strictly increasing"):
+        EL.join_config(small, (3, 2))
+    with pytest.raises(ValueError, match="strictly increasing"):
+        EL.join_config(small, (2, 2))
+    with pytest.raises(ValueError, match="exceed the current roster"):
+        EL.join_config(small, (1, 2))
+    # 4 ports cannot spread over 3 pods
+    two = _system(2, 2, nodes=(0, 1, 2, 3))
+    with pytest.raises(ValueError, match="do not spread"):
+        EL.join_config(two, (4, 5))
+    # range-hash homes renumber the keyspace on every roster change
+    mesh = pod_mesh_or_skip(1, 2)
+    hash_sys = DFASystem(dataclasses.replace(
+        _cfg(1, 2), flow_home="hash", home_nodes=()), mesh)
+    with pytest.raises(ValueError, match="rendezvous"):
+        EL.join_config(hash_sys, (2, 3))
+
+
+# -- unsplittable ring-slot collisions (both directions) ------------------
+
+COLLISION_SLOT = 5       # any ring row: the keys are planted by hand
+
+
+def _disagreeing_keys(nodes):
+    """Two five-tuple keys whose HRW winners over ``nodes`` differ —
+    brute-forced, deterministic. (Which ring row they share is the
+    test's choice: the collision surface only depends on two flows
+    occupying one row while disagreeing on a home.)"""
+    nodes_arr = jnp.asarray(nodes, jnp.uint32)
+    first = None
+    for i in range(1, 4096):
+        key = np.asarray([i, i + 1, 7, 9, 11], np.uint32)
+        pos = int(np.asarray(TRANS.rendezvous_position(
+            REP.hash_u32(jnp.asarray(key[None, :])), nodes_arr))[0])
+        if first is None:
+            first = (key, pos)
+        elif pos != first[1]:
+            return first[0], key
+    raise AssertionError("no disagreeing key pair found")
+
+
+def _state_with_shared_slot(system, keys, slot, device_pos):
+    """A host DFAState whose ring row ``slot`` on device ``device_pos``
+    interleaves entries from two different flows (the collision case)."""
+    st = jax.tree.map(np.asarray, jax.device_get(system.init_state()))
+    wf = system.wire
+    row = device_pos * system.cfg.flows_per_shard + slot
+    mem = st.collector.memory.copy()
+    ev = st.collector.entry_valid.copy()
+    for h, key in enumerate(keys):
+        mem[row, h, wf.payload_tuple_slice] = key
+        ev[row, h] = True
+    return st._replace(collector=st.collector._replace(
+        memory=mem, entry_valid=ev))
+
+
+def test_rehome_collision_fails_loud_by_default():
+    """Shrink direction: a dead-pod ring row shared by two flows whose
+    survivor homes disagree must raise (default policy) — moving it
+    silently would interleave one flow's history into the other's."""
+    full = _system(2, 2, nodes=(0, 1, 2, 3))
+    surv = _system(1, 2, nodes=(2, 3))
+    k1, k2 = _disagreeing_keys((2, 3))
+    state = _state_with_shared_slot(full, (k1, k2), COLLISION_SLOT,
+                                    device_pos=0)
+    with pytest.raises(RuntimeError, match="cannot be split"):
+        EL.rehome_state(state, full, surv, dead_pod=0)
+
+
+def test_rehome_collision_warn_policy_counts():
+    """policy='warn': the move proceeds by the first entry's key, warns,
+    and the count lands in RehomeStats."""
+    full = _system(2, 2, nodes=(0, 1, 2, 3), policy="warn")
+    surv = _system(1, 2, nodes=(2, 3), policy="warn")
+    k1, k2 = _disagreeing_keys((2, 3))
+    state = _state_with_shared_slot(full, (k1, k2), COLLISION_SLOT,
+                                    device_pos=0)
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        _, stats = EL.rehome_state(state, full, surv, dead_pod=0)
+    assert stats.unsplittable_collisions == 1
+    assert any("cannot be split" in str(w.message) for w in caught)
+
+
+def test_expand_collision_fails_loud_by_default():
+    """Grow direction: same surface — a live row whose entries disagree
+    on a home over the GROWN roster is unsplittable."""
+    small = _system(1, 2, nodes=(0, 1))
+    big = _system(2, 2, nodes=(0, 1, 2, 3))
+    k1, k2 = _disagreeing_keys((0, 1, 2, 3))
+    state = _state_with_shared_slot(small, (k1, k2), COLLISION_SLOT,
+                                    device_pos=0)
+    with pytest.raises(RuntimeError, match="cannot be split"):
+        EL.expand_state(state, small, big)
+
+
+def test_expand_collision_warn_policy_counts():
+    small = _system(1, 2, nodes=(0, 1), policy="warn")
+    big = _system(2, 2, nodes=(0, 1, 2, 3), policy="warn")
+    k1, k2 = _disagreeing_keys((0, 1, 2, 3))
+    state = _state_with_shared_slot(small, (k1, k2), COLLISION_SLOT,
+                                    device_pos=0)
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        _, stats = EL.expand_state(state, small, big)
+    assert stats.unsplittable_collisions == 1
+    assert any("cannot be split" in str(w.message) for w in caught)
+
+
+def test_unknown_collision_policy_refused():
+    small = _system(1, 2, nodes=(0, 1))
+    big_cfg_sys = _system(2, 2, nodes=(0, 1, 2, 3), policy="explode")
+    k1, k2 = _disagreeing_keys((0, 1, 2, 3))
+    state = _state_with_shared_slot(small, (k1, k2), COLLISION_SLOT,
+                                    device_pos=0)
+    with pytest.raises(ValueError, match="rehome_collision_policy"):
+        EL.expand_state(state, small, big_cfg_sys)

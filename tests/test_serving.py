@@ -252,6 +252,7 @@ DESCRIBE_KEYS = sorted([
     "inference_head", "serve_offered_eps", "serve_budget_us",
     "serve_queue_events", "drop_policy", "home_nodes",
     "snapshot_every_periods", "wire_format",
+    "fault_injection", "rehome_collision_policy",
 ])
 
 

@@ -1,0 +1,271 @@
+"""Live in-loop recovery: the serving loop absorbs a dead pod mid-serve.
+
+PR 7 proved offline elasticity: stop the world, ``recover_from_snapshot``,
+re-feed the lost periods from the trace. The serving loop cannot stop the
+world and does not HAVE the trace — it has a paced source that hands out
+each batch exactly once. This suite proves the in-loop path closes that
+gap with a host-side period journal:
+
+    ServingLoop, (2,2) mesh, snapshots every 2 periods, journal of the
+    last snapshot-window's batches
+        │  chaos/heartbeat declares pod 0 dead after period t
+        ▼
+    in-loop ``_recover``: restore newest snapshot, rebuild on the (1,2)
+    survivor mesh, re-home the dead pod's flows, re-feed the journaled
+    periods since the snapshot, re-stage the pending batch — and keep
+    serving, never leaving ``run()``
+        │
+        ▼
+    final state BITWISE ≡ offline ``recover_from_snapshot`` + replaying
+    the same captured batches through the survivor ``jit_step``
+
+The recovery wall-clock stall is reported as its own SLO bucket
+(``recovery_stall_us``), never mixed into the per-period verdict
+latencies. A second death declaration for an already-removed pod (a
+heartbeat that keeps seeing the stale roster entry, or a chaos replay)
+must be a *counted no-op* — ``duplicate_recovery_skips`` — not a second
+rehome; after a heartbeat-triggered recovery the dead processes are
+retired from the roster so the trigger disarms itself.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from conftest import pod_mesh_or_skip
+from repro.checkpoint import checkpoint as CKPT
+from repro.configs.dfa import REDUCED
+from repro.core.pipeline import DFASystem
+from repro.data import scenarios as SC
+from repro.distributed.monitor import Heartbeat
+from repro.launch import elastic as EL
+from repro.launch.serving import HostIngestRing, ServingLoop, build_source
+
+TOTAL_PORTS = 4
+EVENTS_PER_PORT = 48
+T = 6
+SNAP_EVERY = 2
+FPS = 512
+REPORTER_SLOTS = 64
+PORT_CAPACITY = 16
+
+_systems = {}
+_trace_cache = {}
+
+
+def _cfg(pods, shards, nodes=(), snap_every=SNAP_EVERY):
+    return dataclasses.replace(
+        REDUCED,
+        flow_home="rendezvous",
+        pods=pods,
+        ports_per_pod=TOTAL_PORTS // pods,
+        reporter_slots=REPORTER_SLOTS,
+        flows_per_shard=FPS,
+        port_report_capacity=PORT_CAPACITY,
+        home_nodes=nodes,
+        snapshot_every_periods=snap_every,
+        kernel_backend="ref")
+
+
+def _system(pods, shards, nodes=(), snap_every=SNAP_EVERY):
+    key = (pods, shards, nodes, snap_every)
+    if key not in _systems:
+        mesh = pod_mesh_or_skip(pods, shards)
+        _systems[key] = DFASystem(
+            _cfg(pods, shards, nodes, snap_every), mesh)
+    return _systems[key]
+
+
+def _trace():
+    if "t" not in _trace_cache:
+        _trace_cache["t"] = SC.build("cross_pod_mix", TOTAL_PORTS,
+                                     EVENTS_PER_PORT, T)
+    return _trace_cache["t"]
+
+
+def _source(system):
+    ev, nows = _trace()
+    return build_source(system, ev, nows)
+
+
+def _captured_batches(system, n):
+    """The first ``n`` (batch, now) pairs an identically-built source
+    yields — the replay source is deterministic, so these are exactly
+    what a live loop consumed."""
+    src = _source(system)
+    return [src.next_batch()[:2] for _ in range(n)]
+
+
+def _survivor_devices(full):
+    return full.mesh.devices.reshape(-1)[:2].tolist()
+
+
+def _offline_oracle(full, dead_pod, kill_at, snap_dir):
+    """What live recovery must reproduce, computed the PR 7 way: run the
+    full mesh to ``kill_at``, snapshot at the last multiple of
+    SNAP_EVERY, offline-recover, then replay the remaining captured
+    batches through the survivor ``jit_step``."""
+    batches = _captured_batches(full, T)
+    snap_at = (kill_at // SNAP_EVERY) * SNAP_EVERY
+    ring = HostIngestRing(full, len(batches[0][0]["ts"]) // full.n_shards)
+    step = full.jit_step(donate=True)
+    state = full.init_sharded_state()
+    for t in range(1, snap_at + 1):
+        b, now = batches[t - 1]
+        state = step(state, *ring.stage(b, now)).state
+    jax.block_until_ready(state)
+    CKPT.save(state, snap_dir, step=snap_at,
+              keep=full.cfg.snapshot_keep, async_=False)
+    new_sys, state, period = EL.recover_from_snapshot(
+        full, snap_dir, dead_pod, devices=_survivor_devices(full))
+    assert period == snap_at
+    new_ring = HostIngestRing(
+        new_sys, len(batches[0][0]["ts"]) // new_sys.n_shards)
+    new_step = new_sys.jit_step(donate=True)
+    for t in range(snap_at + 1, T + 1):
+        b, now = batches[t - 1]
+        state = new_step(state, *new_ring.stage(b, now)).state
+    jax.block_until_ready(state)
+    return new_sys, state
+
+
+@pytest.mark.parametrize("kill_at,expect_replay",
+                         [(SNAP_EVERY * 2, 0), (SNAP_EVERY * 2 + 1, 1)],
+                         ids=["at-snapshot", "mid-window"])
+def test_live_recovery_matches_offline(kill_at, expect_replay, tmp_path):
+    """THE differential: kill pod 0 after period ``kill_at`` mid-serve;
+    the loop recovers in place (journal replay, no trace access) and the
+    final state is bitwise what offline recover-and-replay produces.
+    ``mid-window`` kills one period past a snapshot, so exactly one
+    journaled period must be re-fed."""
+    full = _system(2, 2)
+    loop = ServingLoop(
+        full, _source(full), snapshot_dir=str(tmp_path / "live"),
+        chaos=lambda t: [0] if t == kill_at else [],
+        recovery_devices=_survivor_devices(full))
+    report = loop.run(T)
+    assert report.recoveries == 1
+    assert report.journal_replayed == expect_replay
+    assert report.duplicate_recovery_skips == 0
+    assert len(report.recovery_stall_us) == 1
+    assert report.recovery_stall_us[0] > 0
+    # the stall is its own bucket: one latency sample per period, none
+    # of them the recovery wall
+    assert len(report.latency_us) == T
+    assert report.balanced
+    # the loop really moved to the survivor mesh and kept serving
+    assert loop.system.mesh_pods == 1
+    assert loop.system.home_nodes == (2, 3)
+    assert loop._live_pods == [1] and loop._removed_pods == {0}
+    ref_sys, ref_state = _offline_oracle(full, 0, kill_at,
+                                         str(tmp_path / "off"))
+    assert loop.system.home_nodes == ref_sys.home_nodes
+    for a, b in zip(jax.tree.leaves(ref_state),
+                    jax.tree.leaves(report.last.state)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_duplicate_death_declaration_is_counted_noop(tmp_path):
+    """Chaos declares pod 0 dead TWICE (a re-trip after removal): one
+    recovery happens, the second declaration is skipped and counted, and
+    the end state matches the single-kill offline oracle."""
+    full = _system(2, 2)
+    kill_at = SNAP_EVERY * 2
+    loop = ServingLoop(
+        full, _source(full), snapshot_dir=str(tmp_path / "live"),
+        chaos=lambda t: [0] if t in (kill_at, kill_at + 1) else [],
+        recovery_devices=_survivor_devices(full))
+    report = loop.run(T)
+    assert report.recoveries == 1
+    assert report.duplicate_recovery_skips == 1
+    assert len(report.recovery_stall_us) == 1
+    _, ref_state = _offline_oracle(full, 0, kill_at,
+                                   str(tmp_path / "off"))
+    for a, b in zip(jax.tree.leaves(ref_state),
+                    jax.tree.leaves(report.last.state)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_heartbeat_trip_recovers_then_disarms(tmp_path):
+    """A whole-pod heartbeat trip drives recovery from inside the loop,
+    and the recovered-from processes are retired from the roster so the
+    trigger fires exactly once — no duplicate declarations on the
+    following periods even though the dead processes never beat again."""
+    hb_dir = str(tmp_path / "hb")
+    roster = {0: 0, 1: 0, 2: 1, 3: 1}
+    hb = Heartbeat(hb_dir, process_index=0, stale_after_s=60.0,
+                   expected_peers=roster)
+    hb.beat(step=0)
+    Heartbeat(hb_dir, process_index=1, pod=0).beat(step=0)
+    # procs 2, 3 (pod 1) never beat -> whole-pod trip on the first scan
+    full = _system(2, 2, snap_every=1)   # snapshot exists by t=1
+    loop = ServingLoop(
+        full, _source(full), snapshot_dir=str(tmp_path / "snap"),
+        heartbeat=hb, recovery_devices=_survivor_devices(full))
+    report = loop.run(T)
+    assert report.recoveries == 1
+    assert report.duplicate_recovery_skips == 0, \
+        "retirement did not disarm the heartbeat trigger"
+    assert hb.retired == {2, 3}
+    assert EL.whole_dead_pods(hb) == []
+    assert loop.system.home_nodes == (0, 1)   # pod 1's nodes are gone
+    assert report.balanced
+
+
+def test_recovery_without_snapshots_refused(tmp_path):
+    """No snapshot_dir => recovery cannot work; the loop must say so
+    instead of crashing into recover_from_snapshot."""
+    full = _system(2, 2)
+    loop = ServingLoop(full, _source(full), snapshot_dir=None,
+                       chaos=lambda t: [0] if t == 1 else [])
+    with pytest.raises(RuntimeError, match="needs snapshots"):
+        loop.run(T)
+
+
+def test_journal_window_too_shallow_refused(tmp_path):
+    """A restore point older than the journal's reach must fail loudly:
+    silently skipping unreplayable periods would serve a state missing
+    their updates. Seeded with a period-0 snapshot and snapshotting
+    disabled, the journal (depth 2) cannot bridge back to period 0."""
+    full = _system(2, 2, snap_every=0)
+    snap = str(tmp_path / "snap")
+    CKPT.save(full.init_sharded_state(), snap, step=0, keep=1,
+              async_=False)
+    loop = ServingLoop(full, _source(full), snapshot_dir=snap,
+                       chaos=lambda t: [0] if t == 3 else [],
+                       recovery_devices=_survivor_devices(full))
+    with pytest.raises(RuntimeError, match="journal window"):
+        loop.run(T)
+
+
+def test_journal_bookkeeping(tmp_path):
+    """The journal keeps exactly the last snapshot-window's batches with
+    1-indexed period tags — the replay invariant every recovery depends
+    on."""
+    full = _system(2, 2)
+    loop = ServingLoop(full, _source(full),
+                       snapshot_dir=str(tmp_path))
+    assert loop._journal.maxlen == SNAP_EVERY + 1
+    report = loop.run(T)
+    assert report.recoveries == 0 and report.journal_replayed == 0
+    tags = [idx for idx, _, _ in loop._journal]
+    assert tags == list(range(T - SNAP_EVERY, T + 1))
+
+
+def test_maybe_recover_ignores_listed_pods(tmp_path):
+    """The offline trigger's double-recovery guard: pods already
+    recovered from are excluded from the dead scan."""
+    hb_dir = str(tmp_path / "hb")
+    hb = Heartbeat(hb_dir, process_index=0,
+                   expected_peers={0: 0, 1: 0, 2: 1, 3: 1})
+    hb.beat(step=0)
+    Heartbeat(hb_dir, process_index=1, pod=0).beat(step=0)
+    assert EL.whole_dead_pods(hb) == [1]
+    full = _system(2, 2)
+    assert EL.maybe_recover(hb, full, str(tmp_path / "nosnap"),
+                            ignore_pods=[1]) is None
+    # retirement achieves the same standing disarm
+    hb.retire_pod(1)
+    assert EL.whole_dead_pods(hb) == []
+    assert hb.dead_peers() == {}
