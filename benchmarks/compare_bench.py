@@ -3,14 +3,18 @@
 fail when any matching row regressed by more than the threshold.
 
     python benchmarks/compare_bench.py baseline.json current.json \
-        [--threshold 0.15] [--allow-missing-baseline]
+        [--threshold 0.15] [--allow-missing] [--allow-missing-baseline]
 
-Rows are matched by name on ``us_per_call`` (lower is better). Rows that
-exist on only one side are reported but never fail the gate (benchmarks
-come and go across commits); rows whose time is 0 or NaN on either side
-are informational-only (speedup/crossover rows encode their payload in
-the derived column). Exit 1 iff at least one matched row slowed down by
-more than ``threshold`` (default 15%), mirroring CI runner noise bounds.
+Rows are matched by name on ``us_per_call`` (lower is better). New rows
+(no baseline) never fail the gate; rows whose time is 0 or NaN on either
+side are informational-only (speedup/crossover rows encode their payload
+in the derived column). A baseline row that VANISHED from the current
+artifact fails the gate: a renamed or silently-dropped benchmark would
+otherwise never gate again, which is exactly how a perf regression hides.
+Pass ``--allow-missing`` to downgrade vanished rows to a warning when the
+removal is intentional. Exit 1 iff a matched row slowed down by more than
+``threshold`` (default 15%, mirroring CI runner noise bounds) or a
+baseline row vanished without ``--allow-missing``.
 """
 from __future__ import annotations
 
@@ -57,12 +61,31 @@ def _timed(v) -> bool:
     return isinstance(v, (int, float)) and math.isfinite(v) and v > 0
 
 
+def gate_verdict(regressions, unmatched, allow_missing: bool):
+    """The exit-1 reasons (empty list = gate passes). Pure so the test
+    suite can pin the policy without spawning a process."""
+    reasons = []
+    if regressions:
+        reasons.append(f"{len(regressions)} matched row(s) regressed "
+                       "past the threshold")
+    if unmatched and not allow_missing:
+        reasons.append(
+            f"{len(unmatched)} baseline row(s) vanished from the current "
+            "artifact — a renamed or dropped benchmark never gates "
+            "again; pass --allow-missing if the removal is intentional")
+    return reasons
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("baseline")
     ap.add_argument("current")
     ap.add_argument("--threshold", type=float, default=0.15,
                     help="max tolerated slowdown fraction (default 0.15)")
+    ap.add_argument("--allow-missing", action="store_true",
+                    help="downgrade vanished baseline rows (present in "
+                         "the baseline, absent from the current artifact)"
+                         " from a gate failure to a warning")
     ap.add_argument("--allow-missing-baseline", action="store_true",
                     help="exit 0 when the baseline file doesn't exist "
                          "(first nightly run has nothing to diff)")
@@ -85,16 +108,21 @@ def main() -> None:
 
     for name, reason in skipped:
         print(f"[gate] skip {name}: {reason}")
+    tag = "warn" if args.allow_missing else "MISSING"
     for name in unmatched:
-        print(f"[gate] baseline-only row {name} (removed?)")
+        print(f"[gate] {tag}: baseline row {name!r} vanished from the "
+              "current artifact")
     for name, b, c, r in improvements:
         print(f"[gate] IMPROVED {name}: {b:.1f} -> {c:.1f} us "
               f"({(1 - r) * 100:.0f}% faster)")
-    if regressions:
-        for name, b, c, r in regressions:
-            print(f"[gate] REGRESSION {name}: {b:.1f} -> {c:.1f} us "
-                  f"(+{(r - 1) * 100:.0f}%, threshold "
-                  f"{args.threshold * 100:.0f}%)")
+    for name, b, c, r in regressions:
+        print(f"[gate] REGRESSION {name}: {b:.1f} -> {c:.1f} us "
+              f"(+{(r - 1) * 100:.0f}%, threshold "
+              f"{args.threshold * 100:.0f}%)")
+    reasons = gate_verdict(regressions, unmatched, args.allow_missing)
+    if reasons:
+        for reason in reasons:
+            print(f"[gate] FAIL: {reason}")
         sys.exit(1)
     print(f"[gate] OK: {len(cur) - len(skipped)} matched rows within "
           f"{args.threshold * 100:.0f}% of baseline")

@@ -65,11 +65,12 @@ def _timed(mem, ev, lf, cfg, backend, variant=None):
     return time_it(fn, mem, ev, lf)
 
 
-def run():
+def run(tune=None):
     cfg = dataclasses.replace(get_dfa_config(), history=H,
                               flow_tile=REPORT_TILE)
     budget = cfg.vmem_budget_mb * dispatch.VMEM_BYTES_PER_MB
     rng = np.random.default_rng(0)
+    reg = _open_registry(tune)
     # per-report ring traffic the fused path moves: H x (64 B entry + 4 B
     # validity) in, derived_dim x 4 B out — the v5e HBM-bound floor
     bytes_per_report = H * (16 * 4 + 4) + cfg.derived_dim * 4
@@ -83,12 +84,19 @@ def run():
         variants = [("ref", "ref", None), ("interpret", "hbm", "hbm")]
         if full_fits:
             variants.append(("interpret", "full", "full"))
+        walls = {}
         for backend, label, variant in variants:
             t = _timed(mem, ev, lf, cfg, backend, variant)
+            walls[label] = t
             tpu_us = R * bytes_per_report / HBM_BW * 1e6
             csv(f"gather_scaling_F{F}_{label}", t * 1e6,
                 f"flows_per_s={R / t:.3e};R={R};H={H};auto={auto};"
                 f"tpu_v5e_us={tpu_us:.2f}")
+        if reg is not None and full_fits:
+            win = min(("full", "hbm"), key=walls.get)
+            reg.record("gather_enrich.variant", "interpret",
+                       (F, H, REPORT_TILE, cfg.derived_dim), win,
+                       walls[win] * 1e6, source="gather_scaling")
         if not full_fits:
             # 0.0, not NaN: NaN rows would make the bench-smoke JSON
             # artifact unparseable by strict consumers (jq, JSON.parse)
@@ -106,6 +114,29 @@ def run():
         f"max_full_F={Fx};budget_mb={cfg.vmem_budget_mb};H={H};"
         f"paper_F={1 << 17};paper_variant="
         f"{dispatch.resolve_gather_variant(None, cfg, 1 << 17, H, REPORT_TILE, cfg.derived_dim)}")
+    if reg is not None:
+        # report_tile mini-sweep at the smallest F on the F-independent
+        # hbm kernel: the winner is keyed by report count R, matching
+        # dispatch.resolve_report_tile's (reports,) lookup
+        mem, ev, lf = _case(F_SWEEP[0], rng)
+        for rt in (64, 128, 256):
+            cfgt = dataclasses.replace(cfg, flow_tile=rt)
+            t = _timed(mem, ev, lf, cfgt, "interpret", "hbm")
+            reg.record("gather_enrich.report_tile", "interpret", (R,),
+                       min(rt, R), t * 1e6, source="gather_scaling")
+        reg.save(tune)
+
+
+def _open_registry(tune):
+    """Load-merge semantics: an existing registry keeps entries this
+    sweep doesn't re-measure, and re-measured keys keep the faster of
+    the two (TuningRegistry.record is fastest-wins)."""
+    if tune is None:
+        return None
+    from repro.kernels import tuning
+    if os.path.exists(tune):
+        return tuning.TuningRegistry.load(tune)
+    return tuning.TuningRegistry()
 
 
 def main():
@@ -117,9 +148,14 @@ def main():
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--tiny", action="store_true")
     ap.add_argument("--json", default=None, metavar="PATH")
+    ap.add_argument("--tune", default=None, metavar="PATH",
+                    help="record the measured winners (full-vs-hbm "
+                         "variant per F, report_tile at the smallest F) "
+                         "into a tuned-config registry consulted by "
+                         "dispatch.resolve_*")
     args = ap.parse_args()
     print("name,us_per_call,derived")
-    run()
+    run(tune=args.tune)
     if args.json:
         from benchmarks import common
         common.write_artifact(args.json, tag="gather_scaling")

@@ -108,10 +108,11 @@ def _timed(fn, *args):
     return float(_np.min(ts))
 
 
-def run():
+def run(tune=None):
     cfg = dataclasses.replace(get_dfa_config(), flows_per_shard=F)
     rng = np.random.default_rng(0)
     st = R.init_state(cfg)
+    reg = _open_registry(tune)
     # per-event stream traffic the fused kernel moves: five sorted u32
     # words in, one 8-word run-sum row out — the v5e HBM-bound floor
     bytes_per_event = dispatch.EVENT_WORDS * 4 + 8 * 4
@@ -130,10 +131,26 @@ def run():
             f"fused_vs_multipass={t_multi / t_fused:.2f};auto={auto};"
             f"tpu_v5e_us={tpu_us:.2f}")
         if E <= INTERPRET_E:
+            walls = {}
             for variant in ("block", "hbm"):
                 t = _timed(jax.jit(_interpret_fn(cfg, variant)), st, ev)
+                walls[variant] = t
                 csv(f"ingest_scaling_E{E}_interpret_{variant}", t * 1e6,
                     f"events_per_s={E / t:.3e};F={F}")
+            if reg is not None:
+                win = min(walls, key=walls.get)
+                reg.record("ingest_update.variant", "interpret", (E,),
+                           win, walls[win] * 1e6,
+                           source="ingest_scaling")
+                # event_tile mini-sweep on the winning variant: the
+                # measured tile beats the static DFAConfig default when
+                # this registry is armed via REPRO_TUNING_REGISTRY
+                for et in (64, 128, 256):
+                    cfgt = dataclasses.replace(cfg, event_tile=et)
+                    tt = _timed(jax.jit(_interpret_fn(cfgt, win)), st, ev)
+                    reg.record("ingest_update.event_tile", "interpret",
+                               (E,), clamp_tile(et, E), tt * 1e6,
+                               source="ingest_scaling")
     # analytic crossover: largest power-of-two E whose sorted stream
     # still fits the VMEM budget as blocks — auto flips to hbm above
     budget = cfg.vmem_budget_mb * dispatch.VMEM_BYTES_PER_MB
@@ -144,6 +161,20 @@ def run():
         f"max_block_E={Ex};budget_mb={cfg.vmem_budget_mb};"
         f"event_tile=256;target_E={1 << 20};target_variant="
         f"{dispatch.resolve_ingest_variant(None, cfg, 1 << 20, 256)}")
+    if reg is not None:
+        reg.save(tune)
+
+
+def _open_registry(tune):
+    """Load-merge semantics: an existing registry keeps entries this
+    sweep doesn't re-measure, and re-measured keys keep the faster of
+    the two (TuningRegistry.record is fastest-wins)."""
+    if tune is None:
+        return None
+    from repro.kernels import tuning
+    if os.path.exists(tune):
+        return tuning.TuningRegistry.load(tune)
+    return tuning.TuningRegistry()
 
 
 def main():
@@ -155,9 +186,13 @@ def main():
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--tiny", action="store_true")
     ap.add_argument("--json", default=None, metavar="PATH")
+    ap.add_argument("--tune", default=None, metavar="PATH",
+                    help="record the measured winners (variant + "
+                         "event_tile per E) into a tuned-config "
+                         "registry consulted by dispatch.resolve_*")
     args = ap.parse_args()
     print("name,us_per_call,derived")
-    run()
+    run(tune=args.tune)
     if args.json:
         from benchmarks import common
         common.write_artifact(args.json, tag="ingest_scaling")

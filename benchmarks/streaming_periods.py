@@ -145,10 +145,8 @@ def run():
     run_pod_sweep()
 
 
-def _pod_row(name, pods, shards, total_ports, events_per_port):
-    """One (pods, shards) mesh streaming row over the same fixed port
-    set: the us/period delta against the single-pod row IS the cross-pod
-    routing overhead the nightly regression gate watches."""
+def _pod_system(pods, shards, total_ports, events_per_port,
+                exchange="padded"):
     ndev = pods * shards
     mesh = make_dfa_mesh(pods, shards, devices=jax.devices()[:ndev])
     cfg = dataclasses.replace(
@@ -156,36 +154,99 @@ def _pod_row(name, pods, shards, total_ports, events_per_port):
         ports_per_pod=total_ports // pods,
         reporter_slots=128,
         flows_per_shard=512 // ndev,
-        port_report_capacity=32)
+        port_report_capacity=32,
+        crosspod_exchange=exchange)
     system = DFASystem(cfg, mesh)
     ev, nows = SC.build("cross_pod_mix", total_ports, events_per_port, T)
     events = {k: jnp.asarray(v) for k, v in ev.items()}
+    return system, events, jnp.asarray(nows)
+
+
+def _pod_row(name, pods, shards, total_ports, events_per_port,
+             exchange="padded"):
+    """One (pods, shards) mesh streaming row over the same fixed port
+    set: the us/period delta against the single-pod row IS the cross-pod
+    routing overhead the nightly regression gate watches."""
+    system, events, nows = _pod_system(pods, shards, total_ports,
+                                       events_per_port, exchange)
     t = time_loop(system.jit_stream(donate=True),
-                  system.init_sharded_state(), events, jnp.asarray(nows))
+                  system.init_sharded_state(), events, nows)
     E_tot = total_ports * events_per_port
     csv(name, t / T * 1e6,
         f"periods={T};pods={pods};shards={shards};ports={total_ports};"
-        f"events_per_s={T * E_tot / t:.3e};flow_home=hash")
+        f"events_per_s={T * E_tot / t:.3e};flow_home=hash;"
+        f"exchange={exchange}")
     return t
+
+
+def _exchange_volume_rows(pods, shards, total_ports, events_per_port):
+    """The ragged-exchange accounting rows the nightly artifact trends:
+
+    * ``streaming_exchange_occupancy`` — fraction of the padded stage-2
+      slot budget the compact exchange actually shipped; 1 - occupancy
+      is the wire volume the ragged exchange saves.
+    * ``streaming_crosspod_compact_ratio`` — cross-pod rows / delivered
+      rows; on ``cross_pod_mix`` this is strictly between 0 and 1 (half
+      the ports are pod-local), proving the compaction bites.
+
+    Derived-only rows (us=0.0) with FIXED names, computed on the widest
+    pod mesh the host exposes — pods=1 on the 1-device CI runner (both
+    metrics 0: nothing crosses a 1-pod mesh) so the row set is
+    device-count invariant and the vanished-row gate stays quiet."""
+    import numpy as np
+    system, events, nows = _pod_system(pods, shards, total_ports,
+                                       events_per_port, "ragged")
+    out = system.jit_stream(donate=False)(system.init_sharded_state(),
+                                          events, nows)
+    met = {k: np.asarray(v) for k, v in out.metrics.items()}
+    sent = int(met["crosspod_sent"].sum())
+    msgs = int(met["crosspod_messages"].sum())
+    recv = int(met["reports_recv"].sum())
+    slots = T * system.n_shards * pods * system.crosspod_capacity
+    csv("streaming_exchange_occupancy", 0.0,
+        f"frac={sent / slots:.4f};pods={pods};shards={shards};"
+        f"crosspod_sent={sent};padded_slots={slots};"
+        f"segment_capacity={system.crosspod_capacity}")
+    csv("streaming_crosspod_compact_ratio", 0.0,
+        f"x={sent / max(1, recv):.4f};pods={pods};crosspod_sent={sent};"
+        f"reports_recv={recv};crosspod_messages={msgs}")
 
 
 def run_pod_sweep():
     """Multi-pod (pod, shard) mesh rows over one fixed 4-port traffic
-    trace. The 1-device (1,1)-pod mesh row always runs (it is the row CI
-    bench-smoke emits and the regression gate matches night over night);
-    wider meshes join the sweep when the host exposes enough devices
-    (standalone: ``--pods N`` forces N host devices before jax init)."""
+    trace. The 1-device (1,1)-pod mesh rows always run (they are the
+    rows CI bench-smoke emits and the regression gate matches night over
+    night); wider meshes join the sweep when the host exposes enough
+    devices (standalone: ``--pods N`` forces N host devices before jax
+    init). Each mesh is timed under both stage-2 exchange strategies —
+    the padded/ragged pair is output-identical
+    (tests/test_ragged_exchange.py), so the ratio isolates what segment
+    compaction costs (host) or saves (wire volume, see the occupancy
+    rows)."""
     total_ports, events_per_port = 4, 64 if TINY else 256
     t1 = _pod_row("streaming_multipod_ports4", 1, 1, total_ports,
                   events_per_port)
+    tr1 = _pod_row("streaming_multipod_ragged_ports4", 1, 1, total_ports,
+                   events_per_port, exchange="ragged")
+    csv("streaming_ragged_overhead_ports4", 0.0,
+        f"x={tr1 / t1:.2f};vs=streaming_multipod_ports4;"
+        "outputs_identical=true")
+    widest = 1
     for pods in (2, 4):
         if jax.device_count() < pods:
             continue
+        widest = pods
         tp = _pod_row(f"streaming_multipod_pods{pods}", pods, 1,
                       total_ports, events_per_port)
         csv(f"streaming_crosspod_overhead_pods{pods}", 0.0,
             f"x={tp / t1:.2f};vs=streaming_multipod_ports4;"
             "same_port_set=true")
+        trp = _pod_row(f"streaming_multipod_ragged_pods{pods}", pods, 1,
+                       total_ports, events_per_port, exchange="ragged")
+        csv(f"streaming_ragged_overhead_pods{pods}", 0.0,
+            f"x={trp / tp:.2f};vs=streaming_multipod_pods{pods};"
+            "outputs_identical=true")
+    _exchange_volume_rows(widest, 1, total_ports, events_per_port)
 
 
 def _main():

@@ -236,6 +236,27 @@ class DFAConfig:
     reporter_slots: int = 0
     # per-PORT due-report capacity; 0 = report_capacity // total_ports
     port_report_capacity: int = 0
+    # stage-2 (cross-pod) exchange strategy:
+    #   "padded" — worst-case fixed-capacity buckets (every committed
+    #              golden; structurally drop-free)
+    #   "ragged" — compact per-destination segments: pod-local reports
+    #              never enter the exchange, remote reports are
+    #              pre-merged flow-major at the source and only
+    #              ``crosspod_capacity`` rows per destination pod cross
+    #              the scarce inter-pod link. Bitwise-identical to
+    #              "padded" at auto capacity (see crosspod_capacity);
+    #              adds crosspod_sent/crosspod_messages metrics.
+    crosspod_exchange: str = "padded"
+    # per-destination-pod segment rows for the ragged exchange; 0 = the
+    # worst-case stage-2 capacity (shards_per_pod x stage-1 bucket), at
+    # which compaction cannot drop and the ragged path is bitwise ≡ the
+    # padded one. Smaller values trade exchange volume for counted
+    # bucket_drops — DTA's lossy-telemetry trade, now on the pod link.
+    crosspod_capacity: int = 0
+    # tuned-config registry JSON consulted by kernels.dispatch before
+    # its VMEM heuristics ("" = off; REPRO_TUNING_REGISTRY env var
+    # overrides). Produced by the *_scaling.py sweeps' --tune flag.
+    tuning_registry: str = ""
     # -- elastic operations (launch.elastic) -----------------------------
     # logical node roster for flow_home="rendezvous": one stable node id
     # per mesh device (pod-major, strictly increasing); () = 0..n_devices-1.

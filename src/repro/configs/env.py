@@ -22,6 +22,11 @@ Kinds:
     Boolean. Unset/``""``/``"0"``/``"false"``/``"no"``/``"off"`` are
     false; ``"1"``/``"true"``/``"yes"``/``"on"`` are true (case
     insensitive). Anything else raises.
+``str``
+    A free-form string (a filesystem path, typically). Unset/``""`` ->
+    None; the raw value otherwise — NOT lowercased, paths are
+    case-sensitive. Validation of the content (does the file exist,
+    does it parse) belongs to the consumer, which must still fail loud.
 
 The full table (also rendered by :func:`env_table` for docs):
 
@@ -46,6 +51,10 @@ REPRO_REGEN_GOLDENS      flag                       tests/test_run_periods_
 REPRO_WIRE_FORMAT        choice  v1|v2              core.wire active wire
                                                     schema (beats
                                                     DFAConfig.wire_format)
+REPRO_TUNING_REGISTRY    str     path               kernels.tuning tuned-
+                                                    config registry JSON
+                                                    (beats DFAConfig.
+                                                    tuning_registry)
 =======================  ======  =================  =========================
 """
 from __future__ import annotations
@@ -63,13 +72,13 @@ class EnvSpec:
     """One registered override: its name, kind, and legal values."""
 
     name: str
-    kind: str                         # "choice" | "flag"
+    kind: str                         # "choice" | "flag" | "str"
     choices: Tuple[str, ...] = ()     # kind == "choice" only
     description: str = ""
     consumer: str = ""                # module that reads it
 
     def __post_init__(self):
-        if self.kind not in ("choice", "flag"):
+        if self.kind not in ("choice", "flag", "str"):
             raise ValueError(f"unknown env kind {self.kind!r}")
         if self.kind == "choice" and not self.choices:
             raise ValueError(f"{self.name}: choice spec needs choices")
@@ -132,13 +141,27 @@ def read_flag(name: str) -> bool:
         f"{list(_TRUE)} / {list(_FALSE)}")
 
 
+def read_str(name: str) -> Optional[str]:
+    """The raw value of a string var, or ``None`` when unset/empty.
+
+    No lowercasing (paths are case-sensitive) and no content validation
+    here — the consumer validates what the string points at, fail-loud.
+    """
+    s = spec(name)
+    if s.kind != "str":
+        raise ValueError(f"{name} is a {s.kind} var, not a str")
+    raw = os.environ.get(name, "").strip()
+    return raw or None
+
+
 def env_table() -> str:
     """Markdown table of every registered override (for README/docs)."""
     lines = ["| variable | kind | values | consumed by |",
              "|---|---|---|---|"]
     for name in sorted(_REGISTRY):
         s = _REGISTRY[name]
-        vals = "\\|".join(s.choices) if s.kind == "choice" else "0/1"
+        vals = ("\\|".join(s.choices) if s.kind == "choice"
+                else "0/1" if s.kind == "flag" else "path")
         lines.append(f"| `{name}` | {s.kind} | {vals} | {s.consumer}: "
                      f"{s.description} |")
     return "\n".join(lines)
@@ -174,6 +197,13 @@ REGEN_GOLDENS = register(EnvSpec(
     "REPRO_REGEN_GOLDENS", "flag",
     description="refresh every committed golden fingerprint in one run",
     consumer="tests.test_run_periods_golden"))
+
+TUNING_REGISTRY = register(EnvSpec(
+    "REPRO_TUNING_REGISTRY", "str",
+    description="path to a tuned-config registry JSON "
+                "(kernels.tuning; produced by the *_scaling.py sweeps' "
+                "--tune flag; beats DFAConfig.tuning_registry)",
+    consumer="repro.kernels.tuning"))
 
 WIRE_FORMAT = register(EnvSpec(
     "REPRO_WIRE_FORMAT", "choice", ("v1", "v2"),

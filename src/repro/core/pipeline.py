@@ -78,6 +78,7 @@ from repro.core import translator as TRANS
 from repro.core import wire as WIRE
 from repro.data import faults as FAULTS
 from repro.kernels import dispatch
+from repro.kernels import tuning as TUNING
 
 Tree = Any
 
@@ -199,6 +200,26 @@ class DFASystem:
                 f"flow_home must be 'ingest', 'hash' or 'rendezvous', got "
                 f"{cfg.flow_home!r}")
         self.multipod = cfg.flow_home in ("hash", "rendezvous")
+        if cfg.crosspod_exchange not in ("padded", "ragged"):
+            raise ValueError(
+                f"crosspod_exchange must be 'padded' or 'ragged', got "
+                f"{cfg.crosspod_exchange!r}")
+        self.crosspod_exchange = cfg.crosspod_exchange
+        if cfg.crosspod_capacity < 0:
+            raise ValueError(
+                f"crosspod_capacity must be >= 0 (0 = worst-case "
+                f"auto-size), got {cfg.crosspod_capacity}")
+        if not self.multipod:
+            if cfg.crosspod_exchange != "padded":
+                raise ValueError(
+                    "crosspod_exchange='ragged' compresses the stage-2 "
+                    "pod exchange, which only exists under "
+                    "flow_home='hash'/'rendezvous'; the legacy 'ingest' "
+                    "scheme has no pod stage to compress")
+            if cfg.crosspod_capacity:
+                raise ValueError(
+                    "crosspod_capacity sizes the ragged stage-2 segments "
+                    "and is meaningless under flow_home='ingest'")
         if cfg.flow_home == "rendezvous":
             nodes = tuple(cfg.home_nodes) or tuple(range(self.n_shards))
             if len(nodes) != self.n_shards:
@@ -235,6 +256,9 @@ class DFASystem:
             self.ports_per_device = 1
             self.rep_cfg = cfg
             self.port_capacity = 0
+            self.stage1_capacity = 0
+            self.stage2_capacity = 0
+            self.crosspod_capacity = 0
             return
         if cfg.pods != self.mesh_pods:
             raise ValueError(
@@ -273,6 +297,27 @@ class DFASystem:
             if cfg.reporter_slots else cfg)
         self.port_capacity = cfg.port_report_capacity or max(
             1, cfg.report_capacity // total_ports)
+        # stage capacities (worst case: every report to one bucket); the
+        # ragged exchange replaces stage 2's padded cap with a compact
+        # per-destination segment size — 0/auto keeps the worst case, so
+        # compaction is structurally drop-free and bitwise ≡ padded
+        self.stage1_capacity = max(
+            1, self.ports_per_device * self.port_capacity)
+        self.stage2_capacity = self.shards_per_pod * self.stage1_capacity
+        if cfg.crosspod_capacity > self.stage2_capacity:
+            raise ValueError(
+                f"crosspod_capacity={cfg.crosspod_capacity} exceeds the "
+                f"worst-case stage-2 capacity {self.stage2_capacity} "
+                "(shards_per_pod x stage-1 bucket) — a larger segment "
+                "can never fill; this is a misconfiguration")
+        if cfg.crosspod_capacity and self.crosspod_exchange != "ragged":
+            raise ValueError(
+                "crosspod_capacity only applies to "
+                "crosspod_exchange='ragged' (the padded exchange always "
+                "ships the worst-case buckets)")
+        self.crosspod_capacity = (
+            (cfg.crosspod_capacity or self.stage2_capacity)
+            if self.crosspod_exchange == "ragged" else 0)
 
     # -- state ------------------------------------------------------------
     def init_state(self) -> DFAState:
@@ -319,8 +364,8 @@ class DFASystem:
 
     # -- the step (two half-steps) ----------------------------------------
     _METRIC_KEYS = ("reports_sent", "reports_recv", "bucket_drops",
-                    "collisions", "bad_checksum", "seq_anomalies",
-                    "lost_reports")
+                    "misroutes", "collisions", "bad_checksum",
+                    "seq_anomalies", "lost_reports")
 
     @property
     def fault_spec(self) -> Optional[FAULTS.FaultSpec]:
@@ -331,6 +376,11 @@ class DFASystem:
 
     def _metric_specs(self, ax) -> Dict[str, P]:
         specs = {k: P() for k in self._METRIC_KEYS}
+        if self.multipod and self.crosspod_exchange == "ragged":
+            # exchange-volume accounting exists only on the compact
+            # path: emitting (nonzero) keys on the default padded path
+            # would break the pinned golden fingerprints
+            specs.update({"crosspod_sent": P(), "crosspod_messages": P()})
         if self.fault_spec is not None:
             specs.update({k: P() for k in FAULTS.COUNT_KEYS})
             specs.update({k: P(ax) for k in FAULTS.LEDGER_KEYS})
@@ -393,13 +443,13 @@ class DFASystem:
                           wf.set_report_reporter(reports[:, mw], rid),
                           0))
             # 3. route to owner shards (fixed-capacity buckets + all_to_all)
-            buckets, bmask = TRANS.route_reports(
+            buckets, bmask, mis = TRANS.route_reports(
                 reports, mask, n, cfg.flows_per_shard, cap_out)
             routed = jax.lax.all_to_all(buckets, ax, 0, 0, tiled=True)
             rmask = jax.lax.all_to_all(
                 bmask.astype(jnp.uint32), ax, 0, 0,
                 tiled=True).astype(bool)
-            dropped = jnp.sum(mask) - jnp.sum(bmask)
+            dropped = jnp.sum(mask) - jnp.sum(bmask) - mis
             routed = routed.reshape(n * cap_out, PROTO.REPORT_WORDS)
             rmask = rmask.reshape(n * cap_out)
             # 4. owner-side translator: history addresses + RoCEv2 payloads
@@ -426,6 +476,7 @@ class DFASystem:
                 "reports_sent": jax.lax.psum(jnp.sum(mask), ax),
                 "reports_recv": jax.lax.psum(jnp.sum(rmask), ax),
                 "bucket_drops": jax.lax.psum(jnp.sum(dropped), ax),
+                "misroutes": jax.lax.psum(mis, ax),
                 # u32 new-minus-old is the period delta even across
                 # counter wraparound
                 "collisions": jax.lax.psum(
@@ -497,8 +548,10 @@ class DFASystem:
         S = self.shards_per_pod
         pods = self.mesh_pods
         R_p = self.port_capacity
-        cap1 = max(1, P_l * R_p)                # stage-1 bucket capacity
-        cap2 = S * cap1                         # stage-2 bucket capacity
+        cap1 = self.stage1_capacity             # stage-1 bucket capacity
+        cap2 = self.stage2_capacity             # stage-2 bucket capacity
+        ragged = self.crosspod_exchange == "ragged"
+        cap2c = self.crosspod_capacity          # compact segment rows
         fps = cfg.flows_per_shard               # rings per device
         G = self.total_flows
         hrw = cfg.flow_home == "rendezvous"
@@ -601,7 +654,21 @@ class DFASystem:
             reports = reports_s.reshape(P_l * R_p, wf.report_words)
             mask = masks_s.reshape(P_l * R_p)
             sent = jnp.sum(mask)
-            # stage 1: intra-pod all_to_all by home shard
+            # home-pod index from the flow word — a pure function, so
+            # the ragged path can recompute it after its pre-merge sort
+            if hrw:
+                def hpod_of(fid):
+                    return TRANS.node_position(
+                        fid // jnp.uint32(fps), nodes_arr) // S
+            else:
+                def hpod_of(fid):
+                    return TRANS.home_coords(fid, fps, S,
+                                             self.n_shards)[0]
+            # stage 1: intra-pod all_to_all by home shard. The shard
+            # coordinate of even a corrupt flow id is in range (floor
+            # mod), so misroutes surface at stage 2 via the pod
+            # coordinate — mis1 is structurally zero and kept only so
+            # the accounting stays stage-symmetric.
             if hrw:
                 pos1 = TRANS.node_position(
                     reports[:, 0] // jnp.uint32(fps), nodes_arr)
@@ -609,8 +676,9 @@ class DFASystem:
             else:
                 _, hshard, _ = TRANS.home_coords(reports[:, 0], fps, S,
                                                  self.n_shards)
-            b1, m1 = TRANS.route_by_dest(reports, mask, hshard, S, cap1)
-            drop1 = sent - jnp.sum(m1)
+            b1, m1, mis1 = TRANS.route_by_dest(reports, mask, hshard, S,
+                                               cap1)
+            drop1 = sent - jnp.sum(m1) - mis1
             if self.shard_axes:
                 b1 = jax.lax.all_to_all(b1, self.shard_axes, 0, 0,
                                         tiled=True)
@@ -620,23 +688,48 @@ class DFASystem:
             r1 = b1.reshape(S * cap1, PROTO.REPORT_WORDS)
             m1 = m1.reshape(S * cap1)
             # stage 2: cross-pod exchange by home pod
-            if hrw:
-                hpod = TRANS.node_position(
-                    r1[:, 0] // jnp.uint32(fps), nodes_arr) // S
+            extra = {}
+            if ragged:
+                # compact exchange: pod-local rows never cross, remote
+                # rows are pre-merged (flow-major) and packed into
+                # cap2c-row segments — only the occupied capacity moves
+                # over the scarce inter-pod link
+                (lrows, lmask, b2, m2, mis2,
+                 nmsg) = TRANS.crosspod_compact(
+                    r1, m1, pod, pods, cap2c, hpod_of, wire=wf)
+                crosspod_sent = jnp.sum(m2)
+                drop2 = (jnp.sum(m1) - jnp.sum(lmask) - crosspod_sent
+                         - mis2)
+                if self.pod_axis is not None:
+                    b2 = jax.lax.all_to_all(b2, self.pod_axis, 0, 0,
+                                            tiled=True)
+                    m2 = jax.lax.all_to_all(
+                        m2.astype(jnp.uint32), self.pod_axis, 0, 0,
+                        tiled=True).astype(bool)
+                routed = jnp.concatenate(
+                    [lrows,
+                     b2.reshape(pods * cap2c, PROTO.REPORT_WORDS)])
+                rmask = jnp.concatenate(
+                    [lmask, m2.reshape(pods * cap2c)])
+                extra = {
+                    "crosspod_sent": jax.lax.psum(crosspod_sent, ax),
+                    "crosspod_messages": jax.lax.psum(nmsg, ax)}
             else:
-                hpod, _, _ = TRANS.home_coords(r1[:, 0], fps, S,
-                                               self.n_shards)
-            b2, m2 = TRANS.route_by_dest(r1, m1, hpod, pods, cap2)
-            drop2 = jnp.sum(m1) - jnp.sum(m2)
-            if self.pod_axis is not None:
-                b2 = jax.lax.all_to_all(b2, self.pod_axis, 0, 0,
-                                        tiled=True)
-                m2 = jax.lax.all_to_all(
-                    m2.astype(jnp.uint32), self.pod_axis, 0, 0,
-                    tiled=True).astype(bool)
-            routed = b2.reshape(pods * cap2, PROTO.REPORT_WORDS)
-            rmask = m2.reshape(pods * cap2)
-            # home-side canonical arrival order (mesh-shape independent)
+                b2, m2, mis2 = TRANS.route_by_dest(
+                    r1, m1, hpod_of(r1[:, 0]), pods, cap2)
+                drop2 = jnp.sum(m1) - jnp.sum(m2) - mis2
+                if self.pod_axis is not None:
+                    b2 = jax.lax.all_to_all(b2, self.pod_axis, 0, 0,
+                                            tiled=True)
+                    m2 = jax.lax.all_to_all(
+                        m2.astype(jnp.uint32), self.pod_axis, 0, 0,
+                        tiled=True).astype(bool)
+                routed = b2.reshape(pods * cap2, PROTO.REPORT_WORDS)
+                rmask = m2.reshape(pods * cap2)
+            # home-side canonical arrival order (mesh-shape independent:
+            # the ragged path's local/received split and the padded
+            # path's bucket interleaving both collapse to the same
+            # (flow, reporter, seq) total order)
             routed, rmask = TRANS.canonical_order(routed, rmask, wire=wf)
             # owner-side translator + ring placement, as in the 1D path
             tr_st, payloads, coords = TRANS.translate(
@@ -660,6 +753,8 @@ class DFASystem:
                 "reports_sent": jax.lax.psum(sent, ax),
                 "reports_recv": jax.lax.psum(jnp.sum(rmask), ax),
                 "bucket_drops": jax.lax.psum(drop1 + drop2, ax),
+                "misroutes": jax.lax.psum(mis1 + mis2, ax),
+                **extra,
                 "collisions": jax.lax.psum(
                     jnp.sum(rep_st.collisions) - collisions0, ax),
                 "bad_checksum": jax.lax.psum(
@@ -830,13 +925,15 @@ class DFASystem:
         else:
             R = self.n_shards * max(1, cfg.report_capacity
                                     // self.n_shards)
-        tile = min(cfg.flow_tile, R)
+        tile = min(dispatch.resolve_report_tile(cfg, R), R)
         variant = ("ref" if backend == "ref" else
                    dispatch.resolve_gather_variant(
                        None, cfg, cfg.flows_per_shard, cfg.history, tile,
                        cfg.derived_dim))
         # ingest side: each shard sorts/reduces event_block events/period
-        etile = clamp_tile(cfg.event_tile, cfg.event_block)
+        etile = clamp_tile(
+            dispatch.resolve_event_tile(cfg, cfg.event_block),
+            cfg.event_block)
         ingest_variant = ("ref" if backend == "ref" else
                           dispatch.resolve_ingest_variant(
                               None, cfg, cfg.event_block, etile))
@@ -864,6 +961,13 @@ class DFASystem:
             "ports_per_device": self.ports_per_device,
             "reporter_slots": self.rep_cfg.flows_per_shard,
             "port_report_capacity": self.port_capacity,
+            # stage-2 exchange strategy (crosspod_capacity is the
+            # per-destination segment size the ragged path ships;
+            # stage2_capacity is what the padded path would ship)
+            "crosspod_exchange": self.crosspod_exchange,
+            "crosspod_capacity": self.crosspod_capacity,
+            "stage2_capacity": self.stage2_capacity,
+            "tuning_registry": TUNING.resolve_path(cfg) or "none",
             # elastic knobs (launch.elastic reads the same fields)
             "home_nodes": self.home_nodes,
             "snapshot_every_periods": cfg.snapshot_every_periods,

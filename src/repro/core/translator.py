@@ -87,18 +87,27 @@ def translate(state: TranslatorState, reports: jax.Array, mask: jax.Array,
 
 def route_by_dest(reports: jax.Array, mask: jax.Array, dest: jax.Array,
                   n_buckets: int, capacity_out: int
-                  ) -> Tuple[jax.Array, jax.Array]:
+                  ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """Bucket reports by a caller-computed destination index for a
-    fixed-capacity exchange. reports: (R, W) u32, dest: (R,) i32 in
-    [0, n_buckets) -> ((n_buckets, capacity_out, W), bucket mask).
+    fixed-capacity exchange. reports: (R, W) u32, dest: (R,) i32 ->
+    ((n_buckets, capacity_out, W), bucket mask, misroutes).
 
     Masked-out rows never enter a bucket (padding cannot leak across an
     exchange stage); overflowing a destination bucket drops the report
     (counted by caller via the returned mask sums) — the lossy-telemetry
-    trade DTA makes too.
+    trade DTA makes too. A ``dest`` outside [0, n_buckets) marks a
+    corrupt or hostile flow id: the row is routed to the overflow slot
+    (never into a real bucket, so it cannot poison another shard's ring)
+    and tallied in the returned ``misroutes`` scalar.
+
+    Valid entries occupy a contiguous rank-ordered prefix of each bucket
+    (stable sort + dense per-destination rank), a property the compact
+    cross-pod exchange relies on to count message boundaries.
     """
     R, W = reports.shape
-    dest = jnp.where(mask, jnp.clip(dest, 0, n_buckets - 1), n_buckets)
+    in_range = (dest >= 0) & (dest < n_buckets)
+    misroutes = jnp.sum(mask & ~in_range)
+    dest = jnp.where(mask & in_range, dest, n_buckets)
     order = jnp.argsort(dest, stable=True)
     d_sorted = dest[order]
     start = jnp.searchsorted(d_sorted, jnp.arange(n_buckets), side="left")
@@ -111,16 +120,21 @@ def route_by_dest(reports: jax.Array, mask: jax.Array, dest: jax.Array,
     out_mask = jnp.zeros((n_buckets * capacity_out + 1,), bool
                          ).at[slot].set(ok, mode="drop")
     return (out[:-1].reshape(n_buckets, capacity_out, W),
-            out_mask[:-1].reshape(n_buckets, capacity_out))
+            out_mask[:-1].reshape(n_buckets, capacity_out),
+            misroutes)
 
 
 def route_reports(reports: jax.Array, mask: jax.Array, n_shards: int,
                   flows_per_shard: int, capacity_out: int
-                  ) -> Tuple[jax.Array, jax.Array]:
+                  ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """Bucket reports by owning collector shard (legacy 1D range scheme)
-    for a fixed-capacity all_to_all: dest = flow_id // flows_per_shard."""
+    for a fixed-capacity all_to_all: dest = flow_id // flows_per_shard.
+
+    A flow id beyond the sharded keyspace yields an out-of-range dest
+    (a huge u32 id even wraps negative in i32) which route_by_dest drops
+    and counts as a misroute instead of clipping onto the last shard."""
     flow_id = reports[:, 0].astype(jnp.int32)
-    dest = jnp.clip(flow_id // flows_per_shard, 0, n_shards - 1)
+    dest = flow_id // flows_per_shard
     return route_by_dest(reports, mask, dest, n_shards, capacity_out)
 
 
@@ -140,9 +154,16 @@ def home_coords(flow_id: jax.Array, flows_per_shard: int,
     """Global flow id -> (home_pod, home_shard, home_device) under the
     pod-major range sharding of the global keyspace: device
     d = pod * shards_per_pod + shard owns flows
-    [d * flows_per_shard, (d+1) * flows_per_shard)."""
-    dev = jnp.clip(flow_id.astype(jnp.int32) // flows_per_shard, 0,
-                   n_devices - 1)
+    [d * flows_per_shard, (d+1) * flows_per_shard).
+
+    An id beyond the keyspace maps to an out-of-range device (negative
+    after i32 overflow for hostile u32 ids); the pod coordinate then
+    falls outside [0, n_devices // shards_per_pod) and route_by_dest
+    counts the row as a misroute rather than homing it on the last
+    device. (jnp ``//``/``%`` floor toward -inf, so the shard coordinate
+    of a negative dev is still in range — the pod coordinate is the one
+    that carries the out-of-range signal through both routing stages.)"""
+    dev = flow_id.astype(jnp.int32) // flows_per_shard
     return dev // shards_per_pod, dev % shards_per_pod, dev
 
 
@@ -234,6 +255,51 @@ def canonical_order(reports: jax.Array, mask: jax.Array,
     o1 = jnp.argsort(meta, stable=True)
     order = o1[jnp.argsort(f[o1], stable=True)]
     return reports[order], mask[order]
+
+
+def crosspod_compact(reports: jax.Array, mask: jax.Array, own_pod,
+                     n_pods: int, capacity: int, hpod_fn,
+                     wire: WIRE.WireFormat = WIRE.V1
+                     ) -> Tuple[jax.Array, jax.Array, jax.Array,
+                                jax.Array, jax.Array, jax.Array]:
+    """Compact stage-2 segments for the ragged pod exchange (§VII report
+    batching): only the rows whose home pod differs from ``own_pod``
+    enter the exchange buffers, packed into per-destination segments of
+    ``capacity`` rows instead of the worst-case padded buckets.
+
+    ``hpod_fn`` maps a (R,) u32 flow-id vector to its home-pod index —
+    a pure function of the flow word, so it can be recomputed after the
+    pre-merge sort instead of permuting a precomputed vector alongside.
+
+    The pod-local pre-merge: remote rows are canonically ordered
+    (flow-major) BEFORE packing, so all reports for one flow are
+    adjacent; route_by_dest's stable packing preserves that adjacency
+    inside each destination segment, collapsing same-flow traffic into
+    one contiguous batched message at the source. ``n_messages`` counts
+    those (destination, flow)-run boundaries — the number of distinct
+    messages a batching wire transport would actually send.
+
+    Returns ``(local_rows, local_mask, buckets, bucket_mask, misroutes,
+    n_messages)``. ``local_rows`` holds the pod-local deliveries (masked
+    rows zeroed so buffer padding can never leak stale payloads into the
+    downstream canonical re-sort); ``buckets``/``bucket_mask`` are the
+    (n_pods, capacity, W) exchange segments.
+    """
+    hpod = hpod_fn(reports[:, wire.report_flow_word])
+    is_local = mask & (hpod == own_pod)
+    remote = mask & (hpod != own_pod)
+    local_rows = jnp.where(is_local[:, None], reports, jnp.uint32(0))
+    rr, rm = canonical_order(reports, remote, wire=wire)
+    buckets, bmask, misroutes = route_by_dest(
+        rr, rm, hpod_fn(rr[:, wire.report_flow_word]), n_pods, capacity)
+    # valid rows form a contiguous prefix of each segment, so a message
+    # boundary is simply "first valid row, or flow differs from the row
+    # above" — countable without another sort
+    flows = buckets[:, :, wire.report_flow_word]
+    n_messages = (jnp.sum(bmask[:, :1])
+                  + jnp.sum(bmask[:, 1:]
+                            & (flows[:, 1:] != flows[:, :-1])))
+    return local_rows, is_local, buckets, bmask, misroutes, n_messages
 
 
 def batch_payloads(payloads: jax.Array, mask: jax.Array, batch: int

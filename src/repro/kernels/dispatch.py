@@ -41,6 +41,14 @@ metadata, so events_per_shard can grow to 2^20 with VMEM = O(event_tile).
 the VMEM budget, overridable via ``DFAConfig.ingest_variant`` or
 ``REPRO_INGEST_VARIANT``.
 
+Both variant resolvers — and the ``resolve_event_tile`` /
+``resolve_report_tile`` helpers the ops wrappers call — consult the
+measurement-driven tuned-config registry (``repro.kernels.tuning``,
+armed via ``REPRO_TUNING_REGISTRY`` / ``DFAConfig.tuning_registry``)
+INSIDE their heuristic tier: a sweep-measured winner for the exact
+(shape, backend) beats the VMEM model, while any explicit setting
+(argument, env var, non-"auto" config attr) still beats the measurement.
+
 Resolution happens at trace time: a step traced under one setting keeps it
 until re-traced (jit caches are keyed on shapes, not on this env var).
 """
@@ -151,6 +159,50 @@ def resolve_backend(backend: Optional[str] = None, cfg=None) -> str:
         arg_source="backend= argument")
 
 
+# -- measurement-driven tuned-config registry -------------------------------
+
+def _tuned_value(cfg, knob: str, key):
+    """Consult the tuned-config registry (kernels.tuning), keyed by the
+    RESOLVED backend — a winner measured under the interpreter says
+    nothing about compiled pallas. Returns None when no registry is
+    armed or no exact (knob, backend, key) measurement exists, letting
+    the VMEM heuristic decide. Sits INSIDE the heuristic tier, so an
+    explicit argument, env var or explicit DFAConfig attr still wins."""
+    from repro.kernels import tuning  # lazy: dispatch stays import-light
+    if tuning.resolve_path(cfg) is None:
+        return None
+    return tuning.lookup_value(cfg, knob, resolve_backend(None, cfg), key)
+
+
+def _tuned_tile(cfg, knob: str, key, fallback: int) -> int:
+    tuned = _tuned_value(cfg, knob, key)
+    if tuned is None:
+        return int(fallback)
+    t = int(tuned)
+    if t < 1:
+        raise ValueError(
+            f"tuned {knob} for key {tuple(key)} is {t}; tiles must be "
+            ">= 1 — the registry file is corrupt")
+    return t
+
+
+def resolve_event_tile(cfg, events: int) -> int:
+    """The ingest_update event tile: a tuned measurement for this event
+    count beats the static ``DFAConfig.event_tile`` default (arming a
+    registry is an explicit opt-in). Kernel-bound clamping stays with
+    the caller (``clamp_tile``)."""
+    return _tuned_tile(cfg, "ingest_update.event_tile", (int(events),),
+                       int(getattr(cfg, "event_tile", 256)))
+
+
+def resolve_report_tile(cfg, reports: int) -> int:
+    """The gather_enrich report tile: a tuned measurement for this
+    report count beats the static ``DFAConfig.flow_tile`` default."""
+    return _tuned_tile(cfg, "gather_enrich.report_tile",
+                       (int(reports),),
+                       int(getattr(cfg, "flow_tile", 512)))
+
+
 # -- gather_enrich memory-strategy variant ----------------------------------
 
 def ring_vmem_bytes(flows: int, history: int, words: int = WORDS) -> int:
@@ -185,10 +237,16 @@ def resolve_gather_variant(variant: Optional[str], cfg, flows: int,
 
     Same precedence (and same fail-loud env validation) as backends:
     explicit ``variant=`` argument > ``REPRO_GATHER_VARIANT`` >
-    ``DFAConfig.gather_variant`` > the budget heuristic against
-    ``DFAConfig.vmem_budget_mb``.
+    ``DFAConfig.gather_variant`` > tuned-config registry (an exact
+    measurement for this shape, when one is armed) > the budget
+    heuristic against ``DFAConfig.vmem_budget_mb``.
     """
     def heuristic():
+        tuned = _tuned_value(cfg, "gather_enrich.variant",
+                             (flows, history, report_tile, derived_dim))
+        if tuned is not None:
+            _check_choice(str(tuned), GATHER_VARIANTS, "tuning registry")
+            return str(tuned)
         budget = int(getattr(cfg, "vmem_budget_mb", 16)
                      ) * VMEM_BYTES_PER_MB
         need = gather_vmem_bytes(
@@ -233,9 +291,16 @@ def resolve_ingest_variant(variant: Optional[str], cfg, events: int,
     """block while the sorted event stream fits the VMEM budget, hbm
     beyond. Same precedence (and same fail-loud env validation) as the
     gather variant: explicit ``variant=`` argument >
-    ``REPRO_INGEST_VARIANT`` > ``DFAConfig.ingest_variant`` > the budget
-    heuristic against ``DFAConfig.vmem_budget_mb``."""
+    ``REPRO_INGEST_VARIANT`` > ``DFAConfig.ingest_variant`` >
+    tuned-config registry (an exact measurement for this event count,
+    when one is armed) > the budget heuristic against
+    ``DFAConfig.vmem_budget_mb``."""
     def heuristic():
+        tuned = _tuned_value(cfg, "ingest_update.variant",
+                             (events,))
+        if tuned is not None:
+            _check_choice(str(tuned), INGEST_VARIANTS, "tuning registry")
+            return str(tuned)
         budget = int(getattr(cfg, "vmem_budget_mb", 16)
                      ) * VMEM_BYTES_PER_MB
         need = ingest_vmem_bytes("block", events, event_tile)

@@ -45,7 +45,7 @@ def gather_enrich(memory, entry_valid, local_flow, cfg, backend=None,
     R = local_flow.shape[0]
     if R == 0:
         return jnp.zeros((0, cfg.derived_dim), jnp.float32)
-    rt, Rp = _tile_and_pad(R, cfg.flow_tile)
+    rt, Rp = _tile_and_pad(R, dispatch.resolve_report_tile(cfg, R))
     v = dispatch.resolve_gather_variant(variant, cfg, F, H, rt,
                                         cfg.derived_dim)
     family = "gather_enrich" if v == "full" else "gather_enrich_hbm"

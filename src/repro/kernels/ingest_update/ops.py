@@ -40,7 +40,7 @@ def ingest_update(regs, last_ts, keys, active, collisions, slots, ts, ps,
         _, impl = dispatch.lookup("ingest_update", "ref", cfg)
         return impl(regs, last_ts, keys, active, collisions, slots, ts,
                     ps, five_tuple, valid, logstar_bits=cfg.logstar_bits)
-    tile = K.clamp_tile(cfg.event_tile, E)
+    tile = K.clamp_tile(dispatch.resolve_event_tile(cfg, E), E)
     v = dispatch.resolve_ingest_variant(variant, cfg, E, tile)
     family = "ingest_update" if v == "block" else "ingest_update_hbm"
     _, impl = dispatch.lookup(family, b, cfg)

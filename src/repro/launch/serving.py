@@ -50,13 +50,20 @@ from repro.data.replay import PeriodAccounting, TraceReplaySource
 
 def latency_summary(samples_us) -> Dict[str, float]:
     """p50/p99/p999 of per-period wall latencies (µs), linear-interp
-    percentiles (``np.percentile`` default) — the bench/gate contract."""
+    percentiles (``np.percentile`` default) — the bench/gate contract.
+
+    ``count`` rides along so a consumer can tell "no samples" (count 0,
+    percentiles NaN — an EXPLICIT empty summary, not a crash or a
+    silent 0.0 that would read as an impossibly fast period) from a real
+    distribution, and can spot a one-sample summary where all three
+    percentiles collapse to the same value by construction."""
     arr = np.asarray(list(samples_us), dtype=float)
     if arr.size == 0:
         return {"p50": float("nan"), "p99": float("nan"),
-                "p999": float("nan")}
+                "p999": float("nan"), "count": 0}
     p50, p99, p999 = np.percentile(arr, [50.0, 99.0, 99.9])
-    return {"p50": float(p50), "p99": float(p99), "p999": float(p999)}
+    return {"p50": float(p50), "p99": float(p99), "p999": float(p999),
+            "count": int(arr.size)}
 
 
 class HostIngestRing:
@@ -121,8 +128,11 @@ class ServingReport:
 
     @property
     def sustained_eps(self) -> float:
-        """Events actually served per second of budgeted period time."""
+        """Events actually served per second of budgeted period time
+        (0.0 for a zero-period run — no time was budgeted)."""
         total = self.periods + self.drained_periods
+        if total == 0:
+            return 0.0
         return self.processed / (total * self.budget_us / 1e6)
 
 
@@ -269,8 +279,21 @@ class ServingLoop:
 
     def run(self, periods: int, drain: bool = True,
             state=None) -> ServingReport:
-        if periods < 1:
-            raise ValueError("periods must be >= 1")
+        if periods < 0:
+            raise ValueError("periods must be >= 0")
+        if periods == 0:
+            # explicit empty run: nothing offered, nothing measured —
+            # the report carries the empty latency summary (count=0,
+            # NaN percentiles) and a 0.0 sustained rate, so callers that
+            # size their period count dynamically never divide by zero
+            total = self.source.total
+            return ServingReport(
+                periods=0, drained_periods=0, budget_us=self.budget_us,
+                offered=total.offered, processed=total.processed,
+                dropped=total.dropped, violations=0, latency_us=[],
+                per_period=[], last=None, snapshots=0, recoveries=0,
+                recovery_stall_us=[], duplicate_recovery_skips=0,
+                journal_replayed=0)
         system, source = self.system, self.source
         if state is None:
             state = system.init_sharded_state()

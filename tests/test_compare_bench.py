@@ -1,11 +1,13 @@
 """The nightly regression gate's comparison logic (benchmarks/compare_bench):
-matched-row thresholds, untimed/new/removed row handling."""
+matched-row thresholds, untimed/new row handling, and the vanished-row
+policy (a baseline row missing from the current artifact fails the gate
+unless --allow-missing downgrades it)."""
 import sys
 import os
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
-from benchmarks.compare_bench import compare  # noqa: E402
+from benchmarks.compare_bench import compare, gate_verdict  # noqa: E402
 
 
 def _rows(**named):
@@ -27,14 +29,38 @@ def test_regression_and_improvement_detected():
     assert [r[0] for r in imp] == ["b"]
 
 
-def test_untimed_new_and_removed_rows_never_gate():
-    base = _rows(a=100.0, gone=10.0, zero=0.0)
+def test_untimed_and_new_rows_never_gate():
+    base = _rows(a=100.0, zero=0.0)
     cur = _rows(a=100.0, fresh=999.0, zero=0.0)
     cur["nan"] = {"name": "nan", "us_per_call": float("nan")}
     reg, _, skipped, unmatched = compare(base, cur, 0.15)
     assert reg == []
     assert {s[0] for s in skipped} == {"fresh", "zero", "nan"}
-    assert unmatched == ["gone"]
+    assert unmatched == []
+    assert gate_verdict(reg, unmatched, allow_missing=False) == []
+
+
+def test_vanished_baseline_row_fails_the_gate():
+    """A renamed/dropped benchmark must not pass silently — that is how
+    a regression in it would hide forever."""
+    base = _rows(a=100.0, gone=10.0)
+    cur = _rows(a=100.0)
+    reg, _, _, unmatched = compare(base, cur, 0.15)
+    assert reg == [] and unmatched == ["gone"]
+    reasons = gate_verdict(reg, unmatched, allow_missing=False)
+    assert len(reasons) == 1 and "vanished" in reasons[0]
+    # the explicit downgrade restores the old lenient behavior
+    assert gate_verdict(reg, unmatched, allow_missing=True) == []
+
+
+def test_regression_and_vanished_row_both_reported():
+    base = _rows(a=100.0, gone=10.0)
+    cur = _rows(a=200.0)
+    reg, _, _, unmatched = compare(base, cur, 0.15)
+    reasons = gate_verdict(reg, unmatched, allow_missing=False)
+    assert len(reasons) == 2
+    # --allow-missing must NOT mask a genuine regression
+    assert len(gate_verdict(reg, unmatched, allow_missing=True)) == 1
 
 
 def test_exact_threshold_boundary_passes():

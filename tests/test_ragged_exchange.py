@@ -1,0 +1,273 @@
+"""Ragged (compact) cross-pod exchange ≡ padded differential.
+
+The stage-2 pod exchange can ship compact per-destination segments
+(``crosspod_exchange="ragged"``: pod-local reports never enter the
+exchange, remote reports are pre-merged flow-major at the source) instead
+of worst-case padded buckets. At auto capacity the compaction cannot
+drop, and because the home translator canonically re-orders arrivals the
+packing is invisible downstream — so the ragged run must be BITWISE
+identical to the padded run: merged end state, every period's enriched
+output, and every shared metric, across mesh factorizations, both
+drivers, both wire formats, both routing schemes (hash + rendezvous),
+and with the lossy-transport injector armed (where the ragged payload
+stream differs row-for-row, the fault LEDGER IDENTITIES must still hold
+exactly).
+
+The ragged path additionally emits exchange-volume accounting —
+``crosspod_sent`` (rows that actually crossed pods) and
+``crosspod_messages`` (distinct (destination, flow) runs = batched
+messages a wire transport would send) — which must stay absent on the
+padded path so the committed golden fingerprints never see them.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import pod_mesh_or_skip
+from repro.configs.dfa import REDUCED
+from repro.core.pipeline import DFASystem
+from repro.data import scenarios as SC
+from repro.data.faults import FaultSpec
+
+TOTAL_PORTS = 4
+EVENTS_PER_PORT = 48
+T = 3
+G = 512
+REPORTER_SLOTS = 64
+PORT_CAPACITY = 16
+
+GRID = ((1, 2), (2, 2), (4, 1))
+RAGGED_KEYS = ("crosspod_sent", "crosspod_messages")
+MIXED = FaultSpec(seed=7, drop_rate=0.15, dup_rate=0.1, flip_rate=0.1,
+                  replay_rate=0.05, reorder_rate=0.3, reorder_window=4)
+
+_systems = {}
+_traces = {}
+
+
+def _cfg(pods, shards, exchange, wire="v1", capacity=0, spec=None,
+         flow_home="hash"):
+    ndev = pods * shards
+    return dataclasses.replace(
+        REDUCED,
+        flow_home=flow_home,
+        wire_format=wire,
+        pods=pods,
+        ports_per_pod=TOTAL_PORTS // pods,
+        reporter_slots=REPORTER_SLOTS,
+        flows_per_shard=G // ndev,
+        port_report_capacity=PORT_CAPACITY,
+        kernel_backend="ref",
+        crosspod_exchange=exchange,
+        crosspod_capacity=capacity,
+        fault_spec=spec)
+
+
+def _system(pods, shards, exchange, wire="v1", capacity=0, spec=None,
+            flow_home="hash"):
+    key = (pods, shards, exchange, wire, capacity, spec, flow_home)
+    if key not in _systems:
+        mesh = pod_mesh_or_skip(pods, shards)
+        sysm = DFASystem(
+            _cfg(pods, shards, exchange, wire, capacity, spec,
+                 flow_home), mesh)
+        _systems[key] = (sysm, jax.jit(sysm.run_periods),
+                         jax.jit(sysm.run_periods_overlapped))
+    return _systems[key]
+
+
+def _trace(name):
+    if name not in _traces:
+        ev, nows = SC.build(name, TOTAL_PORTS, EVENTS_PER_PORT, T)
+        _traces[name] = ({k: jnp.asarray(v) for k, v in ev.items()},
+                         jnp.asarray(nows))
+    return _traces[name]
+
+
+def _merged_state(system, state):
+    n = system.n_shards
+    out = {f"rep.{k}": np.asarray(a)
+           for k, a in state.reporter._asdict().items()}
+    out["tr.hist_counter"] = np.asarray(state.translator.hist_counter)
+    c = state.collector
+    out["coll.memory"] = np.asarray(c.memory)
+    out["coll.entry_valid"] = np.asarray(c.entry_valid)
+    out["coll.last_seq"] = np.asarray(c.last_seq).reshape(n, -1).max(0)
+    for k in ("bad_checksum", "seq_anomalies", "received",
+              "lost_reports"):
+        out[f"coll.{k}"] = np.asarray(getattr(c, k)).astype(
+            np.uint64).sum()
+    return out
+
+
+def _canon_periods(enr, fid, em):
+    enr, fid, em = np.asarray(enr), np.asarray(fid), np.asarray(em)
+    per = []
+    for t in range(enr.shape[0]):
+        m = em[t]
+        order = np.argsort(fid[t][m], kind="stable")
+        per.append({"fid": fid[t][m][order], "enr": enr[t][m][order]})
+    return per
+
+
+def _run(pods, shards, exchange, scenario, overlapped=False, wire="v1",
+         capacity=0, spec=None, flow_home="hash"):
+    sysm, seq, ovl = _system(pods, shards, exchange, wire, capacity,
+                             spec, flow_home)
+    events, nows = _trace(scenario)
+    with sysm.mesh:
+        out = (ovl if overlapped else seq)(sysm.init_state(), events,
+                                           nows)
+    return (sysm, _merged_state(sysm, out.state),
+            _canon_periods(out.enriched, out.flow_ids, out.mask),
+            {k: np.asarray(v) for k, v in out.metrics.items()})
+
+
+def _assert_bitwise_equiv(padded, ragged, ctx):
+    """padded run == ragged run, except the ragged-only volume keys."""
+    _, pst, pper, pmet = padded
+    _, rst, rper, rmet = ragged
+    for k in pst:
+        np.testing.assert_array_equal(pst[k], rst[k],
+                                      err_msg=f"{ctx}: state {k}")
+    for t, (p, r) in enumerate(zip(pper, rper)):
+        for k in p:
+            np.testing.assert_array_equal(
+                p[k], r[k], err_msg=f"{ctx}: period {t} {k}")
+    assert sorted(rmet) == sorted(list(pmet) + list(RAGGED_KEYS)), ctx
+    for k in pmet:
+        np.testing.assert_array_equal(pmet[k], rmet[k],
+                                      err_msg=f"{ctx}: metric {k}")
+
+
+@pytest.mark.parametrize("scenario", ["cross_pod_mix", "elephants_mice"])
+def test_ragged_bitwise_equals_padded(scenario):
+    """THE tentpole differential: every mesh in the grid, both drivers —
+    the compact exchange changes not one bit of state, output or shared
+    metric, while its volume accounting shows only the true cross-pod
+    fraction crossing."""
+    for pods, shards in GRID:
+        for overlapped in (False, True):
+            ctx = f"{scenario} ({pods},{shards}) ovl={overlapped}"
+            padded = _run(pods, shards, "padded", scenario, overlapped)
+            ragged = _run(pods, shards, "ragged", scenario, overlapped)
+            _assert_bitwise_equiv(padded, ragged, ctx)
+            met = ragged[3]
+            recv = int(met["reports_recv"].sum())
+            sent_x = int(met["crosspod_sent"].sum())
+            assert recv > 0, f"{ctx}: vacuous trace"
+            if pods == 1:
+                assert sent_x == 0, \
+                    f"{ctx}: single-pod mesh claims cross-pod traffic"
+            else:
+                # compaction is real: some but NOT all delivered reports
+                # crossed pods (cross-pod fraction strictly < 1 because
+                # every scenario keeps some pod-local flows)
+                assert 0 < sent_x < recv, ctx
+                assert 0 < int(met["crosspod_messages"].sum()) <= sent_x
+
+
+def test_ragged_equals_padded_v2_wire():
+    """Same contract under the widened u16 wire schema (the compact
+    packing and pre-merge sort key come off the schema registry, not
+    hard-coded V1 shifts)."""
+    padded = _run(2, 2, "padded", "cross_pod_mix", wire="v2")
+    ragged = _run(2, 2, "ragged", "cross_pod_mix", wire="v2")
+    _assert_bitwise_equiv(padded, ragged, "v2 (2,2)")
+    assert int(ragged[3]["crosspod_sent"].sum()) > 0
+
+
+def test_ragged_equals_padded_rendezvous():
+    """Same contract under HRW (elastic) homing — the ragged path
+    recomputes home pods through node_position, not the range scheme."""
+    padded = _run(2, 2, "padded", "cross_pod_mix",
+                  flow_home="rendezvous")
+    ragged = _run(2, 2, "ragged", "cross_pod_mix",
+                  flow_home="rendezvous")
+    _assert_bitwise_equiv(padded, ragged, "rendezvous (2,2)")
+    assert int(ragged[3]["crosspod_sent"].sum()) > 0
+
+
+def test_fault_ledger_identities_hold_on_compact_path():
+    """With the injector armed the ragged payload stream is NOT
+    row-for-row comparable to the padded one (victim selection keys on
+    buffer positions), but every defense layer must still account for
+    every injected fault exactly — the identities are packing-invariant.
+    """
+    _, _, _, met = _run(2, 2, "ragged", "cross_pod_mix", spec=MIXED)
+    for k in ("injected_drops", "injected_dups", "injected_flips",
+              "injected_replays", "injected_reorders"):
+        assert int(met[k].sum()) > 0, f"{k} never fired — vacuous"
+    np.testing.assert_array_equal(met["bad_checksum"],
+                                  met["injected_flips"])
+    np.testing.assert_array_equal(
+        met["seq_anomalies"],
+        met["injected_dups"] + met["injected_replays"])
+    np.testing.assert_array_equal(
+        met["lost_reports"],
+        met["injected_drops"] + met["injected_flips"])
+    assert int(met["crosspod_sent"].sum()) > 0
+
+
+def test_tiny_capacity_overflow_is_counted():
+    """An under-sized compact segment drops the excess — DTA's lossy
+    trade on the pod link — and the books must still balance exactly:
+    sent == delivered + capacity drops + misroutes, per period."""
+    sysm, _, _, met = _run(2, 2, "ragged", "cross_pod_mix", capacity=1)
+    assert sysm.crosspod_capacity == 1
+    assert int(met["bucket_drops"].sum()) > 0, \
+        "capacity=1 never overflowed on cross_pod_mix — vacuous"
+    np.testing.assert_array_equal(
+        met["reports_sent"],
+        met["reports_recv"] + met["bucket_drops"] + met["misroutes"])
+    # per period, at most ndev * pods * capacity rows can cross
+    assert (met["crosspod_sent"]
+            <= sysm.n_shards * sysm.mesh_pods * 1).all()
+
+
+def test_padded_default_emits_no_crosspod_keys():
+    """Golden safety: the default padded path must not grow metric keys
+    (the pinned fingerprints compare key sets exactly), and the new
+    misroutes counter must be zero on a clean trace."""
+    _, _, _, met = _run(2, 2, "padded", "cross_pod_mix")
+    assert not any(k in met for k in RAGGED_KEYS)
+    assert int(met["misroutes"].sum()) == 0
+    assert int(met["bucket_drops"].sum()) == 0
+
+
+def test_describe_surfaces_exchange_strategy():
+    sysm, _, _, _ = _run(2, 2, "ragged", "cross_pod_mix")
+    d = sysm.describe()
+    assert d["crosspod_exchange"] == "ragged"
+    assert d["stage2_capacity"] == sysm.shards_per_pod * max(
+        1, sysm.ports_per_device * sysm.port_capacity)
+    assert d["crosspod_capacity"] == d["stage2_capacity"]  # auto size
+    psys, _, _, _ = _run(2, 2, "padded", "cross_pod_mix")
+    pd = psys.describe()
+    assert pd["crosspod_exchange"] == "padded"
+    assert pd["crosspod_capacity"] == 0
+
+
+def test_misconfigurations_fail_loud():
+    mesh = pod_mesh_or_skip(1, 1)
+    with pytest.raises(ValueError, match="ragged"):
+        DFASystem(dataclasses.replace(
+            REDUCED, crosspod_exchange="ragged"), mesh)
+    with pytest.raises(ValueError, match="crosspod_capacity"):
+        DFASystem(dataclasses.replace(
+            REDUCED, crosspod_capacity=4), mesh)
+    with pytest.raises(ValueError, match="padded.*ragged|ragged|unknown"):
+        DFASystem(dataclasses.replace(
+            REDUCED, crosspod_exchange="compact"), mesh)
+    m22 = pod_mesh_or_skip(2, 2)
+    big = _cfg(2, 2, "ragged")
+    worst = DFASystem(big, m22).stage2_capacity
+    with pytest.raises(ValueError, match="exceeds the worst-case"):
+        DFASystem(dataclasses.replace(
+            big, crosspod_capacity=worst + 1), m22)
+    with pytest.raises(ValueError, match="only applies"):
+        DFASystem(dataclasses.replace(
+            _cfg(2, 2, "padded"), crosspod_capacity=2), m22)

@@ -136,8 +136,51 @@ def test_latency_summary_known_samples():
     s4 = latency_summary([10.0, 20.0, 30.0, 40.0])
     assert s4["p50"] == pytest.approx(25.0)
     assert s4["p99"] == pytest.approx(39.7)
+    assert s["count"] == 100 and s4["count"] == 4
+
+
+def test_latency_summary_empty_is_explicit():
+    """Zero samples -> an explicit empty summary: count pins it as "no
+    data" and the percentiles are NaN, never a fake 0.0 latency."""
     empty = latency_summary([])
-    assert all(np.isnan(v) for v in empty.values())
+    assert empty["count"] == 0
+    assert all(np.isnan(empty[k]) for k in ("p50", "p99", "p999"))
+    assert set(empty) == {"p50", "p99", "p999", "count"}
+
+
+def test_latency_summary_single_sample():
+    """One period: every percentile of a single sample IS that sample —
+    count=1 is what tells the consumer not to read a tail from it."""
+    one = latency_summary([42.0])
+    assert one["count"] == 1
+    assert one["p50"] == one["p99"] == one["p999"] == 42.0
+
+
+def test_zero_period_run_reports_explicit_empty():
+    """A 0-period run must produce the explicit empty summary and a 0.0
+    sustained rate — not a ZeroDivisionError or NaN accounting."""
+    mesh = make_mesh((1, 1), ("data", "model"))
+    system = DFASystem(get_dfa_config(reduced=True), mesh)
+    events, nows = _trace(system.n_shards, E=system.cfg.event_block)
+    report = serve_trace(system, events, nows, periods=0, drain=False)
+    assert report.periods == 0 and report.drained_periods == 0
+    assert report.offered == report.processed == report.dropped == 0
+    assert report.balanced
+    assert report.latency["count"] == 0
+    assert all(np.isnan(report.latency[k])
+               for k in ("p50", "p99", "p999"))
+    assert report.sustained_eps == 0.0
+
+
+def test_one_period_run_collapses_percentiles():
+    mesh = make_mesh((1, 1), ("data", "model"))
+    system = DFASystem(get_dfa_config(reduced=True), mesh)
+    events, nows = _trace(system.n_shards, E=system.cfg.event_block)
+    report = serve_trace(system, events, nows, periods=1)
+    assert report.periods == 1
+    lat = report.latency
+    assert lat["count"] == 1
+    assert lat["p50"] == lat["p99"] == lat["p999"] > 0.0
 
 
 # -- the serving loop ---------------------------------------------------------
@@ -154,7 +197,8 @@ def test_serving_loop_smoke_line_rate():
         system.n_shards * system.cfg.event_block)
     assert report.dropped == 0 and report.balanced
     assert len(report.latency_us) == 5
-    assert set(report.latency) == {"p50", "p99", "p999"}
+    assert set(report.latency) == {"p50", "p99", "p999", "count"}
+    assert report.latency["count"] == 5
     assert isinstance(report.last, StepOutputs)
     assert report.last.enriched.shape[1] == system.cfg.derived_dim
     assert int(np.asarray(report.last.metrics["reports_recv"])) > 0
@@ -253,6 +297,8 @@ DESCRIBE_KEYS = sorted([
     "serve_queue_events", "drop_policy", "home_nodes",
     "snapshot_every_periods", "wire_format",
     "fault_injection", "rehome_collision_policy",
+    "crosspod_exchange", "crosspod_capacity", "stage2_capacity",
+    "tuning_registry",
 ])
 
 
@@ -322,7 +368,8 @@ def test_env_registry_covers_all_repro_vars():
     names = set(ENV.registered())
     assert names == {"REPRO_KERNEL_BACKEND", "REPRO_GATHER_VARIANT",
                      "REPRO_INGEST_VARIANT", "REPRO_BENCH_TINY",
-                     "REPRO_REGEN_GOLDENS", "REPRO_WIRE_FORMAT"}
+                     "REPRO_REGEN_GOLDENS", "REPRO_WIRE_FORMAT",
+                     "REPRO_TUNING_REGISTRY"}
     table = ENV.env_table()
     for n in names:
         assert n in table

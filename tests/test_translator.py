@@ -46,8 +46,9 @@ def test_same_flow_in_batch_gets_consecutive_history():
 
 
 def _check_routing_partition(flow_ids, n_shards):
-    """Every masked report lands exactly once, in its owner's bucket (or is
-    dropped by capacity, counted)."""
+    """Every masked IN-RANGE report lands exactly once, in its owner's
+    bucket (or is dropped by capacity, counted); an out-of-range flow id
+    is a misroute — never placed anywhere, tallied exactly."""
     fps = 128
     R = len(flow_ids)
     reports = np.zeros((R, P.REPORT_WORDS), np.uint32)
@@ -55,24 +56,28 @@ def _check_routing_partition(flow_ids, n_shards):
     reports[:, 2] = np.arange(R) + 1              # payload marker
     mask = np.ones(R, bool)
     cap = 8
-    buckets, bmask = T.route_reports(jnp.asarray(reports),
-                                     jnp.asarray(mask), n_shards, fps, cap)
+    buckets, bmask, mis = T.route_reports(
+        jnp.asarray(reports), jnp.asarray(mask), n_shards, fps, cap)
     buckets, bmask = np.asarray(buckets), np.asarray(bmask)
     placed = buckets[bmask]
-    # each placed report is in the right shard
+    # each placed report is in the right shard — its OWN shard, not a
+    # clipped one
     for s in range(n_shards):
         for r in buckets[s][bmask[s]]:
-            assert min(int(r[0]) // fps, n_shards - 1) == s
-    # no duplicates, no inventions
+            assert int(r[0]) // fps == s
+    # no duplicates, no inventions, and no out-of-range id ever placed
     markers = sorted(placed[:, 2].tolist())
+    oor = {i + 1 for i, f in enumerate(flow_ids)
+           if f // fps >= n_shards}
     assert len(set(markers)) == len(markers)
-    assert set(markers) <= set(range(1, R + 1))
-    # conservation: placed + dropped == total
-    assert bmask.sum() <= R
+    assert set(markers) <= set(range(1, R + 1)) - oor
+    # conservation: placed + capacity drops + misroutes == total
+    assert int(mis) == len(oor)
     per_dest = {}
     for f in flow_ids:
-        d = min(f // fps, n_shards - 1)
-        per_dest[d] = per_dest.get(d, 0) + 1
+        d = f // fps
+        if d < n_shards:
+            per_dest[d] = per_dest.get(d, 0) + 1
     expected_placed = sum(min(v, cap) for v in per_dest.values())
     assert bmask.sum() == expected_placed
 
@@ -91,6 +96,44 @@ if HAVE_HYPOTHESIS:
            st.integers(2, 8))
     def test_routing_is_a_partition_hypothesis(flow_ids, n_shards):
         _check_routing_partition(flow_ids, n_shards)
+
+
+def test_out_of_range_flow_id_never_lands_in_a_ring():
+    """Regression: a corrupt/hostile flow id beyond the sharded keyspace
+    used to be CLIPPED onto the last real shard (silently misrouting it
+    into someone else's ring); now it is dropped at the routing stage
+    and counted in the misroutes tally."""
+    fps, n_shards, cap = 128, 4, 8
+    reports = np.zeros((3, P.REPORT_WORDS), np.uint32)
+    reports[0, 0] = 5                        # in range -> shard 0
+    reports[1, 0] = n_shards * fps + 7       # one shard past the keyspace
+    reports[2, 0] = 0xFFFFFFFF               # hostile id (negative in i32)
+    reports[:, 2] = [1, 2, 3]                # payload markers
+    mask = np.ones(3, bool)
+    buckets, bmask, mis = T.route_reports(
+        jnp.asarray(reports), jnp.asarray(mask), n_shards, fps, cap)
+    buckets, bmask = np.asarray(buckets), np.asarray(bmask)
+    assert int(mis) == 2
+    placed = buckets[bmask]
+    assert placed.shape[0] == 1 and placed[0, 2] == 1
+    # the last shard in particular holds nothing — that is where the old
+    # clip used to land both corrupt rows
+    assert not bmask[n_shards - 1].any()
+    # two-stage path: the shard coordinate of a corrupt id is still in
+    # range (floor mod), so it survives stage 1 — the POD coordinate is
+    # what carries the out-of-range signal into stage 2's misroute count
+    pods, S = 2, 2
+    hpod, hshard, _ = (np.asarray(x) for x in T.home_coords(
+        jnp.asarray(reports[:, 0]), fps, S, pods * S))
+    assert 0 <= hshard[1] < S and 0 <= hshard[2] < S
+    assert not (0 <= hpod[1] < pods) and not (0 <= hpod[2] < pods)
+    corrupt = reports[1:]
+    empty = np.zeros((2, P.REPORT_WORDS), np.uint32)
+    out, om = _emulate_two_stage(
+        [corrupt] + [empty.copy()] * (pods * S - 1),
+        [np.ones(2, bool)] + [np.zeros(2, bool)] * (pods * S - 1),
+        pods, S, fps)
+    assert not om.any(), "corrupt flow id was delivered to a ring"
 
 
 def test_translate_produces_valid_payloads():
@@ -140,8 +183,8 @@ def _emulate_two_stage(reports_by_dev, masks_by_dev, pods, S, fps):
     for d in range(ndev):
         rep, msk = reports_by_dev[d], masks_by_dev[d]
         _, hshard, _ = T.home_coords(jnp.asarray(rep[:, 0]), fps, S, ndev)
-        bb, bm = T.route_by_dest(jnp.asarray(rep), jnp.asarray(msk),
-                                 hshard, S, cap1)
+        bb, bm, _ = T.route_by_dest(jnp.asarray(rep), jnp.asarray(msk),
+                                    hshard, S, cap1)
         b1[d], m1[d] = np.asarray(bb), np.asarray(bm)
     b1 = b1.reshape(pods, S, S, cap1, W).transpose(0, 2, 1, 3, 4)
     m1 = m1.reshape(pods, S, S, cap1).transpose(0, 2, 1, 3)
@@ -153,8 +196,8 @@ def _emulate_two_stage(reports_by_dev, masks_by_dev, pods, S, fps):
     m2 = np.zeros((ndev, pods, cap2), bool)
     for d in range(ndev):
         hpod, _, _ = T.home_coords(jnp.asarray(r1[d][:, 0]), fps, S, ndev)
-        bb, bm = T.route_by_dest(jnp.asarray(r1[d]), jnp.asarray(m1[d]),
-                                 hpod, pods, cap2)
+        bb, bm, _ = T.route_by_dest(jnp.asarray(r1[d]), jnp.asarray(m1[d]),
+                                    hpod, pods, cap2)
         b2[d], m2[d] = np.asarray(bb), np.asarray(bm)
     b2 = b2.reshape(pods, S, pods, cap2, W).transpose(2, 1, 0, 3, 4)
     m2 = m2.reshape(pods, S, pods, cap2).transpose(2, 1, 0, 3)

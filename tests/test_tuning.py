@@ -1,0 +1,192 @@
+"""Tuned-config registry: persistence round-trip, fastest-wins record
+semantics, the dispatch consult tier (registry sits between explicit
+config and the VMEM heuristic), fail-loud behavior on malformed files,
+and the mtime-checked cache refresh."""
+import dataclasses
+import json
+
+import pytest
+
+from repro.configs import get_dfa_config
+from repro.kernels import dispatch
+from repro.kernels import tuning
+
+ENV_VAR = "REPRO_TUNING_REGISTRY"
+
+
+@pytest.fixture
+def cfg(monkeypatch):
+    monkeypatch.delenv(ENV_VAR, raising=False)
+    monkeypatch.delenv(dispatch.GATHER_ENV_VAR, raising=False)
+    monkeypatch.delenv(dispatch.INGEST_ENV_VAR, raising=False)
+    monkeypatch.delenv(dispatch.ENV_VAR, raising=False)
+    return get_dfa_config(reduced=True)
+
+
+def _write(path, reg):
+    reg.save(str(path))
+    return str(path)
+
+
+# -- registry object ---------------------------------------------------------
+
+def test_roundtrip(tmp_path):
+    reg = tuning.TuningRegistry()
+    assert reg.record("ingest_update.variant", "interpret", [4096], "hbm",
+                      812.4, source="ingest_scaling")
+    assert reg.record("ingest_update.event_tile", "interpret", (4096,),
+                      128, 700.0)
+    assert reg.record("gather_enrich.variant", "pallas",
+                      (131072, 4, 512, 24), "full", 55.0)
+    p = _write(tmp_path / "t.json", reg)
+    back = tuning.TuningRegistry.load(p)
+    assert back.lookup("ingest_update.variant", "interpret",
+                       (4096,)) == "hbm"
+    assert back.lookup("ingest_update.event_tile", "interpret",
+                       [4096]) == 128
+    assert back.lookup("gather_enrich.variant", "pallas",
+                       (131072, 4, 512, 24)) == "full"
+    # exact-match only: other shape / other backend -> None
+    assert back.lookup("ingest_update.variant", "interpret",
+                       (8192,)) is None
+    assert back.lookup("ingest_update.variant", "pallas",
+                       (4096,)) is None
+    # file is valid JSON with the schema marker
+    doc = json.loads(open(p).read())
+    assert doc["schema"] == tuning.SCHEMA
+    assert len(doc["entries"]) == 3
+
+
+def test_record_fastest_wins():
+    reg = tuning.TuningRegistry()
+    assert reg.record("ingest_update.event_tile", "ref", (256,), 64, 100.0)
+    # slower measurement for the same key is rejected
+    assert not reg.record("ingest_update.event_tile", "ref", (256,),
+                          256, 150.0)
+    assert reg.lookup("ingest_update.event_tile", "ref", (256,)) == 64
+    # faster one replaces
+    assert reg.record("ingest_update.event_tile", "ref", (256,), 128, 80.0)
+    assert reg.lookup("ingest_update.event_tile", "ref", (256,)) == 128
+
+
+def test_unknown_knob_and_bad_value_fail_loud(tmp_path):
+    reg = tuning.TuningRegistry()
+    with pytest.raises(ValueError, match="unknown tuning knob"):
+        reg.record("gather_enrich.warp_count", "ref", (1,), 4, 1.0)
+    with pytest.raises(ValueError, match="unknown tuning knob"):
+        reg.lookup("nope", "ref", (1,))
+    with pytest.raises(TypeError, match="str or int"):
+        reg.record("ingest_update.variant", "ref", (1,), 1.5, 1.0)
+    # schema mismatch refuses to load
+    p = tmp_path / "bad_schema.json"
+    p.write_text(json.dumps({"schema": "other-v9", "entries": []}))
+    with pytest.raises(ValueError, match="schema"):
+        tuning.TuningRegistry.load(str(p))
+    # a corrupt entry names its index
+    p2 = tmp_path / "bad_entry.json"
+    p2.write_text(json.dumps({
+        "schema": tuning.SCHEMA,
+        "entries": [{"knob": "ingest_update.variant", "backend": "ref",
+                     "key": [1], "value": "hbm", "us_per_call": 1.0},
+                    {"knob": "ingest_update.variant", "backend": "ref",
+                     "key": [2]}]}))
+    with pytest.raises(ValueError, match="bad tuning entry #1"):
+        tuning.TuningRegistry.load(str(p2))
+
+
+def test_cache_refreshes_on_mtime_change(tmp_path):
+    import os
+    reg = tuning.TuningRegistry()
+    reg.record("ingest_update.event_tile", "ref", (64,), 32, 5.0)
+    p = _write(tmp_path / "c.json", reg)
+    assert tuning.load_cached(p).lookup(
+        "ingest_update.event_tile", "ref", (64,)) == 32
+    reg.record("ingest_update.event_tile", "ref", (64,), 16, 1.0)
+    reg.save(p)
+    os.utime(p, (1, 1))            # force a distinct mtime either way
+    assert tuning.load_cached(p).lookup(
+        "ingest_update.event_tile", "ref", (64,)) == 16
+
+
+# -- dispatch consult tier ---------------------------------------------------
+
+def test_resolve_path_precedence(cfg, monkeypatch, tmp_path):
+    assert tuning.resolve_path(cfg) is None             # off by default
+    c = dataclasses.replace(cfg, tuning_registry="/cfg/path.json")
+    assert tuning.resolve_path(c) == "/cfg/path.json"
+    monkeypatch.setenv(ENV_VAR, "/env/path.json")
+    assert tuning.resolve_path(c) == "/env/path.json"   # env beats cfg
+    monkeypatch.setenv(ENV_VAR, "")                     # empty = unset
+    assert tuning.resolve_path(c) == "/cfg/path.json"
+
+
+def test_tiles_consult_registry(cfg, tmp_path):
+    # unarmed: static config defaults
+    assert dispatch.resolve_event_tile(cfg, 4096) == cfg.event_tile
+    assert dispatch.resolve_report_tile(cfg, 1024) == cfg.flow_tile
+    reg = tuning.TuningRegistry()
+    reg.record("ingest_update.event_tile", "ref", (4096,), 128, 1.0)
+    reg.record("gather_enrich.report_tile", "ref", (1024,), 64, 1.0)
+    p = _write(tmp_path / "t.json", reg)
+    c = dataclasses.replace(cfg, tuning_registry=p)
+    # cfg resolves backend "ref" on CPU -> entries match
+    assert dispatch.resolve_event_tile(c, 4096) == 128
+    assert dispatch.resolve_report_tile(c, 1024) == 64
+    # no measurement for this shape -> fall back to the static default
+    assert dispatch.resolve_event_tile(c, 8192) == cfg.event_tile
+    # a tuned tile measured under a different backend must not apply
+    ci = dataclasses.replace(c, kernel_backend="interpret")
+    assert dispatch.resolve_event_tile(ci, 4096) == cfg.event_tile
+
+
+def test_variant_consult_sits_inside_heuristic_tier(cfg, monkeypatch,
+                                                    tmp_path):
+    F, H, RT, D = 131072, cfg.history, 512, cfg.derived_dim
+    base = dispatch.resolve_gather_variant(None, cfg, F, H, RT, D)
+    flipped = "hbm" if base == "full" else "full"
+    reg = tuning.TuningRegistry()
+    reg.record("gather_enrich.variant", "ref", (F, H, RT, D), flipped, 1.0)
+    reg.record("ingest_update.variant", "ref", (1 << 20,), "block", 1.0)
+    p = _write(tmp_path / "t.json", reg)
+    c = dataclasses.replace(cfg, tuning_registry=p)
+    # the registry overrides the VMEM heuristic...
+    assert dispatch.resolve_gather_variant(None, c, F, H, RT, D) == flipped
+    assert dispatch.resolve_ingest_variant(None, c, 1 << 20, 256) == "block"
+    # ...but loses to an explicit cfg attr, env var, and argument
+    c_attr = dataclasses.replace(c, gather_variant=base)
+    assert dispatch.resolve_gather_variant(None, c_attr, F, H, RT, D) == base
+    monkeypatch.setenv(dispatch.GATHER_ENV_VAR, base)
+    assert dispatch.resolve_gather_variant(None, c, F, H, RT, D) == base
+    monkeypatch.delenv(dispatch.GATHER_ENV_VAR)
+    assert dispatch.resolve_gather_variant(base, c, F, H, RT, D) == base
+    # no measurement for another shape -> heuristic untouched
+    assert dispatch.resolve_gather_variant(None, c, F // 2, H, RT, D) == \
+        dispatch.resolve_gather_variant(None, cfg, F // 2, H, RT, D)
+
+
+def test_armed_but_broken_registry_fails_loud(cfg, tmp_path):
+    p = tmp_path / "junk.json"
+    p.write_text("{not json")
+    c = dataclasses.replace(cfg, tuning_registry=str(p))
+    with pytest.raises(json.JSONDecodeError):
+        dispatch.resolve_event_tile(c, 4096)
+    missing = dataclasses.replace(
+        cfg, tuning_registry=str(tmp_path / "absent.json"))
+    with pytest.raises(FileNotFoundError):
+        dispatch.resolve_event_tile(missing, 4096)
+    # a tuned tile < 1 is a corrupt file, not a silent fallback
+    reg = tuning.TuningRegistry()
+    reg.record("ingest_update.event_tile", "ref", (4096,), 0, 1.0)
+    bad = _write(tmp_path / "zero.json", reg)
+    cz = dataclasses.replace(cfg, tuning_registry=bad)
+    with pytest.raises(ValueError, match=">= 1"):
+        dispatch.resolve_event_tile(cz, 4096)
+    # a tuned variant outside the registered choices is rejected
+    doc = {"schema": tuning.SCHEMA,
+           "entries": [{"knob": "ingest_update.variant", "backend": "ref",
+                        "key": [4096], "value": "warp", "us_per_call": 1.0}]}
+    pv = tmp_path / "variant.json"
+    pv.write_text(json.dumps(doc))
+    cv = dataclasses.replace(cfg, tuning_registry=str(pv))
+    with pytest.raises(ValueError):
+        dispatch.resolve_ingest_variant(None, cv, 4096, 256)
